@@ -1,0 +1,58 @@
+"""Screening-kernel microbench (ours; supports §Roofline for the lasso cells).
+
+On this CPU container the Pallas kernels execute in interpret mode, so their
+wall-clock is meaningless; what we measure here is the *jitted jnp reference
+path* (the production fallback and the semantics oracle), and we derive the
+achieved HBM-equivalent bandwidth of the fused screening pass:
+
+    bytes_touched = X bytes (one pass) + small vectors
+    GB/s          = bytes_touched / time
+
+plus the kernel-vs-ref allclose check across the sweep (the TPU-perf claims
+for the kernel itself live in the §Roofline analysis: arithmetic intensity
+2 FLOP/byte ⇒ HBM-bound; one X pass vs two for unfused).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def run(full: bool = False):
+    shapes = [(256, 4096), (512, 8192)] if not full else [
+        (1024, 65536), (4096, 131072)]
+    rng = np.random.default_rng(0)
+    for (n, p) in shapes:
+        X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+        fused = jax.jit(lambda X, c: ref.edpp_screen_ref(X, c, 0.37))
+        fused(X, c)[0].block_until_ready()
+        t0 = time.perf_counter()
+        iters = 10
+        for _ in range(iters):
+            s, ss = fused(X, c)
+        s.block_until_ready()
+        dt = (time.perf_counter() - t0) / iters
+        touched = X.size * 4 + n * 4 + 2 * p * 4
+        emit(f"kernels/edpp_screen_ref/{n}x{p}", dt * 1e6,
+             f"GBps={touched / dt / 1e9:.2f}")
+
+        # kernel correctness on the same shape (interpret mode)
+        mask, s_k, ss_k = ops.edpp_screen(X, c, 0.37, interpret=True)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s),
+                                   rtol=2e-4, atol=2e-4)
+        emit(f"kernels/edpp_screen_pallas_check/{n}x{p}", 0.0, "allclose=ok")
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

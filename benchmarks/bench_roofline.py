@@ -1,0 +1,50 @@
+"""Roofline term reader — one CSV row per completed dry-run cell.
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits
+the three roofline terms + dominant bottleneck per (arch, shape, mesh).
+The full analysis with MODEL_FLOPS ratios is assembled into EXPERIMENTS.md
+by tools/make_experiments.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def run(full: bool = False):
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no-dryrun-results-yet")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        name = f"roofline/{rec['arch']}/{rec.get('shape')}/{rec.get('mesh')}"
+        if rec.get("status") == "skipped":
+            emit(name, 0.0, f"skipped:{rec['reason'][:50]}")
+            continue
+        if rec.get("status") != "ok":
+            emit(name, 0.0, f"status={rec.get('status')}")
+            continue
+        rl = rec["roofline"]
+        t_total = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        ratio = rec.get("useful_flops_ratio")
+        emit(name, t_total * 1e6,
+             f"dom={rl['dominant']}"
+             f" t_comp={rl['t_compute_s']:.3e}"
+             f" t_mem={rl['t_memory_s']:.3e}"
+             f" t_coll={rl['t_collective_s']:.3e}"
+             f" useful_ratio={ratio if ratio is None else round(ratio, 3)}"
+             f" peak_gb={rec['memory']['peak_per_device_gb']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

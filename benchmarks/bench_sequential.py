@@ -1,0 +1,71 @@
+"""Paper Fig. 4 + Table 3 — sequential SAFE / strong / EDPP at real-data
+shapes (Breast 44×7129, Leukemia 52×11225, Prostate 132×15154,
+PIE 1024×11553, MNIST 784×50000, SVHN 3072×99288), scaled by default.
+
+The paper's headline: EDPP speedup grows with matrix size (≈10× on the
+small sets → two orders of magnitude on PIE/MNIST/SVHN).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, grid_for, ground_truth, run_rule
+
+DATASETS_QUICK = {
+    "breast-like": (44, 1000),
+    "leukemia-like": (52, 1400),
+    "prostate-like": (66, 1500),
+    "pie-like": (256, 1200),
+    "mnist-like": (196, 1800),
+    "svhn-like": (384, 3000),
+}
+DATASETS_FULL = {
+    "breast-like": (44, 7129),
+    "leukemia-like": (52, 11225),
+    "prostate-like": (132, 15154),
+    "pie-like": (1024, 11553),
+    "mnist-like": (784, 50000),
+    "svhn-like": (3072, 99288),
+}
+
+RULES = ["seq_safe", "strong", "edpp"]
+
+
+def make_dataset(n, p, seed=0):
+    """Sparse ground truth of FIXED size (the paper's real responses are
+    not denser for larger data sets — tying nnz to n caps the rejection
+    ratio for the big-N sets and inverts the size→speedup trend)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    w = np.zeros(p)
+    idx = rng.choice(p, 16, replace=False)
+    w[idx] = rng.standard_normal(idx.size)
+    y = X @ w + 0.05 * rng.standard_normal(n)
+    return X, y
+
+
+def run(full: bool = False, num_lambdas: int = 100):
+    datasets = DATASETS_FULL if full else DATASETS_QUICK
+    rows = []
+    for name, (n, p) in datasets.items():
+        X, y = make_dataset(n, p)
+        grid = grid_for(X, y, num=num_lambdas)
+        betas_ref, t_ref = ground_truth(X, y, grid)
+        emit(f"sequential/{name}/solver", t_ref * 1e6, "speedup=1.00")
+        for rule in RULES:
+            r = run_rule(X, y, grid, rule, betas_ref, t_ref)
+            tol = 5e-4   # solver-precision bound: coefficient error ~ sqrt(gap/mu)
+            # strong is heuristic: borderline features (|x·r|≈λ)
+            # re-enter only to solver precision (paper §1 KKT loop)
+            assert r.max_beta_err < tol, (rule, r.max_beta_err)
+            emit(f"sequential/{name}/{rule}", r.path_time_s * 1e6,
+                 f"speedup={r.speedup:.2f} mean_rej={r.rejection.mean():.4f}"
+                 f" screen_s={r.screen_time_s:.3f}")
+            rows.append((name, rule, r))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

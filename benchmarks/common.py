@@ -1,0 +1,86 @@
+"""Shared benchmark harness for the paper-reproduction experiments.
+
+Protocol (mirrors paper §4): solve the Lasso along 100 λ values equally
+spaced on λ/λ_max ∈ [0.05, 1.0]; measure
+
+  * rejection ratio — per λ: #discarded-by-rule / #actually-zero (ground
+    truth = unscreened float64 solve at tight duality gap);
+  * speedup        — time(unscreened path) / time(rule + reduced path);
+  * screening cost — the rule's own running time (paper Tables 1-3, last
+    columns).
+
+Timing is warm (jit pre-compiled by a first throwaway run; the paper's
+MATLAB numbers have no compile phase either). Default sizes are scaled for
+the CPU container; ``--full`` restores paper sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import PathConfig, lambda_grid, lasso_path, lambda_max
+import jax.numpy as jnp
+
+ZERO_TOL = 1e-8
+
+
+@dataclasses.dataclass
+class RuleResult:
+    rule: str
+    path_time_s: float
+    screen_time_s: float
+    rejection: np.ndarray          # per-λ rejection ratio
+    speedup: float
+    max_beta_err: float
+
+
+def ground_truth(X, y, grid, solver_tol=1e-12) -> "tuple[np.ndarray, float]":
+    """Unscreened float64 path (the paper's 'solver' column) + its time."""
+    cfg = PathConfig(rule="none", solver_tol=solver_tol)
+    lasso_path(X, y, grid, cfg)                    # warm compile
+    t0 = time.perf_counter()
+    res = lasso_path(X, y, grid, cfg)
+    return res.betas, time.perf_counter() - t0
+
+
+def run_rule(X, y, grid, rule, betas_ref, t_ref, solver_tol=1e-12,
+             sequential=True) -> RuleResult:
+    # kkt_tol tight so the heuristic strong rule recovers the exact
+    # solution (its violations are re-added down to fp precision)
+    cfg = PathConfig(rule=rule, solver_tol=solver_tol,
+                     sequential=sequential, kkt_tol=1e-8)
+    lasso_path(X, y, grid, cfg)                    # warm compile
+    t0 = time.perf_counter()
+    res = lasso_path(X, y, grid, cfg)
+    dt = time.perf_counter() - t0
+
+    rej = np.zeros(len(grid))
+    for k in range(len(grid)):
+        zero_truth = np.abs(betas_ref[k]) <= ZERO_TOL
+        n_zero = int(zero_truth.sum())
+        rej[k] = res.stats[k].n_discarded / max(n_zero, 1)
+    err = float(np.abs(res.betas - betas_ref).max())
+    return RuleResult(rule=rule, path_time_s=dt,
+                      screen_time_s=res.total_screen_time,
+                      rejection=rej, speedup=t_ref / max(dt, 1e-12),
+                      max_beta_err=err)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The run.py CSV convention: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def normalize_columns(X, y=None):
+    X = X / (np.linalg.norm(X, axis=0, keepdims=True) + 1e-30)
+    if y is None:
+        return X
+    return X, y / np.linalg.norm(y)
+
+
+def grid_for(X, y, num=100, lo=0.05):
+    lmax = float(lambda_max(jnp.asarray(X), jnp.asarray(y)))
+    return lambda_grid(lmax, num=num, lo_frac=lo)

@@ -1,0 +1,17 @@
+"""repro — Lasso Screening Rules via Dual Polytope Projection (NIPS 2013),
+as a production multi-pod JAX framework.
+
+Subpackages:
+  core       DPP/EDPP screening rules, (group-)Lasso solvers, λ-path driver
+  kernels    Pallas TPU kernels for the screening hot loop
+  models     assigned-architecture zoo (10 archs)
+  data       synthetic generators + token pipeline
+  optim      AdamW + schedules + gradient compression
+  train      train_step / serve_step builders
+  checkpoint sharded checkpoint save/restore (elastic)
+  runtime    fault tolerance / straggler mitigation
+  configs    per-architecture configs
+  launch     mesh / dry-run / drivers
+"""
+
+__version__ = "1.0.0"

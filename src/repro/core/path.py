@@ -1,0 +1,319 @@
+"""Sequential λ-path driver: screen → reduce → solve → (KKT re-check) → next.
+
+This is the regime the paper targets (§1): model selection solves the Lasso
+over a grid λ₁ > λ₂ > … > λ_K, and the sequential rules thread the exact dual
+point θ*(λ_k) from each solution into the screen for λ_{k+1}.
+
+Engineering notes
+-----------------
+* The *reduced* problems have data-dependent sizes, which fights XLA's static
+  shapes. We gather surviving columns into power-of-two **buckets** (zero
+  padded); solvers treat zero columns as fixed points, and jit compiles at
+  most O(log p) program variants across the whole path.
+* The strong rule is heuristic: after each reduced solve we run the paper's
+  KKT violation loop — violated features are added back and the problem
+  re-solved until clean (§1, §4.1.2). Safe rules never trigger it (property-
+  tested), but the check runs for them too in ``paranoid`` mode as telemetry.
+* Each grid step emits a :class:`PathStepStats` and (optionally) checkpoints
+  (λ_k, β*_k) so a long path can resume mid-grid (see repro.checkpoint).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import screening as scr
+from .lasso import cd, fista
+from .group_lasso import group_fista, group_lambda_max
+from . import group_screening as gscr
+
+
+def next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+# Module-level jitted helpers (a fresh `jax.jit(f)` per call would retrace).
+_state_at_lmax = jax.jit(scr.DualState.at_lambda_max)
+_make_dual_state = jax.jit(scr.make_dual_state)
+_safe_mask = jax.jit(scr.safe_mask)
+_dome_mask = jax.jit(scr.dome_mask)
+_kkt_violations = jax.jit(scr.kkt_violations)
+_group_spec_norms = jax.jit(gscr.group_spectral_norms, static_argnames="m")
+_group_state_at_lmax = jax.jit(gscr.group_state_at_lambda_max,
+                               static_argnames="m")
+_make_group_dual_state = jax.jit(gscr.make_group_dual_state,
+                                 static_argnames="m")
+_group_kkt_violations = jax.jit(gscr.group_kkt_violations,
+                                static_argnames="m")
+
+
+@dataclasses.dataclass(frozen=True)
+class PathConfig:
+    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|safe|dome|strong|none
+    solver: str = "fista"         # fista|cd
+    sequential: bool = True       # False = "basic" variants (state pinned at λmax)
+    solver_tol: float = 1e-8
+    max_iter: int = 5000
+    eps: float = scr.EPS_DEFAULT
+    bucket_min: int = 32
+    kkt_tol: float = 1e-4
+    max_kkt_rounds: int = 10
+    paranoid: bool = False        # run KKT loop even for safe rules
+    checkpoint_fn: Callable | None = None  # called with (k, lam, beta) per step
+
+
+@dataclasses.dataclass
+class PathStepStats:
+    lam: float
+    n_discarded: int
+    n_kept: int
+    solver_iters: int
+    gap: float
+    kkt_rounds: int
+    screen_time_s: float
+    solve_time_s: float
+
+
+@dataclasses.dataclass
+class PathResult:
+    lambdas: np.ndarray
+    betas: np.ndarray             # (K, p)
+    stats: list[PathStepStats]
+
+    @property
+    def total_solve_time(self) -> float:
+        return sum(s.solve_time_s for s in self.stats)
+
+    @property
+    def total_screen_time(self) -> float:
+        return sum(s.screen_time_s for s in self.stats)
+
+
+@functools.partial(jax.jit, static_argnames=("bucket",))
+def _gather_cols(X: jax.Array, idx: jax.Array, valid: jax.Array, bucket: int):
+    """Gather `bucket` columns (zero-filled where invalid)."""
+    cols = jnp.take(X, idx, axis=1, mode="clip")
+    return cols * valid[None, :]
+
+
+def _pad_indices(kept: np.ndarray, bucket: int):
+    idx = np.zeros((bucket,), dtype=np.int32)
+    idx[: kept.size] = kept
+    valid = np.zeros((bucket,), dtype=np.float32)
+    valid[: kept.size] = 1.0
+    return jnp.asarray(idx), jnp.asarray(valid)
+
+
+def _solve_reduced(Xr, y, lam, beta0, cfg: PathConfig):
+    if cfg.solver == "cd":
+        return cd(Xr, y, lam, beta0, max_epochs=cfg.max_iter // 10 + 1,
+                  tol=cfg.solver_tol)
+    return fista(Xr, y, lam, beta0, max_iter=cfg.max_iter, tol=cfg.solver_tol)
+
+
+def lambda_grid(lam_max: float, num: int = 100, lo_frac: float = 0.05,
+                hi_frac: float = 1.0) -> np.ndarray:
+    """The paper's grid: `num` values equally spaced in λ/λmax ∈ [lo, hi]."""
+    return np.linspace(hi_frac, lo_frac, num) * lam_max
+
+
+def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
+    """Solve the Lasso along a decreasing λ grid with screening.
+
+    `lambdas` must be sorted decreasing and ≤ λmax for sequential rules to be
+    valid (the theorems require λ ≤ λ₀).
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    p = X.shape[1]
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+    assert np.all(np.diff(lambdas) <= 1e-12), "grid must be decreasing"
+
+    lmax = float(scr.lambda_max(X, y))
+    state0 = _state_at_lmax(X, y)
+
+    betas = np.zeros((len(lambdas), p), dtype=np.float64)
+    stats: list[PathStepStats] = []
+
+    beta_prev = jnp.zeros((p,), dtype=X.dtype)
+    lam_prev = lmax
+    state = state0
+
+    for k, lam in enumerate(lambdas):
+        lam = float(lam)
+        if lam >= lmax:           # trivial region (eq. 8): β* = 0
+            stats.append(PathStepStats(lam, p, 0, 0, 0.0, 0, 0.0, 0.0))
+            if cfg.checkpoint_fn:
+                cfg.checkpoint_fn(k, lam, np.zeros((p,)))
+            continue
+
+        # ---- screen -----------------------------------------------------
+        t0 = time.perf_counter()
+        if cfg.rule == "none":
+            discard = jnp.zeros((p,), dtype=bool)
+        elif cfg.rule == "safe":
+            discard = _safe_mask(X, y, lam, lmax, cfg.eps)
+        elif cfg.rule == "dome":
+            discard = _dome_mask(X, y, lam, lmax, cfg.eps)
+        else:
+            discard = scr.screen(X, y, lam, state, rule=cfg.rule, eps=cfg.eps)
+        discard_np = np.asarray(discard)
+        kept = np.flatnonzero(~discard_np)
+        screen_time = time.perf_counter() - t0
+
+        # ---- reduced solve (+ strong-rule KKT loop) ----------------------
+        t0 = time.perf_counter()
+        kkt_rounds = 0
+        need_kkt = cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid
+        while True:
+            bucket = next_pow2(max(kept.size, cfg.bucket_min))
+            bucket = min(bucket, p)
+            if kept.size == 0:
+                beta_full = jnp.zeros((p,), dtype=X.dtype)
+                res_iters, res_gap = 0, 0.0
+            else:
+                idx, valid = _pad_indices(kept, bucket)
+                Xr = _gather_cols(X, idx, valid, bucket)
+                beta0 = jnp.take(beta_prev, idx) * valid
+                res = _solve_reduced(Xr, y, lam, beta0, cfg)
+                beta_full = (
+                    jnp.zeros((p,), dtype=X.dtype)
+                    .at[np.asarray(idx)[: kept.size]]
+                    .set(res.beta[: kept.size])
+                )
+                res_iters, res_gap = int(res.iters), float(res.gap)
+            if not need_kkt:
+                break
+            viol = np.asarray(
+                _kkt_violations(X, y, beta_full, lam,
+                                jnp.asarray(discard_np), cfg.kkt_tol)
+            )
+            if not viol.any() or kkt_rounds >= cfg.max_kkt_rounds:
+                break
+            kkt_rounds += 1
+            discard_np = discard_np & ~viol
+            kept = np.flatnonzero(~discard_np)
+        solve_time = time.perf_counter() - t0
+
+        betas[k] = np.asarray(beta_full, dtype=np.float64)
+        stats.append(PathStepStats(
+            lam=lam, n_discarded=int(discard_np.sum()), n_kept=int(kept.size),
+            solver_iters=res_iters, gap=res_gap, kkt_rounds=kkt_rounds,
+            screen_time_s=screen_time, solve_time_s=solve_time,
+        ))
+        if cfg.checkpoint_fn:
+            cfg.checkpoint_fn(k, lam, betas[k])
+
+        beta_prev = beta_full
+        lam_prev = lam
+        if cfg.sequential:
+            state = _make_dual_state(X, y, beta_full, lam, lmax)
+        # basic variants keep `state` pinned at λmax (paper §4.1.1)
+    return PathResult(lambdas=lambdas, betas=betas, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Group-Lasso path (paper §3 / §4.2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupPathConfig:
+    rule: str = "edpp"            # edpp|strong|none
+    solver_tol: float = 1e-8
+    max_iter: int = 5000
+    eps: float = gscr.EPS_DEFAULT
+    bucket_min: int = 16          # in groups
+    kkt_tol: float = 1e-4
+    max_kkt_rounds: int = 10
+    sequential: bool = True
+
+
+def group_lasso_path(X, y, m: int, lambdas,
+                     cfg: GroupPathConfig = GroupPathConfig()) -> PathResult:
+    """Group-Lasso along a decreasing grid with group-EDPP screening.
+
+    Groups are contiguous with equal size ``m``; reduction gathers whole
+    groups into power-of-two group buckets.
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    p = X.shape[1]
+    G = p // m
+    assert G * m == p
+    lambdas = np.asarray(lambdas, dtype=np.float64)
+
+    lmax = float(group_lambda_max(X, y, m))
+    spec_norms = _group_spec_norms(X, m)
+    state = _group_state_at_lmax(X, y, m)
+
+    betas = np.zeros((len(lambdas), p), dtype=np.float64)
+    stats: list[PathStepStats] = []
+    beta_prev = jnp.zeros((p,), dtype=X.dtype)
+
+    for k, lam in enumerate(lambdas):
+        lam = float(lam)
+        if lam >= lmax:
+            stats.append(PathStepStats(lam, G, 0, 0, 0.0, 0, 0.0, 0.0))
+            continue
+
+        t0 = time.perf_counter()
+        if cfg.rule == "none":
+            discard = jnp.zeros((G,), dtype=bool)
+        else:
+            discard = gscr.group_screen(X, y, lam, state, m, rule=cfg.rule,
+                                        spec_norms=spec_norms, eps=cfg.eps)
+        discard_np = np.asarray(discard)
+        kept_groups = np.flatnonzero(~discard_np)
+        screen_time = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        kkt_rounds = 0
+        need_kkt = cfg.rule == "strong"
+        while True:
+            gbucket = min(next_pow2(max(kept_groups.size, cfg.bucket_min)), G)
+            if kept_groups.size == 0:
+                beta_full = jnp.zeros((p,), dtype=X.dtype)
+                res_iters, res_gap = 0, 0.0
+            else:
+                col_idx = (kept_groups[:, None] * m
+                           + np.arange(m)[None, :]).reshape(-1)
+                idx, valid = _pad_indices(col_idx, gbucket * m)
+                Xr = _gather_cols(X, idx, valid, gbucket * m)
+                beta0 = jnp.take(beta_prev, idx) * valid
+                res = group_fista(Xr, y, lam, m, beta0,
+                                  max_iter=cfg.max_iter, tol=cfg.solver_tol)
+                beta_full = (
+                    jnp.zeros((p,), dtype=X.dtype)
+                    .at[col_idx]
+                    .set(res.beta[: col_idx.size])
+                )
+                res_iters, res_gap = int(res.iters), float(res.gap)
+            if not need_kkt:
+                break
+            viol = np.asarray(_group_kkt_violations(
+                X, y, beta_full, lam, jnp.asarray(discard_np), m, cfg.kkt_tol))
+            if not viol.any() or kkt_rounds >= cfg.max_kkt_rounds:
+                break
+            kkt_rounds += 1
+            discard_np = discard_np & ~viol
+            kept_groups = np.flatnonzero(~discard_np)
+        solve_time = time.perf_counter() - t0
+
+        betas[k] = np.asarray(beta_full, dtype=np.float64)
+        stats.append(PathStepStats(
+            lam=lam, n_discarded=int(discard_np.sum()),
+            n_kept=int(kept_groups.size), solver_iters=res_iters, gap=res_gap,
+            kkt_rounds=kkt_rounds, screen_time_s=screen_time,
+            solve_time_s=solve_time,
+        ))
+        beta_prev = beta_full
+        if cfg.sequential:
+            state = _make_group_dual_state(X, y, beta_full, lam, lmax, m)
+    return PathResult(lambdas=lambdas, betas=betas, stats=stats)

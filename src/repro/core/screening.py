@@ -1,0 +1,269 @@
+"""Safe (and heuristic-baseline) screening rules for the Lasso.
+
+Implements the paper's full family plus every baseline it compares against:
+
+  * DPP (Theorem 3 / Corollaries 4-5)
+  * Improvement 1 — projections of rays (Theorems 7 & 11)
+  * Improvement 2 — firm nonexpansiveness (Theorems 13 & 14)
+  * EDPP (Theorems 15 & 16, Corollary 17)           ← the paper's main rule
+  * SAFE / ST1 (eq. 15, El Ghaoui et al.)
+  * sequential SAFE (sphere at y/λ with radius from the previous dual point)
+  * strong rule (Tibshirani et al. 2012) — *heuristic*, requires KKT check
+  * DOME (Xiang et al.) — basic rule only, exact sup over the dome region
+
+Every rule is expressed as a *discard mask* computation: ``mask[i] == True``
+means feature ``i`` is guaranteed (safe rules) or presumed (strong rule) to
+satisfy ``β*_i(λ) = 0`` and can be removed from the problem.
+
+All rules share the sequential interface ``rule(X, y, lam_next, state)`` where
+``state`` is a :class:`DualState` built from the solution at the previous
+(larger) λ on the grid; the *basic* variants are the special case
+``state = DualState.at_lambda_max(X, y)`` (paper Remark 3).
+
+Strict inequalities are evaluated with a safety margin ``eps``: we only ever
+*shrink* the discard set, preserving safety under floating point (DESIGN §9.4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+EPS_DEFAULT = 1e-6
+
+
+class DualState(NamedTuple):
+    """Everything the sequential rules need about the previous grid point.
+
+    theta:    θ*(λ₀) = (y − Xβ*(λ₀))/λ₀, the exact dual optimum (KKT eq. 3)
+    lam:      λ₀
+    v1:       ray direction of Theorem 7 / eq. (17)
+    at_lmax:  whether λ₀ == λ_max (selects the v₁ branch of eq. 17)
+    """
+
+    theta: jax.Array
+    lam: jax.Array
+    v1: jax.Array
+    at_lmax: jax.Array
+
+    @staticmethod
+    def at_lambda_max(X: jax.Array, y: jax.Array) -> "DualState":
+        """State at λ₀ = λ_max where β* = 0 and θ* = y/λ_max (eq. 9)."""
+        corr = X.T @ y
+        istar = jnp.argmax(jnp.abs(corr))
+        lmax = jnp.abs(corr)[istar]
+        xstar = X[:, istar]
+        v1 = jnp.sign(corr[istar]) * xstar          # eq. (17), λ₀ = λ_max
+        return DualState(
+            theta=y / lmax,
+            lam=lmax,
+            v1=v1,
+            at_lmax=jnp.asarray(True),
+        )
+
+    @staticmethod
+    def from_solution(
+        X: jax.Array, y: jax.Array, beta: jax.Array, lam, lam_max=None
+    ) -> "DualState":
+        """State from the primal solution β*(λ₀) via KKT eq. (3)."""
+        lam = jnp.asarray(lam, dtype=X.dtype)
+        theta = (y - X @ beta) / lam
+        v1 = y / lam - theta                         # eq. (17), λ₀ < λ_max
+        at_lmax = jnp.asarray(False)
+        if lam_max is not None:
+            at_lmax = jnp.asarray(lam >= lam_max)
+        return DualState(theta=theta, lam=lam, v1=v1, at_lmax=at_lmax)
+
+
+def lambda_max(X: jax.Array, y: jax.Array) -> jax.Array:
+    """λ_max = max_i |x_iᵀy| (eq. 7): smallest λ with β*(λ) = 0."""
+    return jnp.max(jnp.abs(X.T @ y))
+
+
+def make_dual_state(X, y, beta, lam, lam_max_val) -> DualState:
+    """Sequential-state constructor that is branch-correct at λ₀ == λ_max.
+
+    jit-friendly: selects the eq. (17) branch with ``where`` so a single
+    compiled program serves the whole λ-grid.
+    """
+    smax = DualState.at_lambda_max(X, y)
+    sseq = DualState.from_solution(X, y, beta, lam)
+    at_max = lam >= lam_max_val * (1.0 - 1e-12)
+    return DualState(
+        theta=jnp.where(at_max, smax.theta, sseq.theta),
+        lam=jnp.where(at_max, smax.lam, sseq.lam),
+        v1=jnp.where(at_max, smax.v1, sseq.v1),
+        at_lmax=jnp.asarray(at_max),
+    )
+
+
+# ---------------------------------------------------------------------------
+# EDPP geometry (Theorems 7 & 15)
+# ---------------------------------------------------------------------------
+
+def v2_perp(y: jax.Array, lam_next, state: DualState) -> jax.Array:
+    """v₂⊥(λ, λ₀) of eq. (19): component of v₂ orthogonal to the ray v₁."""
+    v1 = state.v1
+    v2 = y / lam_next - state.theta                  # eq. (18)
+    denom = jnp.sum(jnp.square(v1)) + 1e-30
+    return v2 - (jnp.dot(v1, v2) / denom) * v1
+
+
+# ---------------------------------------------------------------------------
+# Discard-mask rules. All return bool[p]: True = discard (β*_i(λ_next) = 0).
+# ---------------------------------------------------------------------------
+
+def dpp_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """DPP (Theorem 3): ball B(θ*(λ₀), |1/λ − 1/λ₀|·‖y‖)."""
+    rho = jnp.abs(1.0 / lam_next - 1.0 / state.lam) * jnp.linalg.norm(y)
+    scores = jnp.abs(X.T @ state.theta)
+    col_norms = jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - rho * col_norms - eps
+
+
+def imp1_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """Improvement 1 (Theorem 11): ball B(θ*(λ₀), ‖v₂⊥‖)."""
+    vp = v2_perp(y, lam_next, state)
+    rho = jnp.linalg.norm(vp)
+    scores = jnp.abs(X.T @ state.theta)
+    col_norms = jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - rho * col_norms - eps
+
+
+def imp2_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """Improvement 2 (Theorem 14): half-radius ball at shifted centre."""
+    d = 0.5 * (1.0 / lam_next - 1.0 / state.lam)
+    centre = state.theta + d * y
+    rho = jnp.abs(d) * jnp.linalg.norm(y)
+    scores = jnp.abs(X.T @ centre)
+    col_norms = jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - rho * col_norms - eps
+
+
+def edpp_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """EDPP (Theorem 16 / Corollary 17) — the paper's main rule.
+
+    Discard i iff  |x_iᵀ(θ*(λ₀) + ½v₂⊥)| < 1 − ½‖v₂⊥‖·‖x_i‖.
+    """
+    vp = v2_perp(y, lam_next, state)
+    centre = state.theta + 0.5 * vp
+    rho = 0.5 * jnp.linalg.norm(vp)
+    scores = jnp.abs(X.T @ centre)
+    col_norms = jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - rho * col_norms - eps
+
+
+def safe_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
+    """Basic SAFE / ST1 (eq. 15): |x_iᵀy| < λ − ‖x_i‖‖y‖(λ_max − λ)/λ_max."""
+    col_norms = jnp.linalg.norm(X, axis=0)
+    rhs = lam_next - col_norms * jnp.linalg.norm(y) * (
+        (lam_max_val - lam_next) / lam_max_val
+    )
+    return jnp.abs(X.T @ y) < rhs - eps
+
+
+def seq_safe_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """Sequential SAFE: sphere centred at y/λ with data-driven radius.
+
+    θ*(λ₀) ∈ F and θ*(λ) = P_F(y/λ) give ‖θ*(λ) − y/λ‖ ≤ ‖θ*(λ₀) − y/λ‖,
+    i.e. θ*(λ) ∈ B(y/λ, ‖y/λ − θ*(λ₀)‖) — the recursive-SAFE construction
+    (El Ghaoui et al.) instantiated with the previous exact dual point.
+    """
+    centre = y / lam_next
+    rho = jnp.linalg.norm(centre - state.theta)
+    scores = jnp.abs(X.T @ centre)
+    col_norms = jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - rho * col_norms - eps
+
+
+def strong_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """Sequential strong rule (Tibshirani et al. 2012). *Heuristic*:
+
+    discard i iff |x_iᵀ(y − Xβ*(λ₀))| < 2λ − λ₀.
+    May discard active features — callers MUST run the KKT violation loop
+    (see path.py). Basic variant: state at λ_max gives |x_iᵀy| < 2λ − λ_max.
+    """
+    resid_corr = jnp.abs(X.T @ (state.theta * state.lam))
+    return resid_corr < 2.0 * lam_next - state.lam - eps
+
+
+def _sup_over_dome(a_scores, a_gdot, a_norms, c, rho, ghat, b):
+    """sup_{θ ∈ B(c,ρ) ∩ {ĝᵀθ ≤ b}} aᵀθ for a batch of directions a.
+
+    a_scores = aᵀc, a_gdot = aᵀĝ, a_norms = ‖a‖ (vectorised over features).
+    Closed form: decompose a along ĝ; the cap constraint clips the sphere
+    maximiser at t_b = (b − ĝᵀc)/ρ.
+    """
+    t_b = jnp.clip((b - jnp.dot(ghat, c)) / (rho + 1e-30), -1.0, 1.0)
+    t_star = a_gdot / (a_norms + 1e-30)          # unconstrained maximiser
+    a_perp = jnp.sqrt(jnp.maximum(jnp.square(a_norms) - jnp.square(a_gdot), 0.0))
+    unclipped = a_scores + rho * a_norms
+    clipped = a_scores + rho * (
+        a_gdot * t_b + a_perp * jnp.sqrt(jnp.maximum(1.0 - t_b * t_b, 0.0))
+    )
+    return jnp.where(t_star <= t_b, unclipped, clipped)
+
+
+def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
+    """DOME test (Xiang et al. [36, 35]) — basic rule only (no sequential
+    version exists; paper §4.1).
+
+    Safe region: B(y/λ, ‖y‖(1/λ − 1/λ_max)) ∩ {θ : ĝᵀθ ≤ 1/‖x*‖·(1/1)}
+    where g = sign(x*ᵀy)x* and x* attains λ_max. Both constraints provably
+    contain θ*(λ): the ball because y/λ_max ∈ F is no closer to y/λ than the
+    projection θ*(λ); the halfspace because gᵀθ ≤ 1 on all of F. We evaluate
+    the *exact* sup of ±x_iᵀθ over the dome (tighter than the sphere test).
+
+    The paper notes DOME assumes unit-norm features and y; this closed form
+    does not need that, but benchmarks normalise for parity (Fig. 2).
+    """
+    corr = X.T @ y
+    istar = jnp.argmax(jnp.abs(corr))
+    g = jnp.sign(corr[istar]) * X[:, istar]
+    gnorm = jnp.linalg.norm(g) + 1e-30
+    ghat = g / gnorm
+    b = 1.0 / gnorm                                   # ĝᵀθ ≤ 1/‖g‖
+    c = y / lam_next
+    rho = jnp.linalg.norm(y) * (1.0 / lam_next - 1.0 / lam_max_val)
+
+    scores_c = X.T @ c
+    gdot = X.T @ ghat
+    col_norms = jnp.linalg.norm(X, axis=0)
+    sup_pos = _sup_over_dome(scores_c, gdot, col_norms, c, rho, ghat, b)
+    sup_neg = _sup_over_dome(-scores_c, -gdot, col_norms, c, rho, ghat, b)
+    return jnp.maximum(sup_pos, sup_neg) < 1.0 - eps
+
+
+# ---------------------------------------------------------------------------
+# KKT post-check (needed by the strong rule; free safety telemetry otherwise)
+# ---------------------------------------------------------------------------
+
+def kkt_violations(X, y, beta, lam, discarded, tol: float = 1e-4):
+    """Features whose KKT condition |x_iᵀr| ≤ λ is violated among the
+    discarded set — the strong rule's correctness loop (paper §1)."""
+    r = y - X @ beta
+    viol = jnp.abs(X.T @ r) > lam * (1.0 + tol)
+    return jnp.logical_and(viol, discarded)
+
+
+RULES = {
+    "dpp": dpp_mask,
+    "imp1": imp1_mask,
+    "imp2": imp2_mask,
+    "edpp": edpp_mask,
+    "seq_safe": seq_safe_mask,
+    "strong": strong_mask,
+}
+
+SAFE_RULES = ("dpp", "imp1", "imp2", "edpp", "seq_safe", "safe", "dome", "none")
+HEURISTIC_RULES = ("strong",)
+
+
+@functools.partial(jax.jit, static_argnames=("rule",))
+def screen(X, y, lam_next, state: DualState, rule: str = "edpp",
+           eps: float = EPS_DEFAULT):
+    """Jitted dispatch over the sequential rules."""
+    return RULES[rule](X, y, lam_next, state, eps)

@@ -1,0 +1,6 @@
+from .pipeline import (  # noqa: F401
+    SyntheticLM,
+    device_batch,
+    group_lasso_problem,
+    lasso_problem,
+)

@@ -1,0 +1,110 @@
+"""Data pipeline: deterministic synthetic streams + sharded host loading.
+
+Determinism doubles as **straggler/failure mitigation** (DESIGN §8): batch
+content is a pure function of (seed, step, host_shard), so a re-spawned or
+replacement worker regenerates exactly the shard the lost worker would have
+produced — no data-state handoff, no skipped/duplicated examples.
+
+Two sources:
+  * SyntheticLM — threefry-hashed token stream (per-arch vocab), the default
+    for the examples and dry-run drivers.
+  * Lasso design-matrix generators matching the paper's §4.1.2 recipe
+    (eq. 74): i.i.d. Gaussian X with optional AR(1)-style column correlation
+    0.5^{|i−j|}, sparse ground truth with p̄ nonzeros, y = Xβ* + 0.1ε.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab: int
+    seq: int
+    global_batch: int
+    seed: int = 0
+    frontend: str = "tokens"
+    d_frame: int = 512
+    d_patch: int = 1024
+    n_img_tokens: int = 256
+
+    def host_batch(self, step: int, shard: int = 0, n_shards: int = 1):
+        """Deterministic numpy batch for (step, host shard)."""
+        b = self.global_batch // n_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, shard]))
+        if self.frontend == "tokens":
+            toks = rng.integers(0, self.vocab, (b, self.seq + 1),
+                                dtype=np.int32)
+            return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.frontend == "frames":
+            return {
+                "frames": rng.standard_normal(
+                    (b, self.seq, self.d_frame)).astype(np.float32),
+                "labels": rng.integers(0, self.vocab, (b, self.seq),
+                                       dtype=np.int32),
+            }
+        if self.frontend == "vlm":
+            st = self.seq - self.n_img_tokens
+            toks = rng.integers(0, self.vocab, (b, st + 1), dtype=np.int32)
+            return {
+                "tokens": toks[:, :-1],
+                "image_embeds": rng.standard_normal(
+                    (b, self.n_img_tokens, self.d_patch)).astype(np.float32),
+                "labels": toks[:, 1:],
+            }
+        raise ValueError(self.frontend)
+
+
+def lasso_problem(n: int, p: int, *, nnz: int, corr: float = 0.0,
+                  sigma: float = 0.1, seed: int = 0, dtype=np.float64):
+    """The paper's synthetic generator (eq. 74).
+
+    corr=0   → Synthetic 1 (i.i.d. standard Gaussian columns).
+    corr=0.5 → Synthetic 2 (pairwise corr 0.5^{|i−j|}, AR(1) construction).
+    Returns (X, y, beta_star).
+    """
+    rng = np.random.default_rng(seed)
+    if corr > 0:
+        # AR(1): x_j = corr·x_{j-1}_part + sqrt(1-corr²)·fresh ⇒ 0.5^{|i-j|}
+        base = rng.standard_normal((n, p))
+        X = np.empty((n, p))
+        X[:, 0] = base[:, 0]
+        a = np.sqrt(1.0 - corr * corr)
+        for j in range(1, p):
+            X[:, j] = corr * X[:, j - 1] + a * base[:, j]
+    else:
+        X = rng.standard_normal((n, p))
+    beta = np.zeros(p)
+    idx = rng.choice(p, nnz, replace=False)
+    beta[idx] = rng.uniform(-1.0, 1.0, nnz)
+    y = X @ beta + sigma * rng.standard_normal(n)
+    return X.astype(dtype), y.astype(dtype), beta
+
+
+def group_lasso_problem(n: int, p: int, m: int, *, active_groups: int,
+                        sigma: float = 0.1, seed: int = 0, dtype=np.float64):
+    """§4.2 generator: i.i.d. Gaussian X, group-sparse β (equal groups m)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    g = p // m
+    beta = np.zeros(p)
+    for gi in rng.choice(g, active_groups, replace=False):
+        beta[gi * m:(gi + 1) * m] = rng.uniform(-1.0, 1.0, m)
+    y = X @ beta + sigma * rng.standard_normal(n)
+    return X.astype(dtype), y.astype(dtype), beta
+
+
+def device_batch(mesh, host_batch: dict):
+    """Place a host batch onto the mesh (batch dim over pod×data)."""
+    from jax.sharding import NamedSharding
+    from repro.train.sharding import batch_spec
+    return {
+        k: jax.device_put(v, NamedSharding(
+            mesh, batch_spec(mesh, v.ndim, v.shape[0])))
+        for k, v in host_batch.items()
+    }

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the screening hot loop (+ pure-jnp oracles in ref.py).
+
+Kernels (each: <name>.py with pl.pallas_call + BlockSpec, validated against
+ref.py in tests/test_kernels.py via interpret=True on CPU):
+
+  edpp_screen.py   fused |Xᵀo| + ρ‖x_j‖ screening scores — one HBM pass over X
+  group_screen.py  fused group scores ‖X_gᵀo‖ (Corollary 21)
+  prox_step.py     fused FISTA soft-threshold + momentum update
+"""
+from .ops import (  # noqa: F401
+    INTERPRET,
+    edpp_screen,
+    edpp_screen_scores,
+    group_edpp_screen,
+    group_screen_scores,
+    prox_step,
+    screen_matvec,
+)

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers around the Pallas screening kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode; on TPU
+they compile to Mosaic. ``INTERPRET`` auto-detects the backend so the same
+call sites work in both places.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .edpp_screen import edpp_screen_scores, screen_matvec
+from .group_screen import group_screen_scores
+from .prox_step import prox_step
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def edpp_screen(X, centre, rho, eps: float = 1e-6, *, col_norms=None,
+                interpret: bool | None = None):
+    """Full fused screening decision.
+
+    Returns (discard_mask, scores, sumsq). If ``col_norms`` (‖x_j‖₂) is
+    provided — cached across a λ-path — only the matvec kernel runs.
+    """
+    it = INTERPRET if interpret is None else interpret
+    if col_norms is not None:
+        dot = screen_matvec(X, centre, interpret=it)
+        scores = jnp.abs(dot) + rho * col_norms
+        sumsq = jnp.square(col_norms)
+    else:
+        scores, sumsq = edpp_screen_scores(X, centre, rho, interpret=it)
+    return scores < 1.0 - eps, scores, sumsq
+
+
+def group_edpp_screen(X, centre, rho, m: int, spec_norms, eps: float = 1e-6,
+                      *, interpret: bool | None = None):
+    """Fused group screening decision (Corollary 21).
+
+    gscores[g] = ‖X_gᵀ·centre‖; discard iff gscores[g] < √m − rho·‖X_g‖₂ − eps.
+    """
+    it = INTERPRET if interpret is None else interpret
+    gscores = group_screen_scores(X, centre, m, interpret=it)
+    thresh = jnp.sqrt(float(m)) - rho * spec_norms - eps
+    return gscores < thresh, gscores
+
+
+__all__ = [
+    "edpp_screen",
+    "edpp_screen_scores",
+    "group_edpp_screen",
+    "group_screen_scores",
+    "prox_step",
+    "screen_matvec",
+    "INTERPRET",
+]

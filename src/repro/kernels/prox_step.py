@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused FISTA inner update (soft-threshold + momentum).
+
+    u        = z − step·g
+    beta_new = S(u, step·λ)                    (soft-threshold)
+    z_new    = beta_new + mom·(beta_new − beta_old)
+
+Unfused, this is 5 elementwise HBM round-trips over p-vectors; fused it is a
+single read of (z, g, beta_old) and a single write of (beta_new, z_new) —
+pure VPU work, trivially memory-bound, so fusion is the whole win.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prox_kernel(s_ref, z_ref, g_ref, b_ref, beta_ref, znew_ref):
+    step, lam, mom = s_ref[0], s_ref[1], s_ref[2]
+    u = z_ref[...] - step * g_ref[...]
+    t = step * lam
+    beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+    beta_ref[...] = beta_new
+    znew_ref[...] = beta_new + mom * (beta_new - b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def prox_step(
+    z: jax.Array,
+    g: jax.Array,
+    beta_old: jax.Array,
+    step,
+    lam,
+    mom,
+    *,
+    bp: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused FISTA update over p-vectors (any length; zero padded)."""
+    p = z.shape[0]
+    p_pad = -p % bp
+    zp = jnp.pad(z, (0, p_pad)).reshape(1, -1)
+    gp = jnp.pad(g, (0, p_pad)).reshape(1, -1)
+    bp_old = jnp.pad(beta_old, (0, p_pad)).reshape(1, -1)
+    scalars = jnp.stack([
+        jnp.asarray(step, z.dtype),
+        jnp.asarray(lam, z.dtype),
+        jnp.asarray(mom, z.dtype),
+    ])
+    p_tiles = (p + p_pad) // bp
+
+    beta_new, z_new = pl.pallas_call(
+        _prox_kernel,
+        grid=(p_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),          # scalars
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec((1, bp), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
+            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
+        ],
+        interpret=interpret,
+    )(scalars, zp, gp, bp_old)
+    return beta_new[0, :p], z_new[0, :p]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the kernels must match them to float tolerance
+across the shape/dtype sweep in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edpp_screen_ref(X: jax.Array, centre: jax.Array, rho) -> tuple[jax.Array, jax.Array]:
+    """Fused screening pass (EDPP/DPP family, Theorem 16 LHS+RHS combined).
+
+    Returns (scores, sumsq) with
+        scores[j] = |x_jᵀ·centre| + rho·‖x_j‖₂
+        sumsq[j]  = ‖x_j‖₂²
+    Discard feature j iff scores[j] < 1 − eps.
+    """
+    X32 = X.astype(jnp.float32)
+    c32 = centre.astype(jnp.float32)
+    dot = X32.T @ c32
+    sumsq = jnp.sum(jnp.square(X32), axis=0)
+    scores = jnp.abs(dot) + jnp.asarray(rho, jnp.float32) * jnp.sqrt(sumsq)
+    return scores, sumsq
+
+
+def screen_matvec_ref(X: jax.Array, centre: jax.Array) -> jax.Array:
+    """Plain screening matvec: dot[j] = x_jᵀ·centre (norms cached by caller)."""
+    return X.astype(jnp.float32).T @ centre.astype(jnp.float32)
+
+
+def group_screen_ref(X: jax.Array, centre: jax.Array, m: int) -> jax.Array:
+    """Group screening scores (Corollary 21 LHS): per contiguous group of m,
+
+        gscores[g] = ‖X_gᵀ·centre‖₂
+    """
+    dot = X.astype(jnp.float32).T @ centre.astype(jnp.float32)
+    return jnp.linalg.norm(dot.reshape(-1, m), axis=1)
+
+
+def prox_step_ref(z: jax.Array, g: jax.Array, beta_old: jax.Array,
+                  step, lam, mom) -> tuple[jax.Array, jax.Array]:
+    """Fused FISTA inner update (one HBM pass over 3 p-vectors):
+
+        u        = z − step·g
+        beta_new = sign(u)·max(|u| − step·lam, 0)
+        z_new    = beta_new + mom·(beta_new − beta_old)
+    """
+    u = z - step * g
+    t = step * lam
+    beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+    z_new = beta_new + mom * (beta_new - beta_old)
+    return beta_new, z_new

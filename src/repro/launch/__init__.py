@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, abstract input specs, the multi-pod
+dry-run driver, HLO cost models, and the train/solve entrypoints."""

@@ -1,0 +1,163 @@
+"""Parse compiled HLO for collective traffic + roofline term derivation.
+
+``compiled.cost_analysis()`` provides HLO FLOPs and bytes accessed, but not
+collective bytes — those are summed here by scanning the post-SPMD optimized
+HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops and sizing their operands/results.
+
+Byte accounting per op (per participating device):
+  all-reduce         2·|in|   (reduce-scatter + all-gather ring phases)
+  all-gather         |out| − |in|  ≈ received bytes
+  reduce-scatter     |in| − |out|  ≈ sent bytes
+  all-to-all         |in|
+  collective-permute |in|
+This is the standard ring-algorithm estimate used for ICI roofline terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# definition lines:  %name = <shape-or-tuple> opcode(...)
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*(\([^()]*\)|\w+\[[\d,]*\]\S*)\s+"
+                     r"([\w\-]+)\(([^)]*)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum per-device collective traffic over an optimized HLO module.
+
+    Two passes: (1) build name → result-shape-bytes for every instruction;
+    (2) size each collective from its own result plus its operands' shapes
+    (operands are name references in optimized HLO).
+    """
+    shapes: dict[str, int] = {}
+    instrs = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, out_shape, opcode, operands = m.groups()
+        shapes[name] = _shape_bytes(out_shape)
+        instrs.append((name, out_shape, opcode, operands))
+
+    counts: dict[str, int] = {}
+    bts: dict[str, int] = {}
+    for name, out_shape, opcode, operands in instrs:
+        kind = None
+        for c in _COLLECTIVES:
+            if opcode == c or opcode == c + "-start":
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_b = _shape_bytes(out_shape)
+        in_b = sum(shapes.get(op, 0) for op in _OPERAND_RE.findall(operands))
+        if opcode.endswith("-start"):
+            # start-op result is a tuple (operand, result[, contexts])
+            out_b = max(out_b - in_b, 0)
+        if kind == "all-reduce":
+            moved = 2 * in_b
+        elif kind == "all-gather":
+            moved = max(out_b - in_b, 0)
+        elif kind == "reduce-scatter":
+            moved = max(in_b - out_b, 0)
+        else:
+            moved = in_b
+        counts[kind] = counts.get(kind, 0) + 1
+        bts[kind] = bts.get(kind, 0) + moved
+    return CollectiveStats(counts=counts, bytes_by_kind=bts)
+
+
+# ---------------------------------------------------------------------------
+# Roofline (TPU v5e constants from the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link (~per chip, one direction)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline. IMPORTANT UNIT NOTE (verified empirically in
+    tests/test_hlo.py): jax's ``compiled.cost_analysis()`` runs on the
+    *partitioned* module, so ``flops`` / ``hbm_bytes`` here are PER-DEVICE.
+    ``t_compute = flops/peak`` is therefore identical to the assignment's
+    ``HLO_FLOPs_global / (chips × peak)``."""
+
+    flops: float                  # per-device HLO flops
+    hbm_bytes: float              # per-device HLO bytes accessed
+    coll_bytes: float             # per-device collective bytes
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll = collective_stats(compiled.as_text()).total_bytes
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=float(coll),
+                    chips=chips)

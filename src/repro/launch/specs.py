@@ -1,0 +1,121 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) for every dry-run cell.
+
+Nothing here allocates: parameters/optimizer/caches are built with
+``jax.eval_shape`` and annotated with NamedShardings, which is exactly what
+``jit(...).lower()`` needs. This is the weak-type-correct, shardable pattern
+from the assignment brief.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train import sharding as SH
+from repro.train import steps as ST
+
+
+def _with_shardings(struct_tree, shard_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, shard_tree)
+
+
+def batch_struct(cfg: M.ArchConfig, shape: configs.ShapeSpec, mesh: Mesh,
+                 *, for_train: bool):
+    b, s = shape.batch, shape.seq
+    d = {}
+    if cfg.frontend == "tokens":
+        d["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif cfg.frontend == "frames":
+        d["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_frame), jnp.float32)
+    elif cfg.frontend == "vlm":
+        d["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.n_img_tokens),
+                                           jnp.int32)
+        d["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_patch), jnp.float32)
+    if for_train:
+        st = s - cfg.n_img_tokens if cfg.frontend == "vlm" else s
+        d["labels"] = jax.ShapeDtypeStruct((b, st), jnp.int32)
+    shard = {k: NamedSharding(mesh, SH.batch_spec(mesh, len(v.shape),
+                                                  v.shape[0]))
+             for k, v in d.items()}
+    return _with_shardings(d, shard), shard
+
+
+def state_struct(cfg: M.ArchConfig, tc: ST.TrainConfig, mesh: Mesh):
+    """Abstract TrainState + shardings (no allocation)."""
+    def build():
+        params, _ = M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        opt = adamw.init(tc.opt, params)
+        return ST.TrainState(params=params, opt=opt,
+                             step=jnp.zeros((), jnp.int32))
+
+    struct = jax.eval_shape(build)
+    specs = M.param_specs(cfg)
+    pshard = SH.resolve_tree(mesh, specs, struct.params)
+    rep = NamedSharding(mesh, P())
+    sshard = ST.TrainState(
+        params=pshard,
+        opt=adamw.AdamState(
+            step=rep, m=pshard, v=pshard,
+            err=None if struct.opt.err is None else pshard),
+        step=rep)
+    return _with_shardings(struct, sshard), sshard
+
+
+def params_struct(cfg: M.ArchConfig, mesh: Mesh):
+    struct = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)[0])
+    specs = M.param_specs(cfg)
+    pshard = SH.resolve_tree(mesh, specs, struct)
+    return _with_shardings(struct, pshard), pshard
+
+
+def cache_struct(cfg: M.ArchConfig, batch: int, smax: int, mesh: Mesh,
+                 dtype=jnp.bfloat16):
+    struct = jax.eval_shape(
+        lambda: M.cache_init(cfg, batch, smax, dtype)[0])
+    specs = M.cache_init_specs(cfg, batch, smax)
+    cshard = SH.resolve_tree(mesh, specs, struct)
+    return _with_shardings(struct, cshard), cshard
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh,
+                tc: ST.TrainConfig | None = None, cfg_patch: dict | None = None):
+    """All abstract inputs for one dry-run cell.
+
+    Returns (kind, args, shardings_bundle) where args are the positional
+    ShapeDtypeStructs for the corresponding jitted step. ``cfg_patch``
+    applies dataclasses.replace overrides to the ArchConfig (used by the
+    §Perf hillclimb to change chunking / remat without new config files).
+    """
+    import dataclasses as _dc
+    cfg = configs.get_config(arch)
+    if cfg_patch:
+        cfg = _dc.replace(cfg, **cfg_patch)
+    shape = configs.SHAPES[shape_name]
+    tc = tc or ST.TrainConfig()
+    if shape.kind == "train":
+        state_sds, sshard = state_struct(cfg, tc, mesh)
+        batch_sds, bshard = batch_struct(cfg, shape, mesh, for_train=True)
+        return "train", (state_sds, batch_sds), (sshard, bshard)
+    if shape.kind == "prefill":
+        p_sds, pshard = params_struct(cfg, mesh)
+        batch_sds, bshard = batch_struct(cfg, shape, mesh, for_train=False)
+        return "prefill", (p_sds, batch_sds), (pshard, bshard)
+    # decode: one new token against a cache of length shape.seq
+    p_sds, pshard = params_struct(cfg, mesh)
+    c_sds, cshard = cache_struct(cfg, shape.batch, shape.seq, mesh)
+    tok = jax.ShapeDtypeStruct(
+        (shape.batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, SH.batch_spec(mesh, 2, shape.batch)))
+    clen = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return "decode", (p_sds, tok, c_sds, clen), (pshard, cshard)

@@ -1,0 +1,14 @@
+"""Model zoo: composable block-program models (see model.ArchConfig)."""
+from .model import (  # noqa: F401
+    ArchConfig,
+    Block,
+    Segment,
+    backbone,
+    cache_init,
+    chunked_xent,
+    decode_step,
+    forward_loss,
+    init_params,
+    logits_for,
+    prefill,
+)

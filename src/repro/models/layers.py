@@ -1,0 +1,444 @@
+"""Transformer building blocks: norms, RoPE, chunked attention (GQA / MLA /
+sliding-window), FFN variants, MoE.
+
+Conventions
+-----------
+* Params are plain dicts of jnp arrays; every constructor returns
+  ``(params, specs)`` where ``specs`` mirrors the param tree with
+  ``jax.sharding.PartitionSpec`` leaves using *logical* axis names, resolved
+  to mesh axes by ``repro.train.sharding.resolve_specs``.
+* Logical axes: "embed" (d_model), "ffn" (d_ff), "heads"/"kv" (head dims),
+  "vocab", "experts", "lora" (MLA bottleneck). Defaults map
+  embed→fsdp("data"), ffn/heads/vocab/experts→tensor("model").
+* Compute dtype is bf16 by default (params may be fp32 masters); all matmul
+  accumulation is f32 via ``preferred_element_type``.
+* Attention is **chunked** (memory-efficient, lax.scan over KV blocks with a
+  running log-sum-exp): the 32k-prefill and 4k×256-train cells are impossible
+  with materialised (S, S) logits. Same FLOPs, O(S·chunk) memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.pshard import constrain
+
+# §Perf hillclimb hook: emit out-projection dots in bf16 so the tensor-
+# parallel partial-sum all-reduce moves half the bytes (MXU still
+# accumulates in f32 internally; only the cross-shard reduction is bf16).
+BF16_REDUCTIONS = False
+
+
+def _out_ptype():
+    return jnp.bfloat16 if BF16_REDUCTIONS else F32
+
+
+Params = dict
+Specs = dict
+
+F32 = jnp.float32
+
+
+def _norm(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, dtype=F32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=F32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}, {"scale": P(None)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, offset: float = 0.0):
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + params["scale"].astype(F32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """Apply rotary embeddings. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[..., :, None].astype(F32) * freq       # (..., S, half)
+    ang = ang[..., None, :]                                 # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (memory-efficient) attention core
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attend_block(q, k, v, bias):
+    """One (qc, kc) tile: returns (unnorm_out, row_max, row_sumexp).
+
+    q: (B, H, Qc, D), k/v: (B, H, Kc, D), bias: (B|1, 1|H, Qc, Kc).
+    """
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), k.astype(F32),
+                   preferred_element_type=F32)
+    s = s * (1.0 / math.sqrt(q.shape[-1])) + bias
+    m = jnp.max(s, axis=-1)                                 # (B, H, Qc)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(F32),
+                   preferred_element_type=F32)
+    return o, m, l
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int | None,
+                      q_offset, k_chunk: int = 1024, q_chunk: int = 1024):
+    """Flash-style attention in pure jnp (lax.scan over KV chunks).
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) — GQA handled by head repeat.
+    ``q_offset``: absolute position of q[0] (for decode/cache, may be traced).
+    ``window``: sliding-window size (local attention) or None for full.
+    Returns (B, Hq, Sq, D) in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    dv = v.shape[-1]                 # value dim may differ from q/k (MLA)
+    hkv = k.shape[1]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    sk = k.shape[2]
+
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // k_chunk)
+    # pad to chunk multiples (padded kv masked out; padded q sliced off)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, nq * q_chunk - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, nk * k_chunk - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, nk * k_chunk - sk), (0, 0)))
+
+    kpos_all = jnp.arange(nk * k_chunk)
+
+    def q_block(qi, qb):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)   # (Qc,)
+
+        @jax.checkpoint   # flash-style: recompute tile scores in bwd
+        def kv_step(carry, inputs):
+            o_acc, m_acc, l_acc = carry
+            kb, vb, kpos = inputs
+            bias = jnp.zeros((1, 1, q_chunk, k_chunk), F32)
+            valid = (kpos[None, :] < sk)
+            if causal:
+                valid &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                valid &= kpos[None, :] > qpos[:, None] - window
+            bias = jnp.where(valid[None, None], bias, NEG_INF)
+            o, m, l = _attend_block(qb, kb, vb, bias)
+            m_new = jnp.maximum(m_acc, m)
+            scale_old = jnp.exp(m_acc - m_new)
+            scale_new = jnp.exp(m - m_new)
+            o_acc = o_acc * scale_old[..., None] + o * scale_new[..., None]
+            l_acc = l_acc * scale_old + l * scale_new
+            return (o_acc, m_new, l_acc), None
+
+        o0 = jnp.zeros((b, hq, q_chunk, dv), F32)
+        m0 = jnp.full((b, hq, q_chunk), NEG_INF, F32)
+        l0 = jnp.zeros((b, hq, q_chunk), F32)
+        ks = kp.reshape(b, hq, nk, k_chunk, d).transpose(2, 0, 1, 3, 4)
+        vs = vp.reshape(b, hq, nk, k_chunk, dv).transpose(2, 0, 1, 3, 4)
+        kposs = kpos_all.reshape(nk, k_chunk)
+        (o, m, l), _ = jax.lax.scan(kv_step, (o0, m0, l0), (ks, vs, kposs))
+        return o / jnp.maximum(l[..., None], 1e-30)
+
+    qs = qp.reshape(b, hq, nq, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    outs = jax.lax.map(lambda args: q_block(args[0], args[1]),
+                       (jnp.arange(nq), qs))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, nq * q_chunk, dv)
+    return out[:, :, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    causal: bool = True
+    window: int | None = None      # sliding-window size (None = full)
+    qk_norm: bool = False          # gemma3-style per-head RMS on q/k
+    qkv_bias: bool = False         # qwen-style bias
+    rope_theta: float = 10000.0
+
+
+def attn_init(key, spec: AttnSpec, dtype=F32):
+    d, h, hk, dh = spec.d_model, spec.n_heads, spec.n_kv_heads, spec.d_head
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    p = {
+        "wq": _norm(ks[0], (d, h, dh), sc, dtype),
+        "wk": _norm(ks[1], (d, hk, dh), sc, dtype),
+        "wv": _norm(ks[2], (d, hk, dh), sc, dtype),
+        "wo": _norm(ks[3], (h, dh, d), 1.0 / math.sqrt(h * dh), dtype),
+    }
+    s = {
+        "wq": P("embed", "heads", None),
+        "wk": P("embed", "kv", None),
+        "wv": P("embed", "kv", None),
+        "wo": P("heads", None, "embed"),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((hk, dh), dtype)
+        p["bv"] = jnp.zeros((hk, dh), dtype)
+        s["bq"], s["bk"], s["bv"] = P("heads", None), P("kv", None), P("kv", None)
+    if spec.qk_norm:
+        p["qnorm"] = jnp.ones((dh,), dtype)
+        p["knorm"] = jnp.ones((dh,), dtype)
+        s["qnorm"], s["knorm"] = P(None), P(None)
+    return p, s
+
+
+def _headwise_rms(x, scale):
+    xf = x.astype(F32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
+    return (y * scale.astype(F32)).astype(x.dtype)
+
+
+def attn_qkv(params, spec: AttnSpec, x, positions):
+    """Project to rotary q, k, v. x: (B, S, d) → q (B,H,S,Dh), k/v (B,Hk,S,Dh)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"], preferred_element_type=F32)
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"], preferred_element_type=F32)
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"], preferred_element_type=F32)
+    q, k, v = q.astype(x.dtype), k.astype(x.dtype), v.astype(x.dtype)
+    q = constrain(q, ("batch", "heads", None, None))
+    k = constrain(k, ("batch", "kv", None, None))
+    v = constrain(v, ("batch", "kv", None, None))
+    if spec.qkv_bias:
+        q = q + params["bq"][None, :, None, :].astype(x.dtype)
+        k = k + params["bk"][None, :, None, :].astype(x.dtype)
+        v = v + params["bv"][None, :, None, :].astype(x.dtype)
+    if spec.qk_norm:
+        q = _headwise_rms(q, params["qnorm"])
+        k = _headwise_rms(k, params["knorm"])
+    # rope expects (..., S, H, D): operate in (B, H, S, D) by folding H into batch
+    q = rope(q.transpose(0, 2, 1, 3), positions, spec.rope_theta).transpose(0, 2, 1, 3)
+    k = rope(k.transpose(0, 2, 1, 3), positions, spec.rope_theta).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def attn_forward(params, spec: AttnSpec, x, positions, *, q_chunk=1024,
+                 k_chunk=1024):
+    """Self-attention over a full sequence (train / prefill)."""
+    q, k, v = attn_qkv(params, spec, x, positions)
+    o = chunked_attention(q, k, v, causal=spec.causal, window=spec.window,
+                          q_offset=0, q_chunk=q_chunk, k_chunk=k_chunk)
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"],
+                      preferred_element_type=_out_ptype()).astype(x.dtype)
+
+
+def attn_decode(params, spec: AttnSpec, x, cache_k, cache_v, cache_len):
+    """Single-token decode: x (B, 1, d); cache (B, Hk, Smax, Dh).
+
+    Returns (out (B,1,d), new_k, new_v). The KV cache's sequence axis is
+    sharded over the tensor axis in the production mesh (sequence-parallel
+    decode); the softmax reductions become psums under GSPMD.
+    """
+    b = x.shape[0]
+    pos = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k, v = attn_qkv(params, spec, x, pos)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), cache_len, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), cache_len, axis=2)
+    smax = cache_k.shape[2]
+    hq, hk = spec.n_heads, spec.n_kv_heads
+    kk = jnp.repeat(cache_k, hq // hk, axis=1)
+    vv = jnp.repeat(cache_v, hq // hk, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(F32), kk.astype(F32),
+                   preferred_element_type=F32) / math.sqrt(spec.d_head)
+    kpos = jnp.arange(smax)
+    valid = kpos[None, :] <= cache_len
+    if spec.window is not None:
+        valid &= kpos[None, :] > cache_len - spec.window
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", pattn, vv.astype(F32),
+                   preferred_element_type=F32).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FfnSpec:
+    d_model: int
+    d_ff: int
+    kind: str = "swiglu"           # swiglu | geglu | relu2 | gelu
+
+
+def ffn_init(key, spec: FfnSpec, dtype=F32):
+    d, f = spec.d_model, spec.d_ff
+    ks = jax.random.split(key, 3)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    gated = spec.kind in ("swiglu", "geglu")
+    p = {"w_in": _norm(ks[0], (d, f), sc_in, dtype),
+         "w_out": _norm(ks[1], (f, d), sc_out, dtype)}
+    s = {"w_in": P("embed", "ffn"), "w_out": P("ffn", "embed")}
+    if gated:
+        p["w_gate"] = _norm(ks[2], (d, f), sc_in, dtype)
+        s["w_gate"] = P("embed", "ffn")
+    return p, s
+
+
+def ffn_forward(params, spec: FfnSpec, x):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"],
+                   preferred_element_type=F32).astype(x.dtype)
+    h = constrain(h, ("batch", None, "ffn"))
+    if spec.kind == "swiglu":
+        g = constrain(jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                       preferred_element_type=F32).astype(x.dtype),
+                      ("batch", None, "ffn"))
+        h = jax.nn.silu(g) * h
+    elif spec.kind == "geglu":
+        g = constrain(jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                       preferred_element_type=F32).astype(x.dtype),
+                      ("batch", None, "ffn"))
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif spec.kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_out"],
+                      preferred_element_type=_out_ptype()).astype(x.dtype)
+    return constrain(out, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------------------
+# MoE (shared + routed experts, grouped GShard dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    d_model: int
+    d_expert: int
+    n_routed: int
+    n_shared: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 128          # dispatch group (bounds T×E×C cost)
+    ffn_kind: str = "swiglu"
+
+
+def moe_init(key, spec: MoeSpec, dtype=F32):
+    d, f, e = spec.d_model, spec.d_expert, spec.n_routed
+    ks = jax.random.split(key, 5)
+    sc_in, sc_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": _norm(ks[0], (d, e), sc_in, F32),   # router kept in f32
+        "w_in": _norm(ks[1], (e, d, f), sc_in, dtype),
+        "w_gate": _norm(ks[2], (e, d, f), sc_in, dtype),
+        "w_out": _norm(ks[3], (e, f, d), sc_out, dtype),
+    }
+    s = {
+        "router": P("embed", None),
+        "w_in": P("experts", "embed", None),
+        "w_gate": P("experts", "embed", None),
+        "w_out": P("experts", None, "embed"),
+    }
+    if spec.n_shared:
+        shared = FfnSpec(d, spec.d_expert * spec.n_shared, spec.ffn_kind)
+        p["shared"], s["shared"] = ffn_init(ks[4], shared, dtype)
+    return p, s
+
+
+def moe_forward(params, spec: MoeSpec, x):
+    """Grouped top-k routing with capacity (GShard dispatch/combine einsums).
+
+    x: (B, S, d). Tokens are processed in groups of ``group_size`` so the
+    dispatch one-hot cost stays linear in sequence length. Dropped tokens
+    (over capacity) fall through on the residual path, standard for TPU MoE.
+    """
+    b, s_len, d = x.shape
+    e, k = spec.n_routed, spec.top_k
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    g = min(spec.group_size, t)
+    ng = -(-t // g)
+    pad = ng * g - t
+    tokens = jnp.pad(tokens, ((0, pad), (0, 0))).reshape(ng, g, d)
+    tokens = constrain(tokens, ("batch", None, None))
+
+    cap = max(1, int(g * k / e * spec.capacity_factor))
+
+    logits = jnp.einsum("ngd,de->nge", tokens.astype(F32), params["router"],
+                        preferred_element_type=F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                 # (ng, g, k)
+    topv = topv / (jnp.sum(topv, -1, keepdims=True) + 1e-9)
+
+    # buffer position of each (token, choice) within its expert; computed
+    # jointly over (g, k) so positions are consistent across choices
+    onehot = jax.nn.one_hot(topi, e, dtype=F32)          # (ng, g, k, e)
+    pos = jnp.cumsum(onehot.reshape(ng, g * k, e), axis=1).reshape(
+        ng, g, k, e) * onehot - 1.0
+    keep = (pos < cap) & (pos >= 0)
+
+    # accumulate (ng, g, e, cap) dispatch/combine one k-choice at a time —
+    # never materialising the (g, k, e, cap) five-tensor
+    dispatch = jnp.zeros((ng, g, e, cap), x.dtype)
+    combine = jnp.zeros((ng, g, e, cap), x.dtype)
+    for j in range(k):
+        pos_j = jnp.where(keep[..., j, :], pos[..., j, :], -1)   # (ng,g,e)
+        poh = jax.nn.one_hot(pos_j.astype(jnp.int32), cap,
+                             dtype=x.dtype)                      # (ng,g,e,cap)
+        dispatch = dispatch + poh
+        combine = combine + poh * topv[..., j, None, None].astype(x.dtype)
+
+    dispatch = constrain(dispatch, ("batch", None, "experts", None))
+    combine = constrain(combine, ("batch", None, "experts", None))
+    # dispatch to expert buffers: (e, ng, cap, d)
+    xe = jnp.einsum("ngd,ngec->encd", tokens, dispatch,
+                    preferred_element_type=F32).astype(x.dtype)
+    xe = constrain(xe, ("experts", "batch", None, None))
+    h = jnp.einsum("encd,edf->encf", xe, params["w_in"],
+                   preferred_element_type=F32).astype(x.dtype)
+    gproj = jnp.einsum("encd,edf->encf", xe, params["w_gate"],
+                       preferred_element_type=F32).astype(x.dtype)
+    if spec.ffn_kind == "swiglu":
+        h = jax.nn.silu(gproj) * h
+    else:
+        h = jax.nn.gelu(gproj, approximate=True) * h
+    h = constrain(h, ("experts", "batch", None, None))
+    ye = jnp.einsum("encf,efd->encd", h, params["w_out"],
+                    preferred_element_type=F32).astype(x.dtype)
+    ye = constrain(ye, ("experts", "batch", None, None))
+    y = jnp.einsum("encd,ngec->ngd", ye, combine,
+                   preferred_element_type=F32).astype(x.dtype)
+
+    y = constrain(y, ("batch", None, None))
+    y = y.reshape(ng * g, d)[: t].reshape(b, s_len, d)
+    if spec.n_shared:
+        shared = FfnSpec(d, spec.d_expert * spec.n_shared, spec.ffn_kind)
+        y = y + ffn_forward(params["shared"], shared, x)
+    return y

@@ -1,0 +1,499 @@
+"""Composable model definition: block programs → stacked/scanned layers.
+
+An architecture is an :class:`ArchConfig` holding a *block program*: a tuple
+of :class:`Segment`\\ s, each ``(repeat, blocks)``. A segment's parameters are
+stacked on a leading ``repeat`` axis and executed with ``lax.scan`` (O(1) HLO
+size for 96-layer models — mandatory for CPU-hosted lowering of the dry-run
+and standard practice on TPU). Heterogeneous stacking patterns (gemma3's
+5-local:1-global, zamba2's shared-attention interleave, xLSTM's 7:1
+mLSTM:sLSTM) are expressed as multi-block segments rather than per-layer
+conditionals, so compiled cost attribution stays exact.
+
+Supports three input frontends (tokens / audio frames / VLM patch embeds),
+tied or untied LM heads, chunked attention, and a **chunked cross-entropy**
+loss (scan over sequence chunks) so the (B, S, vocab) logits tensor is never
+materialised — at (256·4096·256000) it would not fit any machine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.pshard import constrain
+
+from . import layers as L
+from . import mla as M
+from . import ssm as S
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Config dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    kind: str                          # attn | mla | mamba2 | mlstm | slstm
+    attn: L.AttnSpec | None = None
+    mla: M.MlaSpec | None = None
+    ffn: L.FfnSpec | None = None       # dense FFN (attn/mla blocks)
+    moe: L.MoeSpec | None = None       # MoE in place of dense FFN
+    mamba: S.Mamba2Spec | None = None
+    mlstm: S.MlstmSpec | None = None
+    slstm: S.SlstmSpec | None = None
+    shared: bool = False               # zamba2: params from the shared group
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    repeat: int
+    blocks: tuple[Block, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                        # dense | moe | vlm | hybrid | audio | ssm
+    vocab: int
+    d_model: int
+    segments: tuple[Segment, ...]
+    frontend: str = "tokens"           # tokens | frames | vlm
+    encoder_only: bool = False
+    tie_embeddings: bool = True
+    d_frame: int = 512                 # audio stub frame-embedding dim
+    d_patch: int = 1024                # vlm stub patch-embedding dim
+    n_img_tokens: int = 256
+    shared_block: Block | None = None
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    loss_chunk: int = 512
+    remat: bool = True
+    sub_quadratic: bool = False        # eligible for long_500k
+
+    @property
+    def n_layers(self) -> int:
+        return sum(seg.repeat * len(seg.blocks) for seg in self.segments)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / forward / decode
+# ---------------------------------------------------------------------------
+
+def _block_init(key, blk: Block, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.rmsnorm_init(d, dtype)
+    if blk.kind == "attn":
+        p["mixer"], s["mixer"] = L.attn_init(ks[0], blk.attn, dtype)
+    elif blk.kind == "mla":
+        p["mixer"], s["mixer"] = M.mla_init(ks[0], blk.mla, dtype)
+    elif blk.kind == "mamba2":
+        p["mixer"], s["mixer"] = S.mamba2_init(ks[0], blk.mamba, dtype)
+    elif blk.kind == "mlstm":
+        p["mixer"], s["mixer"] = S.mlstm_init(ks[0], blk.mlstm, dtype)
+    elif blk.kind == "slstm":
+        p["mixer"], s["mixer"] = S.slstm_init(ks[0], blk.slstm, dtype)
+    else:
+        raise ValueError(blk.kind)
+    if blk.ffn is not None or blk.moe is not None:
+        p["norm2"], s["norm2"] = L.rmsnorm_init(d, dtype)
+        if blk.moe is not None:
+            p["ffn"], s["ffn"] = L.moe_init(ks[1], blk.moe, dtype)
+        else:
+            p["ffn"], s["ffn"] = L.ffn_init(ks[1], blk.ffn, dtype)
+    return p, s
+
+
+def _block_forward(p, blk: Block, cfg: ArchConfig, x, positions,
+                   want_cache: bool):
+    """Full-sequence block application → (x, cache_or_None)."""
+    h = L.rmsnorm(p["norm1"], x)
+    cache = None
+    if blk.kind == "attn":
+        if want_cache:
+            q, k, v = L.attn_qkv(p["mixer"], blk.attn, h, positions)
+            o = L.chunked_attention(q, k, v, causal=blk.attn.causal,
+                                    window=blk.attn.window, q_offset=0,
+                                    q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+            mix = jnp.einsum("bhsk,hkd->bsd", o, p["mixer"]["wo"],
+                             preferred_element_type=L._out_ptype()
+                             ).astype(x.dtype)
+            cache = {"k": k, "v": v}
+        else:
+            mix = L.attn_forward(p["mixer"], blk.attn, h, positions,
+                                 q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+    elif blk.kind == "mla":
+        mix, (c, kpe) = M.mla_forward(p["mixer"], blk.mla, h, positions,
+                                      q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+        if want_cache:
+            cache = {"c": c, "kpe": kpe}
+    elif blk.kind == "mamba2":
+        mix, (hf, conv) = S.mamba2_forward(p["mixer"], blk.mamba, h)
+        if want_cache:
+            cache = {"ssm": hf, "conv": conv}
+    elif blk.kind == "mlstm":
+        mix, hf = S.mlstm_forward(p["mixer"], blk.mlstm, h)
+        if want_cache:
+            cache = {"h": hf}
+    elif blk.kind == "slstm":
+        mix, st = S.slstm_forward(p["mixer"], blk.slstm, h)
+        if want_cache:
+            cache = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+    # "seq" resolves to () by default; the sequence-parallel hillclimb
+    # variant maps it to ("model",) so residuals live S-sharded and the TP
+    # partial-sum all-reduces become reduce-scatters (Megatron-SP).
+    x = constrain(x + mix, ("batch", "seq", None))
+    if "ffn" in p:
+        h2 = L.rmsnorm(p["norm2"], x)
+        if blk.moe is not None:
+            x = x + L.moe_forward(p["ffn"], blk.moe, h2)
+        else:
+            x = x + L.ffn_forward(p["ffn"], blk.ffn, h2)
+        x = constrain(x, ("batch", "seq", None))
+    return x, cache
+
+
+def _block_decode(p, blk: Block, cfg: ArchConfig, x, cache, cache_len):
+    """Single-token decode → (x, new_cache)."""
+    h = L.rmsnorm(p["norm1"], x)
+    if blk.kind == "attn":
+        mix, ck, cv = L.attn_decode(p["mixer"], blk.attn, h,
+                                    cache["k"], cache["v"], cache_len)
+        cache = {"k": ck, "v": cv}
+    elif blk.kind == "mla":
+        mix, cc, ckpe = M.mla_decode(p["mixer"], blk.mla, h,
+                                     cache["c"], cache["kpe"], cache_len)
+        cache = {"c": cc, "kpe": ckpe}
+    elif blk.kind == "mamba2":
+        mix, (hf, conv) = S.mamba2_decode(p["mixer"], blk.mamba, h,
+                                          (cache["ssm"], cache["conv"]))
+        cache = {"ssm": hf, "conv": conv}
+    elif blk.kind == "mlstm":
+        mix, hf = S.mlstm_decode(p["mixer"], blk.mlstm, h, cache["h"])
+        cache = {"h": hf}
+    elif blk.kind == "slstm":
+        mix, st = S.slstm_decode(p["mixer"], blk.slstm, h,
+                                 (cache["h"], cache["c"], cache["n"],
+                                  cache["m"]))
+        cache = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+    x = x + mix
+    if "ffn" in p:
+        h2 = L.rmsnorm(p["norm2"], x)
+        if blk.moe is not None:
+            x = x + L.moe_forward(p["ffn"], blk.moe, h2)
+        else:
+            x = x + L.ffn_forward(p["ffn"], blk.ffn, h2)
+    return x, cache
+
+
+def _block_cache_init(blk: Block, cfg: ArchConfig, batch: int, smax: int,
+                      dtype):
+    """Zero cache + logical PartitionSpecs for one block instance."""
+    if blk.kind == "attn":
+        a = blk.attn
+        shape = (batch, a.n_kv_heads, smax, a.d_head)
+        # shard kv-heads over tensor axis when divisible, else the seq axis
+        if a.n_kv_heads % 16 == 0:
+            spec = P("batch", "tensor", None, None)
+        else:
+            spec = P("batch", None, "tensor", None)
+        z = jnp.zeros(shape, dtype)
+        return {"k": z, "v": z}, {"k": spec, "v": spec}
+    if blk.kind == "mla":
+        m = blk.mla
+        c = jnp.zeros((batch, smax, m.kv_lora_rank), dtype)
+        kpe = jnp.zeros((batch, smax, m.d_rope), dtype)
+        return ({"c": c, "kpe": kpe},
+                {"c": P("batch", "tensor", None), "kpe": P("batch", "tensor", None)})
+    if blk.kind == "mamba2":
+        mb = blk.mamba
+        ssm = jnp.zeros((batch, mb.n_heads, mb.d_state, mb.head_dim), F32)
+        conv = jnp.zeros((batch, mb.conv_k - 1,
+                          mb.d_inner + 2 * mb.n_groups * mb.d_state), dtype)
+        return ({"ssm": ssm, "conv": conv},
+                {"ssm": P("batch", "tensor", None, None),
+                 "conv": P("batch", None, "tensor")})
+    if blk.kind == "mlstm":
+        ml = blk.mlstm
+        h = jnp.zeros((batch, ml.n_heads, ml.d_qk, ml.d_v + 1), F32)
+        return {"h": h}, {"h": P("batch", None, "tensor", None)}
+    if blk.kind == "slstm":
+        d = cfg.d_model
+        z = jnp.zeros((batch, d), F32)
+        sp = P("batch", "tensor")
+        return ({"h": z, "c": z, "n": z, "m": z},
+                {"h": sp, "c": sp, "n": sp, "m": sp})
+    raise ValueError(blk.kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig, dtype=F32):
+    """Returns (params, specs) — specs use logical axis names:
+    batch/vocab/embed/ffn/heads/kv/experts/lora/tensor."""
+    keys = jax.random.split(key, len(cfg.segments) + 4)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+
+    params["embed"] = (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                         dtype=F32) * 0.02).astype(dtype)
+    specs["embed"] = P("vocab", "embed")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab), dtype=F32)
+            / math.sqrt(cfg.d_model)).astype(dtype)
+        specs["lm_head"] = P("embed", "vocab")
+    if cfg.frontend == "frames":
+        params["frame_proj"] = (jax.random.normal(
+            keys[2], (cfg.d_frame, cfg.d_model), dtype=F32)
+            / math.sqrt(cfg.d_frame)).astype(dtype)
+        specs["frame_proj"] = P(None, "embed")
+    if cfg.frontend == "vlm":
+        params["patch_proj"] = (jax.random.normal(
+            keys[2], (cfg.d_patch, cfg.d_model), dtype=F32)
+            / math.sqrt(cfg.d_patch)).astype(dtype)
+        specs["patch_proj"] = P(None, "embed")
+
+    params["final_norm"], specs["final_norm"] = L.rmsnorm_init(cfg.d_model,
+                                                               dtype)
+
+    seg_params, seg_specs = [], []
+    for si, seg in enumerate(cfg.segments):
+        lkeys = jax.random.split(keys[3 + si], seg.repeat)
+
+        def one_layer(k, seg=seg):
+            ks = jax.random.split(k, len(seg.blocks))
+            lp, lsp = {}, {}
+            for bi, blk in enumerate(seg.blocks):
+                if blk.shared:
+                    continue
+                lp[f"b{bi}"], lsp[f"b{bi}"] = _block_init(ks[bi], blk, cfg,
+                                                          dtype)
+            return lp, lsp
+
+        stacked = jax.vmap(lambda k: one_layer(k)[0])(lkeys)
+        _, one_specs = one_layer(lkeys[0])
+        # prepend the stacking axis (None) to every leaf spec
+        stacked_specs = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))), one_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        seg_params.append(stacked)
+        seg_specs.append(stacked_specs)
+    params["segments"] = seg_params
+    specs["segments"] = seg_specs
+
+    if cfg.shared_block is not None:
+        params["shared"], specs["shared"] = _block_init(
+            keys[-1], cfg.shared_block, cfg, dtype)
+    return params, specs
+
+
+def cache_init(cfg: ArchConfig, batch: int, smax: int, dtype=jnp.bfloat16):
+    """Zero KV/state caches (+ logical specs) for decode."""
+    seg_caches, seg_specs = [], []
+    for seg in cfg.segments:
+        layer_c, layer_s = {}, {}
+        for bi, blk in enumerate(seg.blocks):
+            c, sp = _block_cache_init(blk, cfg, batch, smax, dtype)
+            layer_c[f"b{bi}"] = c
+            layer_s[f"b{bi}"] = sp
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (seg.repeat,) + x.shape),
+            layer_c)
+        stacked_s = jax.tree.map(
+            lambda sp: P(*((None,) + tuple(sp))), layer_s,
+            is_leaf=lambda x: isinstance(x, P))
+        seg_caches.append(stacked)
+        seg_specs.append(stacked_s)
+    return seg_caches, seg_specs
+
+
+def param_specs(cfg: ArchConfig):
+    """Logical PartitionSpec tree for the params — built abstractly (no
+    allocation; init runs under eval_shape, specs captured by side effect)."""
+    out = {}
+
+    def capture():
+        params, specs = init_params(jax.random.PRNGKey(0), cfg)
+        out["specs"] = specs
+        return params
+
+    jax.eval_shape(capture)
+    return out["specs"]
+
+
+def cache_init_specs(cfg: ArchConfig, batch: int, smax: int):
+    """Logical PartitionSpec tree for decode caches (abstract)."""
+    out = {}
+
+    def capture():
+        caches, specs = cache_init(cfg, batch, smax)
+        out["specs"] = specs
+        return caches
+
+    jax.eval_shape(capture)
+    return out["specs"]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ArchConfig, batch: dict, dtype):
+    """Frontends → (x (B,S,d), positions (B,S), label_mask)."""
+    if cfg.frontend == "tokens":
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        b, s_len = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+        mask = jnp.ones((b, s_len), bool)
+    elif cfg.frontend == "frames":
+        frames = batch["frames"].astype(dtype)
+        x = jnp.einsum("bsf,fd->bsd", frames, params["frame_proj"],
+                       preferred_element_type=F32).astype(dtype)
+        b, s_len = frames.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+        mask = jnp.ones((b, s_len), bool)
+    elif cfg.frontend == "vlm":
+        tokens = batch["tokens"]
+        img = batch["image_embeds"].astype(dtype)
+        ximg = jnp.einsum("bsf,fd->bsd", img, params["patch_proj"],
+                          preferred_element_type=F32).astype(dtype)
+        xtok = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        x = jnp.concatenate([ximg, xtok], axis=1)
+        b = tokens.shape[0]
+        s_len = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s_len), (b, s_len))
+        mask = jnp.concatenate(
+            [jnp.zeros((b, img.shape[1]), bool),
+             jnp.ones((b, tokens.shape[1]), bool)], axis=1)
+    else:
+        raise ValueError(cfg.frontend)
+    return constrain(x, ("batch", None, None)), positions, mask
+
+
+def backbone(params, cfg: ArchConfig, x, positions, want_cache: bool = False):
+    """Run the block program over a full sequence. Returns (x, caches)."""
+    all_caches = []
+    for si, seg in enumerate(cfg.segments):
+        seg_p = params["segments"][si]
+
+        def seg_body(x, layer_params, seg=seg):
+            caches = {}
+            for bi, blk in enumerate(seg.blocks):
+                bp = params["shared"] if blk.shared else layer_params[f"b{bi}"]
+                x, c = _block_forward(bp, blk, cfg, x, positions, want_cache)
+                if want_cache:
+                    caches[f"b{bi}"] = c
+            return x, (caches if want_cache else None)
+
+        body = seg_body
+        if cfg.remat:
+            body = jax.checkpoint(
+                seg_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, caches = jax.lax.scan(body, x, seg_p)
+        all_caches.append(caches)
+    x = L.rmsnorm(params["final_norm"], x)
+    return x, (all_caches if want_cache else None)
+
+
+def logits_for(params, cfg: ArchConfig, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype),
+                      preferred_element_type=F32)
+
+
+def chunked_xent(params, cfg: ArchConfig, x, labels, mask):
+    """Mean cross-entropy without materialising (B, S, vocab).
+
+    Scans over sequence chunks; each chunk's logits are formed, reduced to
+    (loss_sum, count), and dropped. Wrapped in remat by the caller's grad.
+    """
+    b, s_len, d = x.shape
+    c = min(cfg.loss_chunk, s_len)
+    nchunks = -(-s_len // c)
+    pad = nchunks * c - s_len
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+
+    def chunk(carry, inp):
+        xc, lc, mc = inp                                  # (B,c,d),(B,c),(B,c)
+        logits = constrain(
+            jnp.einsum("bsd,dv->bsv", xc, head, preferred_element_type=F32),
+            ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    xs = (xp.reshape(b, nchunks, c, d).transpose(1, 0, 2, 3),
+          lp.reshape(b, nchunks, c).transpose(1, 0, 2),
+          mp.reshape(b, nchunks, c).transpose(1, 0, 2))
+    fn = chunk
+    if cfg.remat:
+        fn = jax.checkpoint(chunk,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    (loss_sum, count), _ = jax.lax.scan(
+        fn, (jnp.zeros((), F32), jnp.zeros((), F32)), xs)
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def forward_loss(params, cfg: ArchConfig, batch: dict,
+                 compute_dtype=jnp.bfloat16):
+    """Training forward → scalar mean xent loss."""
+    x, positions, mask = _embed_inputs(params, cfg, batch, compute_dtype)
+    x, _ = backbone(params, cfg, x, positions)
+    labels = batch["labels"]
+    if cfg.frontend == "vlm":   # image positions carry no labels
+        pad = jnp.zeros((labels.shape[0], cfg.n_img_tokens), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = mask & (labels >= 0)
+    return chunked_xent(params, cfg, x, jnp.maximum(labels, 0), mask)
+
+
+def prefill(params, cfg: ArchConfig, batch: dict,
+            compute_dtype=jnp.bfloat16):
+    """Prefill forward → (last-token logits, stacked caches)."""
+    x, positions, _ = _embed_inputs(params, cfg, batch, compute_dtype)
+    x, caches = backbone(params, cfg, x, positions, want_cache=True)
+    logits = logits_for(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, cache_len,
+                compute_dtype=jnp.bfloat16):
+    """One decode step. token: (B, 1) int32; caches as from cache_init.
+    Returns (logits (B,1,V), new_caches)."""
+    x = jnp.take(params["embed"], token, axis=0).astype(compute_dtype)
+    new_caches = []
+    for si, seg in enumerate(cfg.segments):
+        seg_p = params["segments"][si]
+        seg_c = caches[si]
+
+        def seg_body(x, inp, seg=seg):
+            layer_params, layer_cache = inp
+            new_cache = {}
+            for bi, blk in enumerate(seg.blocks):
+                bp = params["shared"] if blk.shared else layer_params[f"b{bi}"]
+                x, c = _block_decode(bp, blk, cfg, x, layer_cache[f"b{bi}"],
+                                     cache_len)
+                new_cache[f"b{bi}"] = c
+            return x, new_cache
+
+        x, nc = jax.lax.scan(seg_body, x, (seg_p, seg_c))
+        new_caches.append(nc)
+    x = L.rmsnorm(params["final_norm"], x)
+    return logits_for(params, cfg, x), new_caches

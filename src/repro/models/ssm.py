@@ -1,0 +1,483 @@
+"""State-space / recurrent blocks: Mamba-2 (chunked SSD), mLSTM, sLSTM.
+
+All three share one computational core, :func:`ssd_chunked` — the "state
+space duality" chunked algorithm (Mamba-2 paper §6): a linear recurrence
+
+    h_t = exp(a_t)·h_{t-1} + k_t ⊗ v_t,      y_t = qᵀ_t·h_t
+
+evaluated as (quadratic-within-chunk  +  scanned inter-chunk states). This is
+O(S·Q) memory instead of O(S²), parallel over chunks, and maps to the MXU
+(the intra-chunk part is a masked attention-like matmul).
+
+  * Mamba-2:  k=B, q=C, v=x·dt, a=dt·A          (+ D skip, conv1d, gating)
+  * mLSTM:    k=k, q=q, v=v·i,  a=log f          (+ max-stabiliser, normaliser
+               as an extra value channel)
+  * sLSTM: true scalar-memory recurrence (block-diagonal recurrent weights) —
+    inherently sequential, run as a lax.scan over time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.pshard import constrain
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _norm(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, dtype=F32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(v, k, q, log_decay, *, chunk: int = 128, h0=None):
+    """Chunked linear-recurrence scan.
+
+    v: (B,S,H,Pv) values; k: (B,S,H,N) write keys; q: (B,S,H,N) read keys;
+    log_decay: (B,S,H) per-step log decay (≤ 0).
+    Returns (y: (B,S,H,Pv), h_final: (B,H,N,Pv)).
+    """
+    b, s, h, pv = v.shape
+    n = k.shape[-1]
+    chunk = min(chunk, s)
+    m = -(-s // chunk)
+    pad = m * chunk - s
+
+    def pad_t(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    # padded steps: decay 0 (log 1? no — exp(0)=1 keeps state; but k,v are 0 so
+    # state unchanged; y for pads is sliced off) → safe to pad log_decay with 0.
+    vp, kp, qp = pad_t(v), pad_t(k), pad_t(q)
+    ld = pad_t(log_decay)
+
+    vp = vp.reshape(b, m, chunk, h, pv).astype(F32)
+    kp = kp.reshape(b, m, chunk, h, n).astype(F32)
+    qp = qp.reshape(b, m, chunk, h, n).astype(F32)
+    ld = ld.reshape(b, m, chunk, h).astype(F32)
+    lcum = jnp.cumsum(ld, axis=2)                        # L_t within chunk
+    ltot = lcum[:, :, -1]                                # (B,M,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, pv), F32)
+
+    idx = jnp.arange(chunk)
+    tril = idx[:, None] >= idx[None, :]
+    out_dtype = v.dtype
+
+    @jax.checkpoint   # recompute intra-chunk tiles in bwd; save only h
+    def chunk_step(hprev, inp):
+        vc, kc, qc, lc, lt = inp                         # (B,chunk,H,·), lt (B,H)
+        # intra-chunk: scores[t,s] = (q_t·k_s)·exp(L_t − L_s), s ≤ t
+        sqk = jnp.einsum("bthn,bshn->bhts", qc, kc, preferred_element_type=F32)
+        dlog = lc.transpose(0, 2, 1)[:, :, :, None] - lc.transpose(0, 2, 1)[:, :, None, :]
+        dmat = jnp.where(tril[None, None], jnp.exp(dlog), 0.0)
+        y_intra = jnp.einsum("bhts,bshp->bthp", sqk * dmat, vc,
+                             preferred_element_type=F32)
+        # inter-chunk read of carried state
+        y_inter = jnp.einsum("bthn,bhnp->bthp", qc * jnp.exp(lc)[..., None],
+                             hprev, preferred_element_type=F32)
+        # chunk state summary and carry update
+        w = jnp.exp(lt[:, None, :] - lc)                 # decay s→chunk end
+        st = jnp.einsum("bshn,bshp->bhnp", kc * w[..., None], vc,
+                        preferred_element_type=F32)
+        hnew = hprev * jnp.exp(lt)[:, :, None, None] + st
+        return hnew, (y_intra + y_inter).astype(out_dtype)
+
+    inputs = (
+        vp.transpose(1, 0, 2, 3, 4),
+        kp.transpose(1, 0, 2, 3, 4),
+        qp.transpose(1, 0, 2, 3, 4),
+        lcum.transpose(1, 0, 2, 3),
+        ltot.transpose(1, 0, 2),
+    )
+    hfin, ys = jax.lax.scan(chunk_step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, m * chunk, h, pv)[:, :s]
+    return y, hfin
+
+
+def ssd_decode_step(hprev, v, k, q, log_decay):
+    """Single-token state update: h ← e^a·h + k⊗v; y = q·h.
+
+    hprev: (B,H,N,Pv); v: (B,H,Pv); k,q: (B,H,N); log_decay: (B,H)."""
+    hnew = (hprev * jnp.exp(log_decay.astype(F32))[:, :, None, None]
+            + jnp.einsum("bhn,bhp->bhnp", k.astype(F32), v.astype(F32)))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(F32), hnew)
+    return y.astype(v.dtype), hnew
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba stem)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, state=None):
+    """x: (B,S,C), w: (K,C) depthwise. Returns (y, new_state (B,K-1,C))."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_k: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key, spec: Mamba2Spec, dtype=F32):
+    d, di, n, hh = spec.d_model, spec.d_inner, spec.d_state, spec.n_heads
+    g = spec.n_groups
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * g * n + hh          # [z, x, B, C, dt]
+    p = {
+        "w_in": _norm(ks[0], (d, d_in_proj), 1 / math.sqrt(d), dtype),
+        "conv_w": _norm(ks[1], (spec.conv_k, di + 2 * g * n), 0.5, dtype),
+        "a_log": jnp.zeros((hh,), F32),          # A = −exp(a_log) ∈ (−∞,0)
+        "dt_bias": jnp.zeros((hh,), F32),
+        "d_skip": jnp.ones((hh,), F32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_out": _norm(ks[2], (di, d), 1 / math.sqrt(di), dtype),
+    }
+    s = {
+        "w_in": P("embed", "heads"),
+        "conv_w": P(None, "heads"),
+        "a_log": P(None),
+        "dt_bias": P(None),
+        "d_skip": P(None),
+        "norm_scale": P("heads"),
+        "w_out": P("heads", "embed"),
+    }
+    return p, s
+
+
+def _mamba2_split(spec: Mamba2Spec, zxbcdt):
+    di, n, g, hh = spec.d_inner, spec.d_state, spec.n_groups, spec.n_heads
+    z, xc, bc, cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+    return z, xc, bc, cc, dt
+
+
+def _gated_rmsnorm(x, z, scale):
+    xf = x.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(F32)).astype(x.dtype)
+
+
+def mamba2_forward(params, spec: Mamba2Spec, x, h0=None, conv0=None):
+    """x: (B,S,d) → (y, (ssm_state, conv_state))."""
+    b, s, _ = x.shape
+    hh, n, g, pd = spec.n_heads, spec.d_state, spec.n_groups, spec.head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"],
+                        preferred_element_type=F32).astype(x.dtype)
+    zxbcdt = constrain(zxbcdt, ("batch", None, "heads"))
+    z, xc, bc, cc, dt = _mamba2_split(spec, zxbcdt)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_out, conv_state = causal_conv1d(conv_in, params["conv_w"], conv0)
+    conv_out = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+    xc, bc, cc = jnp.split(conv_out, [spec.d_inner, spec.d_inner + g * n], -1)
+
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])       # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                  # (H,)
+    log_decay = dt * a[None, None, :]
+
+    xh = xc.reshape(b, s, hh, pd)
+    kb = bc.reshape(b, s, g, n)
+    qc = cc.reshape(b, s, g, n)
+    rep = hh // g
+    kb = jnp.repeat(kb, rep, axis=2)
+    qc = jnp.repeat(qc, rep, axis=2)
+    v = xh * dt[..., None].astype(x.dtype)
+
+    y, hfin = ssd_chunked(v, kb, qc, log_decay, chunk=spec.chunk, h0=h0)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, spec.d_inner)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, (hfin, conv_state)
+
+
+def mamba2_decode(params, spec: Mamba2Spec, x, state):
+    """Single-token decode. x: (B,1,d); state=(h (B,H,N,P), conv (B,K-1,C))."""
+    h0, conv0 = state
+    b = x.shape[0]
+    hh, n, g, pd = spec.n_heads, spec.d_state, spec.n_groups, spec.head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["w_in"],
+                        preferred_element_type=F32).astype(x.dtype)
+    z, xc, bc, cc, dt = _mamba2_split(spec, zxbcdt)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_out, conv_state = causal_conv1d(conv_in, params["conv_w"], conv0)
+    conv_out = jax.nn.silu(conv_out.astype(F32)).astype(x.dtype)
+    xc, bc, cc = jnp.split(conv_out, [spec.d_inner, spec.d_inner + g * n], -1)
+
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    log_decay = dt * a[None, :]
+    xh = xc.reshape(b, hh, pd)
+    kb = jnp.repeat(bc.reshape(b, g, n), hh // g, axis=1)
+    qc = jnp.repeat(cc.reshape(b, g, n), hh // g, axis=1)
+    v = xh * dt[..., None].astype(x.dtype)
+    y, hnew = ssd_decode_step(h0, v, kb, qc, log_decay)
+    y = y + xh * params["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, 1, spec.d_inner)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return out, (hnew, conv_state)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM) — matrix memory with exponential gating
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlstmSpec:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2
+    qk_factor: float = 0.5          # d_qk = qk_factor · d_v
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def d_v(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def d_qk(self) -> int:
+        return int(self.d_v * self.qk_factor)
+
+
+def mlstm_init(key, spec: MlstmSpec, dtype=F32):
+    d, di, h = spec.d_model, spec.d_inner, spec.n_heads
+    dqk, dv = spec.d_qk, spec.d_v
+    ks = jax.random.split(key, 6)
+    sc = 1 / math.sqrt(d)
+    p = {
+        "w_up": _norm(ks[0], (d, 2 * di), sc, dtype),           # [main, gate]
+        "wq": _norm(ks[1], (di, h, dqk), 1 / math.sqrt(di), dtype),
+        "wk": _norm(ks[2], (di, h, dqk), 1 / math.sqrt(di), dtype),
+        "wv": _norm(ks[3], (di, h, dv), 1 / math.sqrt(di), dtype),
+        "w_if": _norm(ks[4], (di, 2 * h), 1e-2, F32),           # i, f gates
+        "f_bias": jnp.full((h,), 3.0, F32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "w_down": _norm(ks[5], (di, d), 1 / math.sqrt(di), dtype),
+    }
+    s = {
+        "w_up": P("embed", "heads"), "wq": P(None, "heads", None),
+        "wk": P(None, "heads", None), "wv": P(None, "heads", None),
+        "w_if": P(None, "heads"), "f_bias": P(None),
+        "norm_scale": P("heads"), "w_down": P("heads", "embed"),
+    }
+    return p, s
+
+
+def _mlstm_gates(params, xm):
+    """Log-space stabilised exponential gating. Returns (log_i, log_f)."""
+    gi = jnp.einsum("bsd,dg->bsg", xm.astype(F32), params["w_if"],
+                    preferred_element_type=F32)
+    h = params["f_bias"].shape[0]
+    log_i = gi[..., :h]                                   # ĩ (pre-exp)
+    log_f = jax.nn.log_sigmoid(gi[..., h:] + params["f_bias"])
+    return log_i, log_f
+
+
+def mlstm_forward(params, spec: MlstmSpec, x, h0=None):
+    """x: (B,S,d) → (y, h_final). Chunked parallel mLSTM.
+
+    Stabilisation: fold the input gate into v (v·exp(ĩ − m̂)) with a running
+    per-head max m̂ ≈ max(ĩ) over the sequence (sufficient in practice for
+    the fp32 core; the normaliser channel keeps outputs scale-free).
+    """
+    b, s, _ = x.shape
+    h, dv, dqk = spec.n_heads, spec.d_v, spec.d_qk
+    up = constrain(jnp.einsum("bsd,de->bse", x, params["w_up"],
+                    preferred_element_type=F32).astype(x.dtype),
+                   ("batch", None, "heads"))
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = constrain(jnp.einsum("bse,ehk->bshk", xm, params["wq"],
+                   preferred_element_type=F32).astype(x.dtype),
+                  ("batch", None, "heads", None))
+    k = constrain(jnp.einsum("bse,ehk->bshk", xm, params["wk"],
+                   preferred_element_type=F32).astype(x.dtype),
+                  ("batch", None, "heads", None))
+    v = constrain(jnp.einsum("bse,ehk->bshk", xm, params["wv"],
+                   preferred_element_type=F32).astype(x.dtype),
+                  ("batch", None, "heads", None))
+    k = k / math.sqrt(dqk)
+    log_i, log_f = _mlstm_gates(params, xm)
+
+    mstab = jax.lax.stop_gradient(jnp.max(log_i, axis=1, keepdims=True))
+    gate = jnp.exp(log_i - mstab).astype(x.dtype)
+    vg = v * gate[..., None]
+    # normaliser as an extra value channel of ones
+    vaug = jnp.concatenate([vg, gate[..., None]], axis=-1)
+    y, hfin = ssd_chunked(vaug, k, q, log_f, chunk=spec.chunk, h0=h0)
+    yv, yn = y[..., :dv].astype(F32), y[..., dv:].astype(F32)
+    out = yv / jnp.maximum(jnp.abs(yn), 1e-6)
+    out = out.reshape(b, s, spec.d_inner)
+    out = _gated_rmsnorm(out.astype(x.dtype), z, params["norm_scale"])
+    return (jnp.einsum("bse,ed->bsd", out, params["w_down"],
+                       preferred_element_type=F32).astype(x.dtype), hfin)
+
+
+def mlstm_decode(params, spec: MlstmSpec, x, hstate):
+    """Single-token mLSTM step. hstate: (B,H,dqk,dv+1)."""
+    b = x.shape[0]
+    h, dv = spec.n_heads, spec.d_v
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"],
+                    preferred_element_type=F32).astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xm, params["wq"], preferred_element_type=F32)[:, 0]
+    k = jnp.einsum("bse,ehk->bshk", xm, params["wk"], preferred_element_type=F32)[:, 0]
+    v = jnp.einsum("bse,ehk->bshk", xm, params["wv"], preferred_element_type=F32)[:, 0]
+    k = k / math.sqrt(spec.d_qk)
+    log_i, log_f = _mlstm_gates(params, xm)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]               # (B,H)
+    vaug = jnp.concatenate([v * jnp.exp(log_i)[..., None],
+                            jnp.exp(log_i)[..., None]], axis=-1)
+    y, hnew = ssd_decode_step(hstate, vaug, k, q, log_f)
+    yv, yn = y[..., :dv].astype(F32), y[..., dv:].astype(F32)
+    out = (yv / jnp.maximum(jnp.abs(yn), 1e-6)).reshape(b, 1, spec.d_inner)
+    out = _gated_rmsnorm(out.astype(x.dtype), z, params["norm_scale"])
+    return (jnp.einsum("bse,ed->bsd", out, params["w_down"],
+                       preferred_element_type=F32).astype(x.dtype), hnew)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — scalar memory, true recurrence (lax.scan over time)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlstmSpec:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 4.0 / 3.0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_up(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+
+def slstm_init(key, spec: SlstmSpec, dtype=F32):
+    d, h, dh = spec.d_model, spec.n_heads, spec.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_gates": _norm(ks[0], (d, 4 * d), 1 / math.sqrt(d), dtype),
+        "r_gates": _norm(ks[1], (h, dh, 4 * dh), 1 / math.sqrt(dh), dtype),
+        "b_gates": jnp.zeros((4 * d,), F32),
+        "norm_scale": jnp.ones((d,), dtype),
+        "w_up": _norm(ks[2], (d, 2 * spec.d_up), 1 / math.sqrt(d), dtype),
+        "w_down": _norm(ks[3], (spec.d_up, d), 1 / math.sqrt(spec.d_up), dtype),
+    }
+    s = {
+        "w_gates": P("embed", "heads"), "r_gates": P("heads", None, None),
+        "b_gates": P(None), "norm_scale": P(None),
+        "w_up": P("embed", "ffn"), "w_down": P("ffn", "embed"),
+    }
+    return p, s
+
+
+def slstm_cell(params, spec: SlstmSpec, gates_x, state):
+    """One timestep. gates_x: (B, 4d) precomputed input contribution.
+    state = (h, c, n, m) each (B, d). Stabilised exponential gating."""
+    h, c, n, m = state
+    hh, dh, d = spec.n_heads, spec.d_head, spec.d_model
+    hr = h.reshape(-1, hh, dh)
+    rec = jnp.einsum("bhk,hkg->bhg", hr.astype(F32), params["r_gates"].astype(F32),
+                     preferred_element_type=F32).reshape(-1, 4 * d)
+    g = gates_x.astype(F32) + rec + params["b_gates"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_forward(params, spec: SlstmSpec, x, state0=None,
+                  time_chunk: int = 128):
+    """x: (B,S,d) → (y, final_state). Sequential scan over S.
+
+    Two-level scan: an outer checkpointed scan over chunks of
+    ``time_chunk`` steps bounds backward residuals to one chunk\'s worth
+    (otherwise a 4096-step scan saves per-step gate tensors)."""
+    b, s, d = x.shape
+    gates_x = constrain(jnp.einsum("bsd,dg->bsg", x, params["w_gates"],
+                         preferred_element_type=F32).astype(x.dtype),
+                        ("batch", None, "heads"))
+    if state0 is None:
+        z = jnp.zeros((b, d), F32)
+        state0 = (z, z, z, z)
+
+    def step(state, gx):
+        new = slstm_cell(params, spec, gx, state)
+        return new, new[0].astype(x.dtype)
+
+    tc = min(time_chunk, s)
+    nchunks = -(-s // tc)
+    pad = nchunks * tc - s
+    gpad = jnp.pad(gates_x, ((0, 0), (0, pad), (0, 0)))
+    gchunks = gpad.reshape(b, nchunks, tc, -1).transpose(1, 2, 0, 3)
+
+    @jax.checkpoint
+    def outer(state, gchunk):                  # gchunk: (tc, B, 4d)
+        return jax.lax.scan(step, state, gchunk)
+
+    state, hs = jax.lax.scan(outer, state0, gchunks)   # hs: (nc, tc, B, d)
+    y = hs.transpose(2, 0, 1, 3).reshape(b, nchunks * tc, d)[:, :s]
+    # post-cell norm + gated up/down projection (proj_factor 4/3)
+    yf = y.astype(F32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+    y = (yf * params["norm_scale"].astype(F32)).astype(x.dtype)
+    up = constrain(jnp.einsum("bsd,de->bse", y, params["w_up"],
+                    preferred_element_type=F32).astype(x.dtype),
+                   ("batch", None, None))
+    a, g = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(g.astype(F32), approximate=True).astype(x.dtype) * a
+    return (jnp.einsum("bse,ed->bsd", y, params["w_down"],
+                       preferred_element_type=F32).astype(x.dtype), state)
+
+
+def slstm_decode(params, spec: SlstmSpec, x, state):
+    y, st = slstm_forward(params, spec, x, state)
+    return y, st

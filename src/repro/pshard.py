@@ -1,0 +1,111 @@
+"""Logical-axis → mesh-axis resolution (MaxText-style sharding rules).
+
+Top-level module (no deps on models/ or train/) so both can import it.
+
+Models annotate parameters and caches with *logical* PartitionSpecs
+("embed", "vocab", "heads", …). This module maps them onto the physical
+mesh, dropping any axis whose dimension is not divisible by the assigned
+mesh-axis product (e.g. kv=4 heads cannot shard over tensor=16 — the rule
+falls back to replication for that dim and the divisible dims still shard).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# default logical → physical rules; first applicable wins per logical name
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),     # data parallel (across pods too)
+    "embed": ("data",),           # fsdp-style weight shard
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "lora": (),                   # replicated (small MLA bottleneck)
+    "tensor": ("model",),
+    "seq": (),                    # sequence sharding off by default
+}
+
+
+def physical_axes(mesh: Mesh, logical: str | None,
+                  rules: dict | None = None) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    rules = rules or DEFAULT_RULES
+    axes = rules.get(logical, ())
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def resolve_spec(mesh: Mesh, spec: P, shape: tuple[int, ...],
+                 rules: dict | None = None) -> P:
+    """Logical spec + concrete shape → physical spec (divisibility-checked)."""
+    out = []
+    for dim, logical in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        axes = physical_axes(mesh, logical, rules)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if axes and dim % size == 0:
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def resolve_tree(mesh: Mesh, spec_tree, shape_tree, rules=None):
+    """Map a tree of logical specs + matching tree of shapes → NamedShardings."""
+    is_spec = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda sp, shaped: NamedSharding(
+            mesh, resolve_spec(mesh, sp, shaped.shape, rules)),
+        spec_tree, shape_tree, is_leaf=is_spec)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style)
+# ---------------------------------------------------------------------------
+# Without explicit constraints GSPMD may resolve fsdp-weight × dp-activation
+# contractions by REPLICATING activations (observed: an 11.4 GB all-reduce of
+# a (256,4096,2730) f32 up-projection on the xlstm cell — see EXPERIMENTS.md
+# §Perf). Model code calls ``constrain(x, (<logical names>))`` on every large
+# intermediate; the mesh is registered by the step builders before tracing.
+
+_ACT_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None):
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def constrain(x, logical: tuple):
+    """with_sharding_constraint by logical axis names (no-op without mesh)."""
+    if _ACT_MESH is None:
+        return x
+    spec = resolve_spec(_ACT_MESH, P(*logical), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, spec))
+
+
+def batch_spec(mesh: Mesh, ndim: int, dim0: int | None = None) -> P:
+    """Batch sharding over (pod, data); degrades to the largest prefix whose
+    size divides dim0 (long_500k has global_batch=1 — fully replicated)."""
+    axes = list(batch_axes(mesh))
+    if dim0 is not None:
+        while axes:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim0 % size == 0:
+                break
+            axes.pop(0)          # drop "pod" first, then "data"
+    if not axes:
+        return P(*(None,) * ndim)
+    return P(tuple(axes) if len(axes) > 1 else axes[0],
+             *(None,) * (ndim - 1))

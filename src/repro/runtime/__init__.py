@@ -1,0 +1,1 @@
+from .elastic import ElasticConfig, RunReport, SimulatedFailure, run_elastic  # noqa: F401

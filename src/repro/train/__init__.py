@@ -1,0 +1,2 @@
+from . import sharding, steps  # noqa: F401
+from .steps import TrainConfig, TrainState, init_state, make_train_step  # noqa: F401

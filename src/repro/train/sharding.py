@@ -1,0 +1,12 @@
+"""Re-export of repro.pshard (kept for the train-layer import path)."""
+
+from repro.pshard import (  # noqa: F401
+    DEFAULT_RULES,
+    batch_axes,
+    batch_spec,
+    constrain,
+    physical_axes,
+    resolve_spec,
+    resolve_tree,
+    set_activation_mesh,
+)

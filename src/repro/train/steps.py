@@ -1,0 +1,163 @@
+"""Jitted train / prefill / decode step builders with full mesh sharding.
+
+``make_train_step`` returns the canonical production step:
+
+    state, metrics = step(state, batch)
+
+* params: fp32 masters, 2-D sharded (embed→data fsdp, tensor dims→model);
+  compute in bf16 (cast inside), f32 matmul accumulation.
+* gradient accumulation over ``accum_steps`` microbatches (lax.scan);
+  the data-parallel grad reduction runs in bf16 (gradient compression,
+  DESIGN §8) unless cfg fp32_grads.
+* remat (activation checkpointing) is configured at the model level
+  (ArchConfig.remat) — one policy per segment scan.
+
+``make_prefill_step`` / ``make_decode_step`` build the serving steps the
+decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.optim import adamw
+from . import sharding as SH
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    accum_steps: int = 1
+    compute_dtype: str = "bfloat16"
+    fp32_grads: bool = False          # True disables bf16 grad compression
+    opt: adamw.OptConfig = adamw.OptConfig()
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: adamw.AdamState
+    step: jax.Array
+
+
+def _cdtype(tc: TrainConfig):
+    return jnp.bfloat16 if tc.compute_dtype == "bfloat16" else F32
+
+
+def init_state(key, cfg: M.ArchConfig, tc: TrainConfig, mesh: Mesh | None = None):
+    """Initialise params (+ optimizer) and their NamedShardings."""
+    params, specs = M.init_params(key, cfg, dtype=F32)
+    opt = adamw.init(tc.opt, params)
+    state = TrainState(params=params, opt=opt,
+                       step=jnp.zeros((), jnp.int32))
+    if mesh is None:
+        return state, None
+    pshard = SH.resolve_tree(mesh, specs, params)
+    mom = jax.tree.map(lambda s: s, pshard)   # moments shard like params
+    rep = NamedSharding(mesh, P())
+    state_shard = TrainState(
+        params=pshard,
+        opt=adamw.AdamState(step=rep, m=mom, v=mom,
+                            err=None if opt.err is None else mom),
+        step=rep)
+    return state, state_shard
+
+
+def batch_shardings(mesh: Mesh, cfg: M.ArchConfig, shape_kind: str,
+                    batch_example: dict):
+    return {k: NamedSharding(mesh, SH.batch_spec(mesh, v.ndim))
+            for k, v in batch_example.items()}
+
+
+def make_train_step(cfg: M.ArchConfig, tc: TrainConfig, mesh: Mesh,
+                    state_shardings, batch_shardings_):
+    """Build the jitted, fully-sharded train step."""
+    cdt = _cdtype(tc)
+    SH.set_activation_mesh(mesh)
+
+    def loss_fn(params, micro):
+        cparams = jax.tree.map(lambda x: x.astype(cdt)
+                               if x.dtype == F32 and x.ndim > 1 else x, params)
+        return M.forward_loss(cparams, cfg, micro, compute_dtype=cdt)
+
+    def step(state: TrainState, batch: dict):
+        if tc.accum_steps > 1:
+            def micro_split(x):
+                b = x.shape[0]
+                mb = b // tc.accum_steps
+                return x.reshape(tc.accum_steps, mb, *x.shape[1:])
+            micros = jax.tree.map(micro_split, batch)
+
+            def accum(carry, micro):
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, micro)
+                if not tc.fp32_grads:
+                    grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16),
+                                         grads)
+                return (carry[0] + loss,
+                        jax.tree.map(jnp.add, carry[1], grads)), None
+
+            zg = jax.tree.map(
+                lambda p: jnp.zeros(p.shape,
+                                    F32 if tc.fp32_grads else jnp.bfloat16),
+                state.params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                accum, (jnp.zeros((), F32), zg), micros)
+            loss = loss_sum / tc.accum_steps
+            grads = jax.tree.map(lambda g: g.astype(F32) / tc.accum_steps,
+                                 grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+            if not tc.fp32_grads:
+                # bf16 reduction of the dp-psum (half the collective bytes)
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.bfloat16).astype(F32), grads)
+        new_params, new_opt, om = adamw.update(tc.opt, state.opt,
+                                               state.params, grads)
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return jax.jit(
+        step,
+        in_shardings=(state_shardings, batch_shardings_),
+        out_shardings=(state_shardings, NamedSharding(mesh, P())),
+        donate_argnums=(0,),
+    )
+
+
+def make_prefill_step(cfg: M.ArchConfig, tc: TrainConfig, mesh: Mesh,
+                      param_shardings, batch_shardings_):
+    cdt = _cdtype(tc)
+    SH.set_activation_mesh(mesh)
+
+    def step(params, batch):
+        cparams = jax.tree.map(lambda x: x.astype(cdt)
+                               if x.dtype == F32 and x.ndim > 1 else x, params)
+        return M.prefill(cparams, cfg, batch, compute_dtype=cdt)
+
+    return jax.jit(step, in_shardings=(param_shardings, batch_shardings_))
+
+
+def make_decode_step(cfg: M.ArchConfig, tc: TrainConfig, mesh: Mesh,
+                     param_shardings, cache_shardings, batch_sh):
+    cdt = _cdtype(tc)
+    SH.set_activation_mesh(mesh)
+    rep = NamedSharding(mesh, P())
+
+    def step(params, token, caches, cache_len):
+        cparams = jax.tree.map(lambda x: x.astype(cdt)
+                               if x.dtype == F32 and x.ndim > 1 else x, params)
+        return M.decode_step(cparams, cfg, token, caches, cache_len,
+                             compute_dtype=cdt)
+
+    return jax.jit(
+        step,
+        in_shardings=(param_shardings, batch_sh, cache_shardings, rep),
+        out_shardings=(None, cache_shardings),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,52 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see 1 device (assignment brief). Multi-device tests
+spawn subprocesses with their own flags (see test_distributed.py)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run `code` in a fresh python with N virtual devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess
+
+
+def small_problem(rng, n=40, p=200, nnz=8, corr=0.0, seed=0):
+    r = np.random.default_rng(seed)
+    if corr > 0:
+        base = r.standard_normal((n, p))
+        X = np.empty((n, p))
+        X[:, 0] = base[:, 0]
+        a = np.sqrt(1 - corr * corr)
+        for j in range(1, p):
+            X[:, j] = corr * X[:, j - 1] + a * base[:, j]
+    else:
+        X = r.standard_normal((n, p))
+    beta = np.zeros(p)
+    idx = r.choice(p, nnz, replace=False)
+    beta[idx] = r.uniform(-1, 1, nnz)
+    y = X @ beta + 0.1 * r.standard_normal(n)
+    return X, y, beta

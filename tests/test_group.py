@@ -1,0 +1,102 @@
+"""Group-Lasso solver + group-EDPP screening (paper §3)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GroupPathConfig, group_edpp_mask, group_fista,
+                        group_lambda_max, group_lasso_path,
+                        group_spectral_norms, group_state_at_lambda_max,
+                        lambda_grid, make_group_dual_state)
+
+from ref_lasso import fista_group
+
+
+def _make(n=40, p=120, m=4, active=4, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    g = p // m
+    beta = np.zeros(p)
+    for gi in rng.choice(g, active, replace=False):
+        beta[gi * m:(gi + 1) * m] = rng.uniform(-1, 1, m)
+    y = X @ beta + 0.1 * rng.standard_normal(n)
+    return X, y
+
+
+@pytest.mark.parametrize("frac", [0.7, 0.4, 0.15])
+def test_group_fista_matches_oracle(frac):
+    X, y = _make()
+    m = 4
+    Xf, yf = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
+    lmax = float(group_lambda_max(Xf, yf, m))
+    lam = frac * lmax
+    oracle = fista_group(X, y, lam, m)
+    res = group_fista(Xf, yf, lam, m, max_iter=20000, tol=1e-9)
+    np.testing.assert_allclose(np.asarray(res.beta), oracle, rtol=5e-3,
+                               atol=5e-4)
+
+
+def test_group_lambda_max_is_threshold():
+    X, y = _make(seed=1)
+    m = 4
+    Xf, yf = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
+    lmax = float(group_lambda_max(Xf, yf, m))
+    above = fista_group(X, y, lmax * 1.01, m)
+    assert np.allclose(above, 0)
+    below = fista_group(X, y, lmax * 0.95, m)
+    assert not np.allclose(below, 0)
+
+
+def test_group_spectral_norms_exact():
+    X, _ = _make(seed=2)
+    m = 4
+    norms = np.asarray(group_spectral_norms(jnp.asarray(X, jnp.float32), m))
+    for g in range(X.shape[1] // m):
+        ref = np.linalg.norm(X[:, g * m:(g + 1) * m], 2)
+        np.testing.assert_allclose(norms[g], ref, rtol=1e-4)
+
+
+@pytest.mark.parametrize("frac", [0.8, 0.5, 0.2])
+def test_group_edpp_safety(frac):
+    """Corollary 21: no active group discarded (safe)."""
+    X, y = _make(seed=3)
+    m = 4
+    Xf, yf = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
+    lmax = float(group_lambda_max(Xf, yf, m))
+    lam = frac * lmax
+    oracle = fista_group(X, y, lam, m)
+    gnorms = np.linalg.norm(oracle.reshape(-1, m), axis=1)
+    active = gnorms > 1e-8
+    state = group_state_at_lambda_max(Xf, yf, m)
+    mask = np.asarray(group_edpp_mask(Xf, yf, lam, state, m))
+    assert not np.any(mask & active)
+
+
+def test_group_edpp_sequential_safety():
+    X, y = _make(seed=4)
+    m = 4
+    Xf, yf = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
+    lmax = float(group_lambda_max(Xf, yf, m))
+    beta0 = fista_group(X, y, 0.5 * lmax, m)
+    oracle = fista_group(X, y, 0.3 * lmax, m)
+    active = np.linalg.norm(oracle.reshape(-1, m), axis=1) > 1e-8
+    state = make_group_dual_state(Xf, yf, jnp.asarray(beta0, jnp.float32),
+                                  0.5 * lmax, lmax, m)
+    mask = np.asarray(group_edpp_mask(Xf, yf, 0.3 * lmax, state, m))
+    assert not np.any(mask & active)
+
+
+@pytest.mark.parametrize("rule", ["edpp", "strong"])
+def test_group_path_agrees(rule):
+    X, y = _make(seed=5)
+    m = 4
+    Xf, yf = jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32)
+    lmax = float(group_lambda_max(Xf, yf, m))
+    grid = lambda_grid(lmax, num=8)
+    ref = group_lasso_path(X, y, m, grid,
+                           GroupPathConfig(rule="none", solver_tol=1e-10))
+    res = group_lasso_path(X, y, m, grid,
+                           GroupPathConfig(rule=rule, solver_tol=1e-10))
+    np.testing.assert_allclose(res.betas, ref.betas, atol=1e-3)
+    # screening actually fires
+    assert sum(s.n_discarded for s in res.stats) > 0

@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 128), (60, 300), (128, 512), (100, 1000), (7, 130), (256, 131)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_edpp_screen_kernel(shape, dtype):
+    n, p = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    c = jnp.asarray(rng.standard_normal(n), dtype)
+    rho = 0.37
+    s_ref, ss_ref = ref.edpp_screen_ref(X, c, rho)
+    mask, s, ss = ops.edpp_screen(X, c, rho, interpret=True)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ss_ref), **_tol(dtype))
+    # mask consistent with scores
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  np.asarray(s) < 1.0 - 1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_screen_matvec_kernel(shape):
+    n, p = shape
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    dot = ops.screen_matvec(X, c, interpret=True)
+    np.testing.assert_allclose(np.asarray(dot),
+                               np.asarray(ref.screen_matvec_ref(X, c)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m", [2, 5, 10])
+@pytest.mark.parametrize("shape", [(60, 300), (100, 1000)])
+def test_group_screen_kernel(shape, m):
+    n, p = shape
+    if p % m:
+        pytest.skip("group size must divide p")
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    gs = ops.group_screen_scores(X, c, m, interpret=True)
+    np.testing.assert_allclose(np.asarray(gs),
+                               np.asarray(ref.group_screen_ref(X, c, m)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("p", [64, 777, 4096])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_prox_step_kernel(p, dtype):
+    rng = np.random.default_rng(3)
+    z = jnp.asarray(rng.standard_normal(p), dtype)
+    g = jnp.asarray(rng.standard_normal(p), dtype)
+    b = jnp.asarray(rng.standard_normal(p), dtype)
+    bn_ref, zn_ref = ref.prox_step_ref(z, g, b, 0.01, 2.5, 0.6)
+    bn, zn = ops.prox_step(z, g, b, 0.01, 2.5, 0.6, interpret=True)
+    np.testing.assert_allclose(np.asarray(bn, np.float32),
+                               np.asarray(bn_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(zn, np.float32),
+                               np.asarray(zn_ref, np.float32), **_tol(dtype))
+
+
+def test_kernel_screening_matches_rule():
+    """Kernel-based screening decision == reference edpp_mask decision."""
+    from repro.core import DualState, edpp_mask, lambda_max, v2_perp
+    rng = np.random.default_rng(4)
+    n, p = 50, 400
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    lmax = float(lambda_max(X, y))
+    lam = 0.5 * lmax
+    state = DualState.at_lambda_max(X, y)
+    vp = v2_perp(y, lam, state)
+    centre = state.theta + 0.5 * vp
+    rho = 0.5 * float(jnp.linalg.norm(vp))
+    mask_k, _, _ = ops.edpp_screen(X, centre, rho, interpret=True)
+    mask_ref = edpp_mask(X, y, lam, state)
+    np.testing.assert_array_equal(np.asarray(mask_k), np.asarray(mask_ref))

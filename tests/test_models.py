@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (assignment deliverable f): reduced config
+of the same family, one forward/train step on CPU, output shapes + no NaNs.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import model as M
+
+ARCHS = list(configs.ARCHS)
+
+
+def _batch(cfg, b=2, s=32):
+    if cfg.frontend == "tokens":
+        return {"tokens": jnp.full((b, s), 3, jnp.int32),
+                "labels": jnp.ones((b, s), jnp.int32)}
+    if cfg.frontend == "frames":
+        return {"frames": jnp.full((b, s, cfg.d_frame), 0.1, jnp.float32),
+                "labels": jnp.ones((b, s), jnp.int32)}
+    st = s - cfg.n_img_tokens
+    return {"tokens": jnp.full((b, st), 3, jnp.int32),
+            "image_embeds": jnp.full((b, cfg.n_img_tokens, cfg.d_patch),
+                                     0.1, jnp.float32),
+            "labels": jnp.ones((b, st), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_no_nans(arch):
+    cfg = configs.get_tiny(arch)
+    params, specs = M.init_params(jax.random.PRNGKey(0), cfg)
+    loss = M.forward_loss(params, cfg, _batch(cfg),
+                          compute_dtype=jnp.float32)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    # spec tree mirrors param tree
+    assert (jax.tree.structure(jax.tree.map(lambda _: 0, params))
+            == jax.tree.structure(jax.tree.map(lambda _: 0, specs,
+                                               is_leaf=lambda x: not isinstance(x, dict) and not isinstance(x, list))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_gradient_correctness_and_descent(arch):
+    """The gradient of every block type is correct: the finite-difference
+    directional derivative along −g must equal −‖g‖² (to fp32 tolerance),
+    and an infinitesimally-normalised step must reduce the loss. (A fixed
+    LR is NOT a descent guarantee — zamba2's exp-gated SSD has very sharp
+    curvature, observed nonmonotone at η·‖g‖ ≈ 3e-3.)"""
+    cfg = configs.get_tiny(arch)
+    params, _ = M.init_params(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg)
+
+    def loss_fn(p):
+        return M.forward_loss(p, cfg, batch, compute_dtype=jnp.float32)
+
+    l0, g = jax.value_and_grad(loss_fn)(params)
+    for leaf in jax.tree.leaves(g):
+        assert np.all(np.isfinite(np.asarray(leaf))), arch
+    gnorm = float(jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                               for x in jax.tree.leaves(g))))
+    assert gnorm > 1e-6, arch
+    eps = 1e-4 / gnorm
+    params2 = jax.tree.map(lambda p, gg: p - eps * gg, params, g)
+    l1 = float(loss_fn(params2))
+    fd = (l1 - float(l0)) / eps
+    # directional derivative ≈ −‖g‖² (autodiff vs finite differences)
+    assert abs(fd + gnorm**2) < 0.25 * gnorm**2 + 1e-3, (arch, fd, -gnorm**2)
+    assert l1 < float(l0), (arch, float(l0), l1)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not configs.get_tiny(a).encoder_only])
+def test_prefill_decode_shapes(arch):
+    cfg = configs.get_tiny(arch)
+    params, _ = M.init_params(jax.random.PRNGKey(2), cfg)
+    b, s = 2, 16
+    if cfg.frontend == "vlm":
+        batch = {"tokens": jnp.full((b, s), 3, jnp.int32),
+                 "image_embeds": jnp.full((b, cfg.n_img_tokens, cfg.d_patch),
+                                          0.1, jnp.float32)}
+    else:
+        batch = {"tokens": jnp.full((b, s), 3, jnp.int32)}
+    logits, caches = M.prefill(params, cfg, batch, compute_dtype=jnp.float32)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    dc, _ = M.cache_init(cfg, b, 32, dtype=jnp.float32)
+    lg, dc = M.decode_step(params, cfg, jnp.full((b, 1), 5, jnp.int32), dc,
+                           jnp.asarray(7), compute_dtype=jnp.float32)
+    assert lg.shape == (b, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-lite-16b",
+                                  "zamba2-1.2b", "xlstm-350m", "gemma3-4b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward logits —
+    the KV-cache/state path is numerically consistent with training.
+
+    MoE note: capacity-factor routing drops tokens relative to group size,
+    which legitimately differs between a 12-token prefill group and
+    single-token decode groups. We raise the capacity factor to the dropless
+    regime so the comparison isolates the cache path (the drop semantics
+    themselves are covered by the smoke tests)."""
+    import dataclasses as dc
+    cfg = configs.get_tiny(arch)
+    if any(blk.moe is not None for seg in cfg.segments for blk in seg.blocks):
+        segs = []
+        for seg in cfg.segments:
+            blocks = tuple(
+                dc.replace(blk, moe=dc.replace(blk.moe, capacity_factor=8.0))
+                if blk.moe is not None else blk
+                for blk in seg.blocks)
+            segs.append(dc.replace(seg, blocks=blocks))
+        cfg = dc.replace(cfg, segments=tuple(segs))
+    params, _ = M.init_params(jax.random.PRNGKey(3), cfg)
+    b, s = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, cfg.vocab)
+
+    # full forward logits at every position
+    from repro.models.model import _embed_inputs, backbone, logits_for
+    x, pos, _ = _embed_inputs(params, cfg, {"tokens": toks}, jnp.float32)
+    h, _ = backbone(params, cfg, x, pos)
+    full_logits = np.asarray(logits_for(params, cfg, h))     # (b, s, V)
+
+    # decode token by token
+    caches, _ = M.cache_init(cfg, b, s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, caches = M.decode_step(params, cfg, toks[:, t:t + 1], caches,
+                                   jnp.asarray(t), compute_dtype=jnp.float32)
+        outs.append(np.asarray(lg)[:, 0])
+    dec_logits = np.stack(outs, axis=1)
+    np.testing.assert_allclose(dec_logits, full_logits, rtol=2e-2, atol=2e-2)
+
+
+def test_cache_specs_match_struct():
+    from jax.sharding import PartitionSpec
+    for arch in ["yi-9b", "zamba2-1.2b", "xlstm-350m"]:
+        cfg = configs.get_tiny(arch)
+        caches, specs = M.cache_init(cfg, 2, 16)
+        flat_c = jax.tree.leaves(caches)
+        flat_s = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+        assert len(flat_c) == len(flat_s)

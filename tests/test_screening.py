@@ -1,0 +1,144 @@
+"""Screening-rule correctness against the paper's theorems."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (DualState, PathConfig, dome_mask, dpp_mask, edpp_mask,
+                        imp1_mask, imp2_mask, lambda_grid, lambda_max,
+                        lasso_path, make_dual_state, safe_mask, seq_safe_mask,
+                        strong_mask, v2_perp)
+
+from conftest import small_problem
+from ref_lasso import cd_lasso
+
+SAFE_MASKS = {
+    "dpp": dpp_mask, "imp1": imp1_mask, "imp2": imp2_mask,
+    "edpp": edpp_mask, "seq_safe": seq_safe_mask,
+}
+
+
+def _setup(seed=0, n=40, p=150):
+    X, y, _ = small_problem(None, n=n, p=p, seed=seed)
+    Xf = jnp.asarray(X, jnp.float32)
+    yf = jnp.asarray(y, jnp.float32)
+    lmax = float(lambda_max(Xf, yf))
+    return X, y, Xf, yf, lmax
+
+
+@pytest.mark.parametrize("rule", list(SAFE_MASKS))
+@pytest.mark.parametrize("frac", [0.9, 0.5, 0.1])
+def test_safe_rules_from_lmax_state(rule, frac):
+    """From the exact λ_max state, no rule discards an oracle-active feature
+    (safety, Theorems 3/11/14/16)."""
+    X, y, Xf, yf, lmax = _setup()
+    lam = frac * lmax
+    oracle = cd_lasso(X, y, lam)
+    active = np.abs(oracle) > 1e-10
+    state = DualState.at_lambda_max(Xf, yf)
+    mask = np.asarray(SAFE_MASKS[rule](Xf, yf, lam, state))
+    assert not np.any(mask & active), f"{rule} discarded an active feature"
+
+
+@pytest.mark.parametrize("frac0,frac1", [(0.7, 0.5), (0.5, 0.3), (0.3, 0.1)])
+def test_safe_rules_sequential_state(frac0, frac1):
+    """Safety with the sequential state built from the *exact* previous
+    solution (Corollary 17 regime)."""
+    X, y, Xf, yf, lmax = _setup(seed=1)
+    beta0 = cd_lasso(X, y, frac0 * lmax)
+    oracle = cd_lasso(X, y, frac1 * lmax)
+    active = np.abs(oracle) > 1e-10
+    state = make_dual_state(Xf, yf, jnp.asarray(beta0, jnp.float32),
+                            frac0 * lmax, lmax)
+    for rule, fn in SAFE_MASKS.items():
+        mask = np.asarray(fn(Xf, yf, frac1 * lmax, state))
+        assert not np.any(mask & active), rule
+
+
+def test_edpp_dominates_family():
+    """(R1'): tighter Θ ⇒ more discards. EDPP ≥ Imp1 ≥ DPP and
+    EDPP ≥ Imp2 ≥ DPP in discard count (paper §2.3.3)."""
+    X, y, Xf, yf, lmax = _setup(seed=2, p=300)
+    beta0 = cd_lasso(X, y, 0.5 * lmax)
+    state = make_dual_state(Xf, yf, jnp.asarray(beta0, jnp.float32),
+                            0.5 * lmax, lmax)
+    lam = 0.35 * lmax
+    counts = {r: int(np.asarray(fn(Xf, yf, lam, state)).sum())
+              for r, fn in SAFE_MASKS.items()}
+    assert counts["edpp"] >= counts["imp1"] >= counts["dpp"]
+    assert counts["edpp"] >= counts["imp2"] >= counts["dpp"]
+
+
+def test_v2perp_orthogonal_and_smaller():
+    """Eq. (19): v₂⊥ ⊥ v₁ and ‖v₂⊥‖ ≤ ‖v₂‖ ≤ |1/λ−1/λ₀|·‖y‖ at λ₀=λmax."""
+    X, y, Xf, yf, lmax = _setup(seed=3)
+    state = DualState.at_lambda_max(Xf, yf)
+    lam = 0.4 * lmax
+    vp = v2_perp(yf, lam, state)
+    v1 = state.v1
+    dot = float(jnp.dot(vp, v1))
+    assert abs(dot) < 1e-3 * float(jnp.linalg.norm(vp)
+                                   * jnp.linalg.norm(v1) + 1e-9)
+    dpp_radius = (1 / lam - 1 / lmax) * float(jnp.linalg.norm(yf))
+    assert float(jnp.linalg.norm(vp)) <= dpp_radius + 1e-5
+
+
+def test_basic_rules_safety():
+    X, y, Xf, yf, lmax = _setup(seed=4)
+    # dome requires normalised features for its paper setting; our closed
+    # form is norm-free but normalise anyway for parity
+    Xn = X / np.linalg.norm(X, axis=0, keepdims=True)
+    yn = y / np.linalg.norm(y)
+    Xnf, ynf = jnp.asarray(Xn, jnp.float32), jnp.asarray(yn, jnp.float32)
+    lmax_n = float(lambda_max(Xnf, ynf))
+    for frac in [0.8, 0.4, 0.1]:
+        lam = frac * lmax_n
+        oracle = cd_lasso(Xn, yn, lam)
+        active = np.abs(oracle) > 1e-10
+        for name, mask in [
+            ("safe", safe_mask(Xnf, ynf, lam, lmax_n)),
+            ("dome", dome_mask(Xnf, ynf, lam, lmax_n)),
+        ]:
+            m = np.asarray(mask)
+            assert not np.any(m & active), (name, frac)
+
+
+def test_dome_tighter_than_safe():
+    """The dome is a subset of ST1's sphere ⇒ discards at least as much."""
+    X, y, Xf, yf, lmax = _setup(seed=5, p=250)
+    Xn = X / np.linalg.norm(X, axis=0, keepdims=True)
+    yn = y / np.linalg.norm(y)
+    Xnf, ynf = jnp.asarray(Xn, jnp.float32), jnp.asarray(yn, jnp.float32)
+    lmax_n = float(lambda_max(Xnf, ynf))
+    for frac in [0.7, 0.4]:
+        lam = frac * lmax_n
+        n_safe = int(np.asarray(safe_mask(Xnf, ynf, lam, lmax_n)).sum())
+        n_dome = int(np.asarray(dome_mask(Xnf, ynf, lam, lmax_n)).sum())
+        assert n_dome >= n_safe
+
+
+def test_trivial_region():
+    """λ ≥ λ_max ⇒ β* = 0 (eq. 8) and the path driver shortcuts it."""
+    X, y, Xf, yf, lmax = _setup(seed=6)
+    res = lasso_path(X, y, [1.5 * lmax, lmax * 1.0001], PathConfig())
+    assert np.all(res.betas == 0)
+
+
+@pytest.mark.parametrize("rule", ["edpp", "dpp", "imp1", "imp2", "seq_safe",
+                                  "strong", "safe", "dome"])
+def test_path_agrees_with_unscreened(rule):
+    """End-to-end: screened path == unscreened path for every rule."""
+    X, y, Xf, yf, lmax = _setup(seed=7, n=30, p=120)
+    grid = lambda_grid(lmax, num=12)
+    ref = lasso_path(X, y, grid, PathConfig(rule="none", solver_tol=1e-10))
+    res = lasso_path(X, y, grid, PathConfig(rule=rule, solver_tol=1e-10))
+    np.testing.assert_allclose(res.betas, ref.betas, atol=5e-4)
+
+
+def test_strong_rule_kkt_loop_runs():
+    """The heuristic strong rule must pass through the KKT check machinery
+    (rounds counter present; final solution correct)."""
+    X, y, Xf, yf, lmax = _setup(seed=8)
+    grid = lambda_grid(lmax, num=10)
+    res = lasso_path(X, y, grid, PathConfig(rule="strong", solver_tol=1e-10))
+    assert all(s.kkt_rounds >= 0 for s in res.stats)

@@ -1,0 +1,154 @@
+"""§Perf hillclimb runner: lower a cell under a named variant (config/step
+patches), record roofline deltas vs baseline into results/perf/.
+
+    PYTHONPATH=src python tools/hillclimb.py <cell> <variant>
+
+Cells and variants are defined in VARIANTS below; each entry carries the
+hypothesis text that goes into the §Perf log verbatim.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.launch import dryrun  # noqa: E402
+from repro.train import steps as ST  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+PERF_DIR = os.path.join(REPO, "results", "perf")
+
+# cell → variant → (hypothesis, run kwargs)
+VARIANTS = {
+    "nemotron-4-340b/train_4k": {
+        "baseline": ("paper-faithful framework defaults (remat on, bf16 "
+                     "grads, fp32 moments, no microbatching)", {}),
+        "accum8": ("activation peak scales ~1/accum_steps: 8 microbatches "
+                   "should cut the activation share of the 700+GB peak ~8x "
+                   "while FLOPs stay constant (memory term: bytes dominated "
+                   "by activations, so expect large peak drop, small bytes "
+                   "drop)",
+                   dict(tc=ST.TrainConfig(accum_steps=8))),
+        "accum8_bf16mom": ("optimizer moments in bf16 halve optimizer bytes "
+                           "(10.6GB→5.3GB/chip for 340B over 256 chips) on "
+                           "top of accum8",
+                           dict(tc=ST.TrainConfig(
+                               accum_steps=8,
+                               opt=adamw.OptConfig(
+                                   moment_dtype="bfloat16")))),
+        "accum8_chunk2k": ("bigger attention k-chunks (1024→2048) halve the "
+                           "number of flash passes ⇒ fewer HBM round-trips "
+                           "of q tiles; expect memory-bytes term down a few "
+                           "per cent, peak up slightly",
+                           dict(tc=ST.TrainConfig(accum_steps=8),
+                                cfg_patch=dict(k_chunk=2048,
+                                               q_chunk=1024))),
+        "accum8_bf16psum": ("the 4.8TB/dev of all-reduce is f32 TP "
+                            "partial sums of (B,S,d) per layer; emitting "
+                            "the out-projection dots in bf16 halves every "
+                            "reduction byte → collective term ~×0.5",
+                            dict(tc=ST.TrainConfig(accum_steps=8),
+                                 bf16_reductions=True)),
+        "best_2pod": ("the fit configuration: 2 pods (512 chips) + accum8 "
+                      "+ bf16 moments + sequence-parallel residuals — "
+                      "per-chip params/optimizer halve vs single pod and "
+                      "activations halve with them; target: peak/dev "
+                      "approaching HBM",
+                      dict(tc=ST.TrainConfig(
+                               accum_steps=8,
+                               opt=adamw.OptConfig(
+                                   moment_dtype="bfloat16")),
+                           bf16_reductions=True, seq_parallel=True,
+                           multi_pod=True)),
+        "accum8_bf16psum_seqpar": ("Megatron sequence parallelism: shard "
+                                   "the residual stream over the model "
+                                   "axis so TP all-reduces (2·|x| bytes) "
+                                   "become reduce-scatter+all-gather pairs "
+                                   "(~2·|x|·15/16) AND per-chip activation "
+                                   "peak drops another ~16x on the "
+                                   "residual/norm path",
+                                   dict(tc=ST.TrainConfig(accum_steps=8),
+                                        bf16_reductions=True,
+                                        seq_parallel=True)),
+    },
+    "codeqwen1.5-7b/prefill_32k": {
+        "baseline": ("serving with the training sharding rules (fsdp "
+                     "weights over data axis) — every layer re-all-gathers "
+                     "its weights across 16 data shards", {}),
+        "tp_serve": ("serving weights should be tensor-sharded only "
+                     "(replicated over data): 7B bf16 /16 model shards = "
+                     "0.9GB/chip replicated is affordable and removes ALL "
+                     "per-layer weight all-gathers → collective term should "
+                     "drop by the weight-gather bytes",
+                     dict(serve_tp_only=True)),
+        "tp_bf16psum": ("prefill's 139GB/dev all-reduce is the f32 TP "
+                        "partial sums; bf16 reductions halve it",
+                        dict(serve_tp_only=True, bf16_reductions=True)),
+        "tp_bf16_seqpar": ("sequence-parallel residuals on top: "
+                           "reduce-scatter instead of all-reduce for the "
+                           "out-projections, S-sharded norms",
+                           dict(serve_tp_only=True, bf16_reductions=True,
+                                seq_parallel=True)),
+    },
+    "lasso-screen-16m/lasso": {
+        "baseline": ("paper-faithful screening: residual matvec (pass 1 "
+                     "over X), score matvec (pass 2), column norms "
+                     "(pass 3) — 3 HBM passes over the 2.1GB/chip shard",
+                     {}),
+        "cached_norms": ("column norms are λ-independent: cache them across "
+                         "the path → 2 passes, memory term ×2/3",
+                         dict(lasso_variant="cached_norms")),
+        "sparse_residual": ("beyond-paper: β is sparse after screening, so "
+                            "the residual matvec touches only active "
+                            "columns (~1/16 of X at ≥94%% rejection); with "
+                            "cached norms, total HBM traffic ≈ 1.06 X "
+                            "passes → memory term ≈ baseline/3",
+                            dict(lasso_variant="sparse_residual")),
+    },
+}
+
+
+def run(cell: str, variant: str):
+    arch, shape = cell.split("/")
+    hyp, kw = VARIANTS[cell][variant]
+    kw = dict(kw)
+    multi_pod = kw.pop("multi_pod", False)
+    lasso_variant = kw.pop("lasso_variant", None)
+    serve_tp_only = kw.pop("serve_tp_only", False)
+    bf16_reductions = kw.pop("bf16_reductions", False)
+    seq_parallel = kw.pop("seq_parallel", False)
+
+    from repro import pshard
+    if serve_tp_only:
+        pshard.DEFAULT_RULES = dict(pshard.DEFAULT_RULES, embed=())
+    if seq_parallel:
+        pshard.DEFAULT_RULES = dict(pshard.DEFAULT_RULES, seq=("model",))
+    if bf16_reductions:
+        from repro.models import layers
+        layers.BF16_REDUCTIONS = True
+    if lasso_variant:
+        from repro.core import distributed as D
+        dryrun.LASSO_CELLS[arch]["variant"] = lasso_variant
+
+    rec = dryrun.run_cell(arch, shape, multi_pod=multi_pod, tag=variant,
+                          **kw)
+    rec["hypothesis"] = hyp
+    os.makedirs(PERF_DIR, exist_ok=True)
+    out = os.path.join(PERF_DIR, f"{arch}__{shape}__{variant}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    rl = rec["roofline"]
+    print(f"{cell} [{variant}]")
+    print(f"  hypothesis: {hyp}")
+    print(f"  t_comp={rl['t_compute_s']:.3e} t_mem={rl['t_memory_s']:.3e} "
+          f"t_coll={rl['t_collective_s']:.3e} dom={rl['dominant']} "
+          f"peak={rec['memory']['peak_per_device_gb']:.2f}GB")
+    return rec
+
+
+if __name__ == "__main__":
+    run(sys.argv[1], sys.argv[2])

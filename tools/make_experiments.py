@@ -1,0 +1,152 @@
+"""Assemble EXPERIMENTS.md §Dry-run + §Roofline tables from
+results/dryrun/*.json. §Repro (paper-claims validation) and §Perf
+(hillclimb log) are maintained by hand in the template below and merged.
+
+    PYTHONPATH=src python tools/make_experiments.py
+"""
+
+import glob
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN = os.path.join(REPO, "results", "dryrun")
+OUT = os.path.join(REPO, "EXPERIMENTS.md")
+PERF = os.path.join(REPO, "results", "perf_log.md")
+REPRO = os.path.join(REPO, "results", "repro_claims.md")
+
+
+def fmt(x, p=3):
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-3 or abs(x) >= 1e4:
+            return f"{x:.2e}"
+        return f"{x:.{p}g}"
+    return str(x)
+
+
+def load():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def dryrun_section(recs):
+    lines = [
+        "## §Dry-run — lower+compile on the production meshes",
+        "",
+        "Every (architecture × shape) cell and both paper-technique cells, "
+        "lowered and compiled for the single-pod (16×16 = 256 chips) and "
+        "multi-pod (2×16×16 = 512 chips) meshes. `peak/dev` is XLA's "
+        "compiled memory analysis (arguments + outputs + temps − aliased); "
+        "collective columns come from the loop-aware HLO parse "
+        "(`repro.launch.hlo_cost`).",
+        "",
+        "| arch | shape | mesh | status | compile s | peak/dev GB | "
+        "collectives (count) | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        mesh = r.get("mesh", "?")
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                         f"SKIP: {r['reason'][:58]} | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | "
+                         f"ERROR | — | — | — | — |")
+            continue
+        cc = r["collectives"]["counts"]
+        cstr = ", ".join(f"{k}×{int(v)}" for k, v in sorted(cc.items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+            f"{fmt(r['compile_s'])} | "
+            f"{fmt(r['memory']['peak_per_device_gb'])} | {cstr or '—'} | "
+            f"{fmt(r['roofline']['coll_bytes'])} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section(recs):
+    lines = [
+        "## §Roofline — three-term analysis per cell (single-pod table)",
+        "",
+        "Hardware constants (TPU v5e): 197 TF/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI. FLOPs/bytes are **per-device** from the "
+        "loop-aware HLO cost model (XLA's cost_analysis does not multiply "
+        "while-loop trip counts — verified in tests/test_hlo.py — so it "
+        "undercounts scan-over-layers models by ~n_layers×)."
+        " `useful` = MODEL_FLOPS / global HLO FLOPs where MODEL_FLOPS = "
+        "6·N_active·tokens (train) or 2·N_active·tokens (serve).",
+        "",
+        "| arch | shape | t_compute s | t_memory s | t_collective s | "
+        "dominant | useful ratio | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    notes = {
+        ("memory", "train"): "bigger per-device batch / fewer remat passes "
+        "(accum_steps↓), bf16 master weights",
+        ("memory", "decode"): "KV-cache quantisation (int8), wider "
+        "batch per chip to amortise weight reads",
+        ("memory", "prefill"): "larger attention chunks (fewer HBM "
+        "round-trips), fused QKV",
+        ("collective", "train"): "bf16/top-k grad compression, overlap "
+        "psum with bwd compute, 2D-shard the LM head gather",
+        ("collective", "prefill"): "keep activations model-sharded through "
+        "the block (avoid re-gather per layer)",
+        ("collective", "decode"): "sequence-parallel cache with logsumexp "
+        "combine instead of head all-gather",
+        ("compute", "train"): "already MXU-bound: raise MFU via larger "
+        "matmul tiles / fused gated-FFN",
+    }
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != "16x16":
+            continue
+        rl = r["roofline"]
+        kind = ("train" if r["shape"] == "train_4k" else
+                "prefill" if "prefill" in r["shape"] else "decode")
+        note = notes.get((rl["dominant"], kind), "—")
+        ur = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rl['t_compute_s'])} | "
+            f"{fmt(rl['t_memory_s'])} | {fmt(rl['t_collective_s'])} | "
+            f"**{rl['dominant']}** | {fmt(ur)} | {note} |")
+    lines.append("")
+    lines.append(
+        "Multi-pod (2×16×16) cells compile identically (see §Dry-run); "
+        "their tables differ mainly by halved per-device terms on "
+        "data-parallel-divisible work plus cross-pod collective bytes.")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    parts = [
+        "# EXPERIMENTS",
+        "",
+        "Reproduction + system evaluation for *Lasso Screening Rules via "
+        "Dual Polytope Projection* (NIPS 2013). Produced by "
+        "`tools/make_experiments.py` from `results/dryrun/*.json`; "
+        "benchmark numbers from `python -m benchmarks.run` "
+        "(bench_output.txt).",
+        "",
+    ]
+    if os.path.exists(REPRO):
+        parts.append(open(REPRO).read())
+    parts.append(dryrun_section(recs))
+    parts.append(roofline_section(recs))
+    if os.path.exists(PERF):
+        parts.append(open(PERF).read())
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {OUT} ({len(recs)} dry-run records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Recompute dry-run JSON roofline sections from archived HLO (results/hlo/
+*.hlo.gz) without recompiling. Run after any hlo_cost.py change."""
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.launch import hlo, hlo_cost  # noqa: E402
+
+
+def main():
+    for gz in sorted(glob.glob(os.path.join(REPO, "results", "hlo",
+                                            "*.hlo.gz"))):
+        cell = os.path.basename(gz)[: -len(".hlo.gz")]
+        jf = os.path.join(REPO, "results", "dryrun", cell + ".json")
+        if not os.path.exists(jf):
+            continue
+        with open(jf) as f:
+            rec = json.load(f)
+        with gzip.open(gz, "rt") as f:
+            text = f.read()
+        cost = hlo_cost.loop_aware_cost(text)
+        rl = hlo.Roofline(flops=cost.flops, hbm_bytes=cost.bytes_fused,
+                          coll_bytes=cost.coll_bytes, chips=rec["chips"])
+        rec["roofline"] = rl.as_dict()
+        rec["roofline"]["hbm_bytes_unfused_upper"] = cost.bytes
+        rec["roofline"]["t_memory_upper_s"] = cost.bytes / hlo.HBM_BW
+        rec["collectives"] = {"counts": cost.coll_counts,
+                              "bytes_by_kind": cost.coll_bytes_by_kind}
+        if "model_flops" in rec:
+            ghf = cost.flops * rec["chips"]
+            rec["useful_flops_ratio"] = (rec["model_flops"] / ghf
+                                         if ghf else None)
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("reanalyzed", cell)
+
+
+if __name__ == "__main__":
+    main()
