@@ -56,7 +56,9 @@ def run(full: bool = False, num_lambdas: int = 100):
             assert r.max_beta_err < tol, (rule, r.max_beta_err)
             emit(f"dpp_family/{name}/{rule}", r.path_time_s * 1e6,
                  f"speedup={r.speedup:.2f} mean_rej={r.rejection.mean():.4f}"
-                 f" screen_s={r.screen_time_s:.3f}")
+                 f" screen_s={r.screen_time_s:.3f}"
+                 f" hbm_passes_per_step={r.x_passes_per_step:.2f}"
+                 f" jnp_hbm_passes={r.jnp_x_passes}")
             rows.append((name, rule, r))
     return rows
 

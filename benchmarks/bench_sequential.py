@@ -29,7 +29,7 @@ DATASETS_FULL = {
     "svhn-like": (3072, 99288),
 }
 
-RULES = ["seq_safe", "strong", "edpp"]
+RULES = ["seq_safe", "strong", "edpp", "gap"]
 
 
 def make_dataset(n, p, seed=0):
@@ -59,9 +59,15 @@ def run(full: bool = False, num_lambdas: int = 100):
             # strong is heuristic: borderline features (|x·r|≈λ)
             # re-enter only to solver precision (paper §1 KKT loop)
             assert r.max_beta_err < tol, (rule, r.max_beta_err)
+            # data-movement telemetry: the engine serves every ball rule in
+            # ONE fused HBM pass over X per grid step (norms cached in the
+            # PathWorkspace); the hand-rolled jnp masks re-read X ≥2×.
+            assert r.x_passes_per_step <= r.jnp_x_passes, (rule, r)
             emit(f"sequential/{name}/{rule}", r.path_time_s * 1e6,
                  f"speedup={r.speedup:.2f} mean_rej={r.rejection.mean():.4f}"
-                 f" screen_s={r.screen_time_s:.3f}")
+                 f" screen_s={r.screen_time_s:.3f}"
+                 f" hbm_passes_per_step={r.x_passes_per_step:.2f}"
+                 f" jnp_hbm_passes={r.jnp_x_passes}")
             rows.append((name, rule, r))
     return rows
 

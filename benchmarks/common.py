@@ -21,7 +21,8 @@ import time
 
 import numpy as np
 
-from repro.core import PathConfig, lambda_grid, lasso_path, lambda_max
+from repro.core import (PathConfig, lambda_grid, lasso_path, lambda_max,
+                        oracle_x_passes)
 import jax.numpy as jnp
 
 ZERO_TOL = 1e-8
@@ -35,6 +36,8 @@ class RuleResult:
     rejection: np.ndarray          # per-λ rejection ratio
     speedup: float
     max_beta_err: float
+    x_passes_per_step: float = 0.0  # engine HBM passes over X per screen
+    jnp_x_passes: int = 0           # what the hand-rolled jnp mask would cost
 
 
 def ground_truth(X, y, grid, solver_tol=1e-12) -> "tuple[np.ndarray, float]":
@@ -63,10 +66,14 @@ def run_rule(X, y, grid, rule, betas_ref, t_ref, solver_tol=1e-12,
         n_zero = int(zero_truth.sum())
         rej[k] = res.stats[k].n_discarded / max(n_zero, 1)
     err = float(np.abs(res.betas - betas_ref).max())
+    # trivial-region steps (λ ≥ λmax) never screen; exclude them from the mean
+    screened = [s.x_passes for s in res.stats if s.screen_time_s > 0]
+    xpass = float(np.mean(screened)) if screened else 0.0
     return RuleResult(rule=rule, path_time_s=dt,
                       screen_time_s=res.total_screen_time,
                       rejection=rej, speedup=t_ref / max(dt, 1e-12),
-                      max_beta_err=err)
+                      max_beta_err=err, x_passes_per_step=xpass,
+                      jnp_x_passes=oracle_x_passes(rule))
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -1,7 +1,26 @@
 """repro.core — the paper's contribution: DPP/EDPP screening for (group) Lasso.
 
+Layering (see docs/screening-rules.md for the rule-by-rule map):
+
+    screening.py        rule geometry — every ball rule as a SphereTest
+                        (centre, ρ) constructor + its pure-jnp oracle mask
+    engine.py           ScreeningEngine — the ONE entry point every screen
+                        goes through: a PathWorkspace caches the
+                        λ-independent geometry (column norms, λ_max, the
+                        λ_max ray) via a single fused kernel pass, then each
+                        per-step screen is one streaming HBM pass over X,
+                        dispatched through the kernels.ops.BACKENDS registry
+                        (pallas | interpret | jnp)
+    path.py             sequential λ-path driver (screen → reduce → solve →
+                        KKT re-check), built on the engine
+    distributed.py      shard_map / pjit variants whose per-shard score
+                        blocks reuse the engine's block_scores arithmetic
+
 Public API:
     lambda_max, DualState, screen, edpp_mask, dpp_mask, ...   (screening)
+    SphereTest, edpp_sphere, gap_mask, make_sphere, ...       (geometry)
+    ScreeningEngine, GroupScreeningEngine, PathWorkspace      (engine)
+    register_backend, available_backends, default_backend     (backends)
     fista, cd, soft_threshold                                 (solvers)
     group_fista, group_lambda_max                             (group solver)
     group_screen, group_edpp_mask, GroupDualState             (group screening)
@@ -24,20 +43,44 @@ from .screening import (  # noqa: F401
     HEURISTIC_RULES,
     RULES,
     SAFE_RULES,
+    SPHERE_RULES,
     DualState,
+    SphereTest,
     dome_mask,
     dpp_mask,
+    dpp_sphere,
     edpp_mask,
+    edpp_sphere,
+    gap_mask,
+    gap_sphere,
     imp1_mask,
+    imp1_sphere,
     imp2_mask,
+    imp2_sphere,
     kkt_violations,
     lambda_max,
     make_dual_state,
+    make_sphere,
     safe_mask,
+    safe_sphere,
     screen,
     seq_safe_mask,
+    seq_safe_sphere,
+    sphere_mask,
     strong_mask,
     v2_perp,
+)
+from .engine import (  # noqa: F401
+    GroupScreeningEngine,
+    PathWorkspace,
+    ScreeningEngine,
+    available_backends,
+    block_scores,
+    default_backend,
+    engine_x_passes,
+    oracle_x_passes,
+    register_backend,
+    resolve_backend,
 )
 from .group_lasso import (  # noqa: F401
     GroupFistaResult,

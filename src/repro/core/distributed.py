@@ -30,6 +30,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .engine import block_scores
 from .lasso import soft_threshold
 from .screening import EPS_DEFAULT
 
@@ -89,10 +90,9 @@ def make_dist_ops(mesh: Mesh):
         in_specs=(xspec, rspec, rspec, rspec), out_specs=(bspec, bspec),
     )
     def screen_scores_d(Xb, centre, rho, eps):
-        """EDPP scores + discard mask per local feature block. Zero comms."""
-        dot = Xb.T @ centre
-        norms = jnp.sqrt(jnp.sum(jnp.square(Xb), axis=0))
-        scores = jnp.abs(dot) + rho * norms
+        """EDPP scores + discard mask per local feature block. Zero comms.
+        Same arithmetic as the engine's fused kernel (engine.block_scores)."""
+        scores = block_scores(Xb, centre, rho)
         return scores, scores < 1.0 - eps
 
     @functools.partial(
@@ -151,7 +151,7 @@ def dist_edpp_screen_cached(mesh: Mesh, X, y, lam_next, lam_prev,
         out_specs=(P(axes), P(axes)),
     )
     def score_d(Xb, centre, rho, norms_b, eps_):
-        scores = jnp.abs(Xb.T @ centre) + rho * norms_b
+        scores = block_scores(Xb, centre, rho, col_norms=norms_b)
         return scores, scores < 1.0 - eps_
 
     return score_d(X, centre, jnp.asarray(rho),
@@ -190,7 +190,7 @@ def dist_edpp_screen_sparse(mesh: Mesh, X, X_active, y, lam_next, lam_prev,
         out_specs=(P(axes), P(axes)),
     )
     def score_d(Xb, centre, rho, norms_b, eps_):
-        scores = jnp.abs(Xb.T @ centre) + rho * norms_b
+        scores = block_scores(Xb, centre, rho, col_norms=norms_b)
         return scores, scores < 1.0 - eps_
 
     return score_d(X, centre, jnp.asarray(rho),

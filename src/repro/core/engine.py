@@ -1,0 +1,366 @@
+"""ScreeningEngine: every ball-test rule through one fused kernel pass.
+
+The λ-path hot loop used to hand-roll each rule in plain jnp — recomputing
+``|Xᵀc|`` AND ``‖x_j‖`` from HBM at every grid step (2 full passes over X
+per screen, 4 for DOME). But X is *fixed* along the path: the column norms,
+``|Xᵀy|``, λ_max and the λ_max ray v₁ are all λ-independent. This module
+caches them in a :class:`PathWorkspace` (computed by ONE fused
+``edpp_screen_scores`` pass at path start) and then serves every per-step
+screen — DPP, Imp1/Imp2, EDPP, sequential SAFE, GAP-sphere, basic SAFE,
+strong, DOME — through the ``kernels.screen_matvec`` streaming kernel with
+the cached norms: **one HBM pass over X per screen** (two for DOME's extra
+direction).
+
+Backend registry
+----------------
+The kernels are dispatched through ``kernels.ops.BACKENDS``:
+
+    pallas     compiled Mosaic kernels (TPU)
+    interpret  same kernel bodies on the Pallas interpreter (CI / CPU)
+    jnp        pure-jnp oracles from kernels/ref.py (CPU default, GSPMD)
+
+Selection order: explicit ``backend=`` argument → ``REPRO_SCREEN_BACKEND``
+env var → ``INTERPRET=1`` env var (CI) → ``pallas`` on TPU → ``jnp``.
+Register additional implementations with :func:`register_backend`.
+
+The pure-jnp mask functions in :mod:`repro.core.screening` remain the
+oracles; tests/test_engine.py checks the engine against them bit-for-bit
+on every rule and backend.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import group_screening as gscr
+from . import screening as scr
+
+# Full HBM passes over X that one screen costs, per rule: through the engine
+# (norms/argmax geometry cached in the workspace) vs the hand-rolled jnp
+# oracle masks (dot + column norms each time; DOME also redoes Xᵀy).
+ENGINE_X_PASSES = {"strong": 1, "dome": 2, "none": 0, "safe": 1}
+ORACLE_X_PASSES = {"strong": 1, "dome": 4, "none": 0, "safe": 2}
+
+
+def engine_x_passes(rule: str) -> int:
+    """HBM passes over X per screen through the engine (1 for ball rules)."""
+    return ENGINE_X_PASSES.get(rule, 1)
+
+
+def oracle_x_passes(rule: str) -> int:
+    """HBM passes over X per screen for the pure-jnp oracle mask."""
+    return ORACLE_X_PASSES.get(rule, 2)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry (thin policy layer over kernels.ops.BACKENDS)
+# ---------------------------------------------------------------------------
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(ops.BACKENDS)
+
+
+def register_backend(name: str, backend: ops.ScreenBackend) -> None:
+    """Add a ScreenBackend implementation (see kernels/ops.py contract)."""
+    ops.BACKENDS[name] = backend
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_SCREEN_BACKEND")
+    if env:
+        return env
+    if os.environ.get("INTERPRET", "") not in ("", "0"):
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def resolve_backend(
+        name: str | ops.ScreenBackend | None = None) -> ops.ScreenBackend:
+    if isinstance(name, ops.ScreenBackend):
+        return name
+    name = name or default_backend()
+    try:
+        return ops.BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown screening backend {name!r}; "
+            f"available: {available_backends()}") from None
+
+
+def block_scores(Xb, centre, rho, col_norms=None):
+    """Sphere scores for one feature block — pure jnp, shard_map-safe.
+
+    The distributed layer's per-shard entry point: identical arithmetic to
+    ref.edpp_screen_ref / the fused kernel's finish step, so sharded and
+    single-chip screens agree bitwise on the same block.
+    """
+    dot = Xb.T @ centre
+    if col_norms is None:
+        col_norms = jnp.sqrt(jnp.sum(jnp.square(Xb), axis=0))
+    return jnp.abs(dot) + rho * col_norms
+
+
+# ---------------------------------------------------------------------------
+# Jitted combine steps (O(p), applied to the kernel's single-pass output)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _sphere_combine(dot, rho, col_norms, eps):
+    return jnp.abs(dot) + rho * col_norms < 1.0 - eps
+
+
+@jax.jit
+def _gap_combine(dot, y, lam_next, state, col_norms, eps):
+    sup_corr = jnp.max(jnp.abs(dot))
+    test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+    s = jnp.maximum(1.0, sup_corr)
+    return jnp.abs(dot) / s + test.rho * col_norms < 1.0 - eps
+
+
+@jax.jit
+def _strong_combine(dot, lam_next, lam_prev, eps):
+    return jnp.abs(dot) < 2.0 * lam_next - lam_prev - eps
+
+
+@jax.jit
+def _dome_combine(scores_c, gdot, col_norms, c, rho, ghat, b, eps):
+    return scr.dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) \
+        < 1.0 - eps
+
+
+@jax.jit
+def _make_state(X, y, beta, lam, lmax, v1max):
+    """Sequential DualState with the λ_max branch served from cache — no
+    per-step Xᵀy pass (make_dual_state recomputes it every call)."""
+    theta_seq = (y - X @ beta) / lam
+    at_max = lam >= lmax * (1.0 - 1e-12)
+    theta = jnp.where(at_max, y / lmax, theta_seq)
+    v1 = jnp.where(at_max, v1max, y / lam - theta_seq)
+    return scr.DualState(
+        theta=theta,
+        lam=jnp.where(at_max, lmax, jnp.asarray(lam, X.dtype)),
+        v1=v1,
+        at_lmax=jnp.asarray(at_max),
+        beta_l1=jnp.where(at_max, 0.0, jnp.sum(jnp.abs(beta))),
+    )
+
+
+@jax.jit
+def _make_group_state(X, y, beta, lam, lmax, theta_max, v1max):
+    theta_seq = (y - X @ beta) / lam
+    at_max = lam >= lmax * (1.0 - 1e-12)
+    return gscr.GroupDualState(
+        theta=jnp.where(at_max, theta_max, theta_seq),
+        lam=jnp.where(at_max, lmax, jnp.asarray(lam, X.dtype)),
+        v1=jnp.where(at_max, v1max, y / lam - theta_seq),
+    )
+
+
+@jax.jit
+def _group_edpp_geometry(y, lam_next, state):
+    vp = gscr.group_v2_perp(y, lam_next, state)
+    return state.theta + 0.5 * vp, 0.5 * jnp.linalg.norm(vp)
+
+
+_group_spec_norms = jax.jit(gscr.group_spectral_norms, static_argnames="m")
+
+
+# ---------------------------------------------------------------------------
+# Per-path workspace: the λ-independent geometry, one fused pass over X
+# ---------------------------------------------------------------------------
+
+class PathWorkspace:
+    """Caches everything about (X, y) the screens reuse across the λ-grid.
+
+    One fused ``edpp_screen_scores(X, y, rho=0)`` pass yields BOTH
+    ``|Xᵀy|`` (→ λ_max, the argmax feature) and ``‖x_j‖²`` (→ the column
+    norms every sphere test needs); the λ_max ray v₁ = sign(x*ᵀy)·x* and
+    ‖y‖ follow in O(n). Nothing here is recomputed per grid step.
+    """
+
+    def __init__(self, X, y, backend: str | None = None):
+        self.backend = resolve_backend(backend)
+        self.X = jnp.asarray(X)
+        self.y = jnp.asarray(y)
+        scores, sumsq = self.backend.fused_scores(self.X, self.y, 0.0)
+        self.abs_xty = scores                     # |Xᵀy| (rho = 0)
+        self.sumsq = sumsq                        # ‖x_j‖²
+        self.col_norms = jnp.sqrt(sumsq)
+        self.istar = int(jnp.argmax(scores))
+        self.lam_max = float(scores[self.istar])
+        xstar = self.X[:, self.istar]
+        acc = jnp.promote_types(self.X.dtype, jnp.float32)
+        sgn = jnp.sign(jnp.vdot(xstar.astype(acc), self.y.astype(acc)))
+        self.v1_at_lmax = sgn * xstar             # eq. (17) at λ₀ = λ_max
+        self.ghat = self.v1_at_lmax / (
+            jnp.linalg.norm(self.v1_at_lmax) + 1e-30)   # DOME halfspace
+
+    def state_at_lambda_max(self) -> scr.DualState:
+        """β* = 0, θ* = y/λ_max (eq. 9) — from cache, no X pass."""
+        lmax = jnp.asarray(self.lam_max, self.X.dtype)
+        return scr.DualState(
+            theta=self.y / lmax,
+            lam=lmax,
+            v1=self.v1_at_lmax,
+            at_lmax=jnp.asarray(True),
+            beta_l1=jnp.zeros((), dtype=self.X.dtype),
+        )
+
+
+class ScreeningEngine:
+    """One entry point for every per-step screen on a Lasso λ-path.
+
+    Usage (what lasso_path does)::
+
+        eng = ScreeningEngine(X, y)               # one fused pass over X
+        state = eng.state_at_lambda_max()
+        for lam in grid:
+            discard = eng.screen(lam, state, rule="edpp")   # one X pass
+            ... reduced solve -> beta ...
+            state = eng.make_state(beta, lam)
+
+    ``last_x_passes`` / ``total_x_passes`` count full HBM passes over X so
+    callers (benchmarks, PathStepStats) can report data movement.
+    """
+
+    def __init__(self, X, y, backend: str | None = None,
+                 eps: float = scr.EPS_DEFAULT):
+        self.ws = PathWorkspace(X, y, backend)
+        self.eps = eps
+        self.n_screens = 0
+        self.total_x_passes = 0
+        self.last_x_passes = 0
+
+    @property
+    def lam_max(self) -> float:
+        return self.ws.lam_max
+
+    @property
+    def backend_name(self) -> str:
+        return self.ws.backend.name
+
+    def state_at_lambda_max(self) -> scr.DualState:
+        return self.ws.state_at_lambda_max()
+
+    def make_state(self, beta, lam) -> scr.DualState:
+        """Sequential DualState from the solution at λ (KKT eq. 3)."""
+        return _make_state(self.ws.X, self.ws.y, beta, lam,
+                           self.ws.lam_max, self.ws.v1_at_lmax)
+
+    def _count(self, passes: int):
+        self.n_screens += 1
+        self.last_x_passes = passes
+        self.total_x_passes += passes
+
+    def screen(self, lam_next, state: scr.DualState | None,
+               rule: str = "edpp") -> jax.Array:
+        """Discard mask bool[p] for λ_next; dispatches every rule through
+        the backend's streaming matvec with cached column norms."""
+        ws = self.ws
+        if rule == "none":
+            self._count(0)
+            return jnp.zeros((ws.X.shape[1],), dtype=bool)
+        if rule == "safe":
+            test = scr.safe_sphere(ws.y, lam_next, ws.lam_max)
+            dot = ws.backend.matvec(ws.X, test.centre)
+            self._count(1)
+            # eq. 15's eps margin is at λ scale: eps/λ once unit-normalised
+            return _sphere_combine(dot, test.rho, ws.col_norms,
+                                   self.eps / lam_next)
+        if rule == "dome":
+            c = ws.y / lam_next
+            rho = jnp.linalg.norm(ws.y) * (1.0 / lam_next - 1.0 / ws.lam_max)
+            gnorm = jnp.linalg.norm(ws.v1_at_lmax) + 1e-30
+            scores_c = ws.backend.matvec(ws.X, c)
+            gdot = ws.backend.matvec(ws.X, ws.ghat)
+            self._count(2)
+            return _dome_combine(scores_c, gdot, ws.col_norms, c, rho,
+                                 ws.ghat, 1.0 / gnorm, self.eps)
+        if rule == "strong":
+            dot = ws.backend.matvec(ws.X, state.theta * state.lam)
+            self._count(1)
+            return _strong_combine(dot, lam_next, state.lam, self.eps)
+        if rule == "gap":
+            # one matvec serves the feasibility rescale AND the scores
+            dot = ws.backend.matvec(ws.X, state.theta)
+            self._count(1)
+            return _gap_combine(dot, ws.y, lam_next, state, ws.col_norms,
+                                self.eps)
+        if rule not in scr.SPHERE_RULES:
+            raise ValueError(
+                f"unknown screening rule {rule!r}; available: "
+                f"{(*scr.SPHERE_RULES, 'safe', 'dome', 'strong', 'none')}")
+        test = scr.make_sphere(rule, ws.y, lam_next, state)
+        dot = ws.backend.matvec(ws.X, test.centre)
+        self._count(1)
+        return _sphere_combine(dot, test.rho, ws.col_norms, self.eps)
+
+
+# ---------------------------------------------------------------------------
+# Group-Lasso engine (Corollary 21): same workspace idea, group kernel
+# ---------------------------------------------------------------------------
+
+class GroupScreeningEngine:
+    """Group-EDPP / group-strong screens through the fused group kernel.
+
+    Caches ‖X_g‖₂ (spectral norms, Theorem 20), λ̄_max and the λ̄_max ray
+    v̄₁ = X*X*ᵀy once per path; each screen is then one
+    ``group_screen_scores`` pass over X.
+    """
+
+    def __init__(self, X, y, m: int, backend: str | None = None,
+                 eps: float = gscr.EPS_DEFAULT):
+        self.backend = resolve_backend(backend)
+        self.X = jnp.asarray(X)
+        self.y = jnp.asarray(y)
+        self.m = m
+        self.eps = eps
+        gscores = self.backend.group_scores(self.X, self.y, m)   # ‖X_gᵀy‖
+        gnorms = gscores / jnp.sqrt(float(m))
+        self.gstar = int(jnp.argmax(gnorms))
+        self.lam_max = float(gnorms[self.gstar])
+        Xstar = jax.lax.dynamic_slice_in_dim(
+            self.X, self.gstar * m, m, axis=1)                   # (N, m)
+        self.v1_at_lmax = Xstar @ (Xstar.T @ self.y)             # eq. (59)
+        self.spec_norms = _group_spec_norms(self.X, m)
+        self.n_screens = 0
+        self.total_x_passes = 0
+        self.last_x_passes = 0
+
+    def state_at_lambda_max(self) -> gscr.GroupDualState:
+        lmax = jnp.asarray(self.lam_max, self.X.dtype)
+        return gscr.GroupDualState(theta=self.y / lmax, lam=lmax,
+                                   v1=self.v1_at_lmax)
+
+    def make_state(self, beta, lam) -> gscr.GroupDualState:
+        return _make_group_state(
+            self.X, self.y, beta, lam, self.lam_max,
+            self.y / self.lam_max, self.v1_at_lmax)
+
+    def _count(self, passes: int):
+        self.n_screens += 1
+        self.last_x_passes = passes
+        self.total_x_passes += passes
+
+    def screen(self, lam_next, state: gscr.GroupDualState,
+               rule: str = "edpp") -> jax.Array:
+        """Discard mask bool[G] for λ_next."""
+        G = self.X.shape[1] // self.m
+        sqm = jnp.sqrt(float(self.m))
+        if rule == "none":
+            self._count(0)
+            return jnp.zeros((G,), dtype=bool)
+        if rule == "strong":
+            gscores = self.backend.group_scores(
+                self.X, state.theta * state.lam, self.m)
+            mask = gscores < sqm * (2.0 * lam_next - state.lam) - self.eps
+        else:
+            centre, rho = _group_edpp_geometry(self.y, lam_next, state)
+            gscores = self.backend.group_scores(self.X, centre, self.m)
+            mask = gscores < sqm - rho * self.spec_norms - self.eps
+        self._count(1)
+        return mask

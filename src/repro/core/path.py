@@ -6,6 +6,12 @@ point θ*(λ_k) from each solution into the screen for λ_{k+1}.
 
 Engineering notes
 -----------------
+* Every per-step screen goes through the :class:`repro.core.engine`
+  ``ScreeningEngine``: the λ-independent geometry (column norms, λ_max, the
+  λ_max ray) is computed ONCE per path by a fused kernel pass, after which
+  each screen is a single streaming HBM pass over X regardless of rule
+  (``PathStepStats.x_passes`` records it). Pick the kernel backend with
+  ``PathConfig.backend`` ("pallas" | "interpret" | "jnp" | None = auto).
 * The *reduced* problems have data-dependent sizes, which fights XLA's static
   shapes. We gather surviving columns into power-of-two **buckets** (zero
   padded); solvers treat zero columns as fixed points, and jit compiles at
@@ -30,8 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import screening as scr
+from .engine import GroupScreeningEngine, ScreeningEngine
 from .lasso import cd, fista
-from .group_lasso import group_fista, group_lambda_max
+from .group_lasso import group_fista
 from . import group_screening as gscr
 
 
@@ -40,23 +47,14 @@ def next_pow2(n: int) -> int:
 
 
 # Module-level jitted helpers (a fresh `jax.jit(f)` per call would retrace).
-_state_at_lmax = jax.jit(scr.DualState.at_lambda_max)
-_make_dual_state = jax.jit(scr.make_dual_state)
-_safe_mask = jax.jit(scr.safe_mask)
-_dome_mask = jax.jit(scr.dome_mask)
 _kkt_violations = jax.jit(scr.kkt_violations)
-_group_spec_norms = jax.jit(gscr.group_spectral_norms, static_argnames="m")
-_group_state_at_lmax = jax.jit(gscr.group_state_at_lambda_max,
-                               static_argnames="m")
-_make_group_dual_state = jax.jit(gscr.make_group_dual_state,
-                                 static_argnames="m")
 _group_kkt_violations = jax.jit(gscr.group_kkt_violations,
                                 static_argnames="m")
 
 
 @dataclasses.dataclass(frozen=True)
 class PathConfig:
-    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|safe|dome|strong|none
+    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|gap|safe|dome|strong|none
     solver: str = "fista"         # fista|cd
     sequential: bool = True       # False = "basic" variants (state pinned at λmax)
     solver_tol: float = 1e-8
@@ -66,6 +64,7 @@ class PathConfig:
     kkt_tol: float = 1e-4
     max_kkt_rounds: int = 10
     paranoid: bool = False        # run KKT loop even for safe rules
+    backend: str | None = None    # screening backend (None = auto-detect)
     checkpoint_fn: Callable | None = None  # called with (k, lam, beta) per step
 
 
@@ -79,6 +78,7 @@ class PathStepStats:
     kkt_rounds: int
     screen_time_s: float
     solve_time_s: float
+    x_passes: int = 0             # full HBM passes over X this screen took
 
 
 @dataclasses.dataclass
@@ -136,15 +136,14 @@ def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
     lambdas = np.asarray(lambdas, dtype=np.float64)
     assert np.all(np.diff(lambdas) <= 1e-12), "grid must be decreasing"
 
-    lmax = float(scr.lambda_max(X, y))
-    state0 = _state_at_lmax(X, y)
+    engine = ScreeningEngine(X, y, backend=cfg.backend, eps=cfg.eps)
+    lmax = engine.lam_max
+    state = engine.state_at_lambda_max()
 
     betas = np.zeros((len(lambdas), p), dtype=np.float64)
     stats: list[PathStepStats] = []
 
     beta_prev = jnp.zeros((p,), dtype=X.dtype)
-    lam_prev = lmax
-    state = state0
 
     for k, lam in enumerate(lambdas):
         lam = float(lam)
@@ -154,16 +153,9 @@ def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
                 cfg.checkpoint_fn(k, lam, np.zeros((p,)))
             continue
 
-        # ---- screen -----------------------------------------------------
+        # ---- screen (one fused kernel pass over X, engine.py) -----------
         t0 = time.perf_counter()
-        if cfg.rule == "none":
-            discard = jnp.zeros((p,), dtype=bool)
-        elif cfg.rule == "safe":
-            discard = _safe_mask(X, y, lam, lmax, cfg.eps)
-        elif cfg.rule == "dome":
-            discard = _dome_mask(X, y, lam, lmax, cfg.eps)
-        else:
-            discard = scr.screen(X, y, lam, state, rule=cfg.rule, eps=cfg.eps)
+        discard = engine.screen(lam, state, rule=cfg.rule)
         discard_np = np.asarray(discard)
         kept = np.flatnonzero(~discard_np)
         screen_time = time.perf_counter() - t0
@@ -207,14 +199,14 @@ def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
             lam=lam, n_discarded=int(discard_np.sum()), n_kept=int(kept.size),
             solver_iters=res_iters, gap=res_gap, kkt_rounds=kkt_rounds,
             screen_time_s=screen_time, solve_time_s=solve_time,
+            x_passes=engine.last_x_passes,
         ))
         if cfg.checkpoint_fn:
             cfg.checkpoint_fn(k, lam, betas[k])
 
         beta_prev = beta_full
-        lam_prev = lam
         if cfg.sequential:
-            state = _make_dual_state(X, y, beta_full, lam, lmax)
+            state = engine.make_state(beta_full, lam)
         # basic variants keep `state` pinned at λmax (paper §4.1.1)
     return PathResult(lambdas=lambdas, betas=betas, stats=stats)
 
@@ -233,6 +225,7 @@ class GroupPathConfig:
     kkt_tol: float = 1e-4
     max_kkt_rounds: int = 10
     sequential: bool = True
+    backend: str | None = None    # screening backend (None = auto-detect)
 
 
 def group_lasso_path(X, y, m: int, lambdas,
@@ -249,9 +242,9 @@ def group_lasso_path(X, y, m: int, lambdas,
     assert G * m == p
     lambdas = np.asarray(lambdas, dtype=np.float64)
 
-    lmax = float(group_lambda_max(X, y, m))
-    spec_norms = _group_spec_norms(X, m)
-    state = _group_state_at_lmax(X, y, m)
+    engine = GroupScreeningEngine(X, y, m, backend=cfg.backend, eps=cfg.eps)
+    lmax = engine.lam_max
+    state = engine.state_at_lambda_max()
 
     betas = np.zeros((len(lambdas), p), dtype=np.float64)
     stats: list[PathStepStats] = []
@@ -264,11 +257,7 @@ def group_lasso_path(X, y, m: int, lambdas,
             continue
 
         t0 = time.perf_counter()
-        if cfg.rule == "none":
-            discard = jnp.zeros((G,), dtype=bool)
-        else:
-            discard = gscr.group_screen(X, y, lam, state, m, rule=cfg.rule,
-                                        spec_norms=spec_norms, eps=cfg.eps)
+        discard = engine.screen(lam, state, rule=cfg.rule)
         discard_np = np.asarray(discard)
         kept_groups = np.flatnonzero(~discard_np)
         screen_time = time.perf_counter() - t0
@@ -311,9 +300,9 @@ def group_lasso_path(X, y, m: int, lambdas,
             lam=lam, n_discarded=int(discard_np.sum()),
             n_kept=int(kept_groups.size), solver_iters=res_iters, gap=res_gap,
             kkt_rounds=kkt_rounds, screen_time_s=screen_time,
-            solve_time_s=solve_time,
+            solve_time_s=solve_time, x_passes=engine.last_x_passes,
         ))
         beta_prev = beta_full
         if cfg.sequential:
-            state = _make_group_dual_state(X, y, beta_full, lam, lmax, m)
+            state = engine.make_state(beta_full, lam)
     return PathResult(lambdas=lambdas, betas=betas, stats=stats)

@@ -8,12 +8,25 @@ Implements the paper's full family plus every baseline it compares against:
   * EDPP (Theorems 15 & 16, Corollary 17)           ← the paper's main rule
   * SAFE / ST1 (eq. 15, El Ghaoui et al.)
   * sequential SAFE (sphere at y/λ with radius from the previous dual point)
+  * GAP-safe sphere (Fercoq, Gramfort & Salmon 2015, Theorem 2)
   * strong rule (Tibshirani et al. 2012) — *heuristic*, requires KKT check
   * DOME (Xiang et al.) — basic rule only, exact sup over the dome region
 
 Every rule is expressed as a *discard mask* computation: ``mask[i] == True``
 means feature ``i`` is guaranteed (safe rules) or presumed (strong rule) to
 satisfy ``β*_i(λ) = 0`` and can be removed from the problem.
+
+Sphere geometry
+---------------
+Every ball-based rule above is the *same* test with a different ball: for a
+sphere B(centre, ρ) that provably contains θ*(λ),
+
+    discard i  ⟺  sup_{θ∈B} |x_iᵀθ| = |x_iᵀ·centre| + ρ‖x_i‖ < 1.
+
+Each rule therefore exposes a ``<rule>_sphere`` constructor returning a
+:class:`SphereTest` ``(centre, rho)`` alongside its mask function; the mask
+functions are the pure-jnp oracles, and :mod:`repro.core.engine` evaluates
+the identical test through the fused Pallas kernel (one HBM pass over X).
 
 All rules share the sequential interface ``rule(X, y, lam_next, state)`` where
 ``state`` is a :class:`DualState` built from the solution at the previous
@@ -42,12 +55,14 @@ class DualState(NamedTuple):
     lam:      λ₀
     v1:       ray direction of Theorem 7 / eq. (17)
     at_lmax:  whether λ₀ == λ_max (selects the v₁ branch of eq. 17)
+    beta_l1:  ‖β*(λ₀)‖₁ — needed only by the GAP-safe sphere's duality gap
     """
 
     theta: jax.Array
     lam: jax.Array
     v1: jax.Array
     at_lmax: jax.Array
+    beta_l1: jax.Array | float = 0.0
 
     @staticmethod
     def at_lambda_max(X: jax.Array, y: jax.Array) -> "DualState":
@@ -62,6 +77,7 @@ class DualState(NamedTuple):
             lam=lmax,
             v1=v1,
             at_lmax=jnp.asarray(True),
+            beta_l1=jnp.zeros((), dtype=X.dtype),
         )
 
     @staticmethod
@@ -75,7 +91,8 @@ class DualState(NamedTuple):
         at_lmax = jnp.asarray(False)
         if lam_max is not None:
             at_lmax = jnp.asarray(lam >= lam_max)
-        return DualState(theta=theta, lam=lam, v1=v1, at_lmax=at_lmax)
+        return DualState(theta=theta, lam=lam, v1=v1, at_lmax=at_lmax,
+                         beta_l1=jnp.sum(jnp.abs(beta)))
 
 
 def lambda_max(X: jax.Array, y: jax.Array) -> jax.Array:
@@ -97,6 +114,7 @@ def make_dual_state(X, y, beta, lam, lam_max_val) -> DualState:
         lam=jnp.where(at_max, smax.lam, sseq.lam),
         v1=jnp.where(at_max, smax.v1, sseq.v1),
         at_lmax=jnp.asarray(at_max),
+        beta_l1=jnp.where(at_max, 0.0, sseq.beta_l1),
     )
 
 
@@ -113,34 +131,127 @@ def v2_perp(y: jax.Array, lam_next, state: DualState) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Sphere geometry: every ball rule as an explicit (centre, ρ) pair
+# ---------------------------------------------------------------------------
+
+class SphereTest(NamedTuple):
+    """A safe sphere B(centre, rho) ∋ θ*(λ): discard i iff
+    |x_iᵀ·centre| + rho·‖x_i‖ < 1 (up to the eps safety margin)."""
+
+    centre: jax.Array
+    rho: jax.Array
+
+
+def dpp_sphere(y, lam_next, state: DualState) -> SphereTest:
+    """DPP (Theorem 3): B(θ*(λ₀), |1/λ − 1/λ₀|·‖y‖)."""
+    rho = jnp.abs(1.0 / lam_next - 1.0 / state.lam) * jnp.linalg.norm(y)
+    return SphereTest(centre=state.theta, rho=rho)
+
+
+def imp1_sphere(y, lam_next, state: DualState) -> SphereTest:
+    """Improvement 1 (Theorem 11): B(θ*(λ₀), ‖v₂⊥‖)."""
+    vp = v2_perp(y, lam_next, state)
+    return SphereTest(centre=state.theta, rho=jnp.linalg.norm(vp))
+
+
+def imp2_sphere(y, lam_next, state: DualState) -> SphereTest:
+    """Improvement 2 (Theorem 14): half-radius ball at shifted centre."""
+    d = 0.5 * (1.0 / lam_next - 1.0 / state.lam)
+    return SphereTest(centre=state.theta + d * y,
+                      rho=jnp.abs(d) * jnp.linalg.norm(y))
+
+
+def edpp_sphere(y, lam_next, state: DualState) -> SphereTest:
+    """EDPP (Theorem 16 / Corollary 17): B(θ*(λ₀) + ½v₂⊥, ½‖v₂⊥‖)."""
+    vp = v2_perp(y, lam_next, state)
+    return SphereTest(centre=state.theta + 0.5 * vp,
+                      rho=0.5 * jnp.linalg.norm(vp))
+
+
+def seq_safe_sphere(y, lam_next, state: DualState) -> SphereTest:
+    """Sequential SAFE: B(y/λ, ‖y/λ − θ*(λ₀)‖).
+
+    θ*(λ₀) ∈ F and θ*(λ) = P_F(y/λ) give ‖θ*(λ) − y/λ‖ ≤ ‖θ*(λ₀) − y/λ‖ —
+    the recursive-SAFE construction (El Ghaoui et al.) instantiated with the
+    previous exact dual point.
+    """
+    centre = y / lam_next
+    return SphereTest(centre=centre,
+                      rho=jnp.linalg.norm(centre - state.theta))
+
+
+def safe_sphere(y, lam_next, lam_max_val) -> SphereTest:
+    """Basic SAFE / ST1 (eq. 15) normalised to the unit test: dividing
+    |x_iᵀy| < λ − ‖x_i‖‖y‖(λ_max − λ)/λ_max through by λ gives the sphere
+    B(y/λ, ‖y‖(λ_max − λ)/(λ_max·λ))."""
+    rho = jnp.linalg.norm(y) * (lam_max_val - lam_next) / (
+        lam_max_val * lam_next)
+    return SphereTest(centre=y / lam_next, rho=rho)
+
+
+def gap_sphere(y, lam_next, state: DualState, sup_corr=None) -> SphereTest:
+    """GAP-safe sphere (Fercoq, Gramfort & Salmon 2015, Theorem 2).
+
+    λ²-strong concavity of the dual gives, for ANY primal-dual feasible pair
+    (β₀, θ_c):  ‖θ*(λ) − θ_c‖ ≤ √(2·G_λ(β₀, θ_c))/λ with G the duality gap
+    at λ. We instantiate it with the previous grid point's (β₀, θ₀) — unlike
+    the DPP family this stays safe even when β₀ is an *inexact* solve.
+
+    ``sup_corr`` = ‖Xᵀθ₀‖∞ rescales θ₀ into the feasible polytope under
+    floating point (θ_c = θ₀/max(1, sup_corr)); pass the value cached from
+    the screening matvec, or None to trust θ₀'s feasibility.
+    """
+    s = 1.0 if sup_corr is None else jnp.maximum(1.0, sup_corr)
+    centre = state.theta / s
+    resid = state.theta * state.lam                  # y − Xβ*(λ₀)
+    primal = 0.5 * jnp.sum(jnp.square(resid)) + lam_next * state.beta_l1
+    dual = 0.5 * jnp.sum(jnp.square(y)) - 0.5 * lam_next * lam_next * (
+        jnp.sum(jnp.square(centre - y / lam_next)))
+    gap = jnp.maximum(primal - dual, 0.0)
+    return SphereTest(centre=centre, rho=jnp.sqrt(2.0 * gap) / lam_next)
+
+
+SPHERE_RULES = {
+    "dpp": dpp_sphere,
+    "imp1": imp1_sphere,
+    "imp2": imp2_sphere,
+    "edpp": edpp_sphere,
+    "seq_safe": seq_safe_sphere,
+    "gap": gap_sphere,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("rule",))
+def make_sphere(rule: str, y, lam_next, state: DualState) -> SphereTest:
+    """Jitted dispatch over the sequential sphere constructors."""
+    return SPHERE_RULES[rule](y, lam_next, state)
+
+
+def sphere_mask(X, test: SphereTest, eps: float = EPS_DEFAULT):
+    """Pure-jnp oracle for a SphereTest: the fused-score form
+    |x_iᵀc| + ρ‖x_i‖ < 1 − eps, bit-matching kernels/ref.edpp_screen_ref."""
+    scores = jnp.abs(X.T @ test.centre) + test.rho * jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - eps
+
+
+# ---------------------------------------------------------------------------
 # Discard-mask rules. All return bool[p]: True = discard (β*_i(λ_next) = 0).
+# These are the pure-jnp oracles the engine is validated against.
 # ---------------------------------------------------------------------------
 
 def dpp_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
     """DPP (Theorem 3): ball B(θ*(λ₀), |1/λ − 1/λ₀|·‖y‖)."""
-    rho = jnp.abs(1.0 / lam_next - 1.0 / state.lam) * jnp.linalg.norm(y)
-    scores = jnp.abs(X.T @ state.theta)
-    col_norms = jnp.linalg.norm(X, axis=0)
-    return scores < 1.0 - rho * col_norms - eps
+    return sphere_mask(X, dpp_sphere(y, lam_next, state), eps)
 
 
 def imp1_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
     """Improvement 1 (Theorem 11): ball B(θ*(λ₀), ‖v₂⊥‖)."""
-    vp = v2_perp(y, lam_next, state)
-    rho = jnp.linalg.norm(vp)
-    scores = jnp.abs(X.T @ state.theta)
-    col_norms = jnp.linalg.norm(X, axis=0)
-    return scores < 1.0 - rho * col_norms - eps
+    return sphere_mask(X, imp1_sphere(y, lam_next, state), eps)
 
 
 def imp2_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
     """Improvement 2 (Theorem 14): half-radius ball at shifted centre."""
-    d = 0.5 * (1.0 / lam_next - 1.0 / state.lam)
-    centre = state.theta + d * y
-    rho = jnp.abs(d) * jnp.linalg.norm(y)
-    scores = jnp.abs(X.T @ centre)
-    col_norms = jnp.linalg.norm(X, axis=0)
-    return scores < 1.0 - rho * col_norms - eps
+    return sphere_mask(X, imp2_sphere(y, lam_next, state), eps)
 
 
 def edpp_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
@@ -148,35 +259,32 @@ def edpp_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
 
     Discard i iff  |x_iᵀ(θ*(λ₀) + ½v₂⊥)| < 1 − ½‖v₂⊥‖·‖x_i‖.
     """
-    vp = v2_perp(y, lam_next, state)
-    centre = state.theta + 0.5 * vp
-    rho = 0.5 * jnp.linalg.norm(vp)
-    scores = jnp.abs(X.T @ centre)
-    col_norms = jnp.linalg.norm(X, axis=0)
-    return scores < 1.0 - rho * col_norms - eps
+    return sphere_mask(X, edpp_sphere(y, lam_next, state), eps)
 
 
 def safe_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
-    """Basic SAFE / ST1 (eq. 15): |x_iᵀy| < λ − ‖x_i‖‖y‖(λ_max − λ)/λ_max."""
-    col_norms = jnp.linalg.norm(X, axis=0)
-    rhs = lam_next - col_norms * jnp.linalg.norm(y) * (
-        (lam_max_val - lam_next) / lam_max_val
-    )
-    return jnp.abs(X.T @ y) < rhs - eps
+    """Basic SAFE / ST1 (eq. 15): |x_iᵀy| < λ − ‖x_i‖‖y‖(λ_max − λ)/λ_max,
+    evaluated in the unit-normalised sphere form (see safe_sphere). eq. 15's
+    eps margin lives at λ scale, so it is eps/λ after normalisation."""
+    return sphere_mask(X, safe_sphere(y, lam_next, lam_max_val),
+                       eps / lam_next)
 
 
 def seq_safe_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
-    """Sequential SAFE: sphere centred at y/λ with data-driven radius.
+    """Sequential SAFE: sphere centred at y/λ with data-driven radius."""
+    return sphere_mask(X, seq_safe_sphere(y, lam_next, state), eps)
 
-    θ*(λ₀) ∈ F and θ*(λ) = P_F(y/λ) give ‖θ*(λ) − y/λ‖ ≤ ‖θ*(λ₀) − y/λ‖,
-    i.e. θ*(λ) ∈ B(y/λ, ‖y/λ − θ*(λ₀)‖) — the recursive-SAFE construction
-    (El Ghaoui et al.) instantiated with the previous exact dual point.
-    """
-    centre = y / lam_next
-    rho = jnp.linalg.norm(centre - state.theta)
-    scores = jnp.abs(X.T @ centre)
-    col_norms = jnp.linalg.norm(X, axis=0)
-    return scores < 1.0 - rho * col_norms - eps
+
+def gap_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+    """GAP-safe sphere rule (see gap_sphere). One matvec Xᵀθ₀ serves both
+    the feasibility rescale ‖Xᵀθ₀‖∞ and the scores — the engine fuses this
+    into a single HBM pass; this oracle mirrors the arithmetic exactly."""
+    dot = X.T @ state.theta
+    sup_corr = jnp.max(jnp.abs(dot))
+    test = gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+    s = jnp.maximum(1.0, sup_corr)
+    scores = jnp.abs(dot) / s + test.rho * jnp.linalg.norm(X, axis=0)
+    return scores < 1.0 - eps
 
 
 def strong_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
@@ -207,6 +315,15 @@ def _sup_over_dome(a_scores, a_gdot, a_norms, c, rho, ghat, b):
     return jnp.where(t_star <= t_b, unclipped, clipped)
 
 
+def dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b):
+    """max(sup ±x_iᵀθ) over the dome, from precomputed matvecs — shared by
+    dome_mask and the engine (which streams the two matvecs through the
+    fused kernel with cached column norms)."""
+    sup_pos = _sup_over_dome(scores_c, gdot, col_norms, c, rho, ghat, b)
+    sup_neg = _sup_over_dome(-scores_c, -gdot, col_norms, c, rho, ghat, b)
+    return jnp.maximum(sup_pos, sup_neg)
+
+
 def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
     """DOME test (Xiang et al. [36, 35]) — basic rule only (no sequential
     version exists; paper §4.1).
@@ -232,9 +349,7 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
     scores_c = X.T @ c
     gdot = X.T @ ghat
     col_norms = jnp.linalg.norm(X, axis=0)
-    sup_pos = _sup_over_dome(scores_c, gdot, col_norms, c, rho, ghat, b)
-    sup_neg = _sup_over_dome(-scores_c, -gdot, col_norms, c, rho, ghat, b)
-    return jnp.maximum(sup_pos, sup_neg) < 1.0 - eps
+    return dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) < 1.0 - eps
 
 
 # ---------------------------------------------------------------------------
@@ -255,10 +370,12 @@ RULES = {
     "imp2": imp2_mask,
     "edpp": edpp_mask,
     "seq_safe": seq_safe_mask,
+    "gap": gap_mask,
     "strong": strong_mask,
 }
 
-SAFE_RULES = ("dpp", "imp1", "imp2", "edpp", "seq_safe", "safe", "dome", "none")
+SAFE_RULES = ("dpp", "imp1", "imp2", "edpp", "seq_safe", "gap", "safe",
+              "dome", "none")
 HEURISTIC_RULES = ("strong",)
 
 

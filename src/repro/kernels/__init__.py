@@ -6,9 +6,19 @@ ref.py in tests/test_kernels.py via interpret=True on CPU):
   edpp_screen.py   fused |Xᵀo| + ρ‖x_j‖ screening scores — one HBM pass over X
   group_screen.py  fused group scores ‖X_gᵀo‖ (Corollary 21)
   prox_step.py     fused FISTA soft-threshold + momentum update
+
+ops.py additionally exposes the ``BACKENDS`` registry — named
+:class:`ScreenBackend` triples (matvec / fused_scores / group_scores) over
+which :class:`repro.core.engine.ScreeningEngine` dispatches every ball-test
+rule on the λ-path: ``pallas`` (compiled Mosaic), ``interpret`` (kernel
+bodies on the Pallas interpreter, for CI/CPU), and ``jnp`` (the ref.py
+oracles). See docs/kernels.md for the op contract, tiling/VMEM budget and
+how to add a backend.
 """
 from .ops import (  # noqa: F401
+    BACKENDS,
     INTERPRET,
+    ScreenBackend,
     edpp_screen,
     edpp_screen_scores,
     group_edpp_screen,

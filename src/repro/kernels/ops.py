@@ -1,20 +1,69 @@
-"""Jit'd public wrappers around the Pallas screening kernels.
+"""Jit'd public wrappers + backend dispatch for the Pallas screening kernels.
 
 On CPU (this container) the kernels run in ``interpret=True`` mode; on TPU
 they compile to Mosaic. ``INTERPRET`` auto-detects the backend so the same
 call sites work in both places.
+
+``BACKENDS`` is the registry the :class:`repro.core.engine.ScreeningEngine`
+dispatches through. Each entry is a :class:`ScreenBackend` with three ops
+sharing one contract (see docs/kernels.md):
+
+    matvec(X, centre)            -> dot[p]          = x_jᵀ·centre
+    fused_scores(X, centre, rho) -> (scores[p], sumsq[p])
+                                    scores = |dot| + rho·‖x_j‖, sumsq = ‖x_j‖²
+    group_scores(X, centre, m)   -> gscores[G]      = ‖X_gᵀ·centre‖
+
+Backends: ``pallas`` (compiled Mosaic, TPU), ``interpret`` (the same kernel
+bodies on the Pallas interpreter — CI/CPU), ``jnp`` (the pure-jnp oracles of
+ref.py, also the GSPMD-friendly fallback). All accumulate in f32.
 """
 
 from __future__ import annotations
 
+import functools
+from typing import Callable, NamedTuple
+
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .edpp_screen import edpp_screen_scores, screen_matvec
 from .group_screen import group_screen_scores
 from .prox_step import prox_step
 
 INTERPRET = jax.default_backend() != "tpu"
+
+
+class ScreenBackend(NamedTuple):
+    """One implementation of the screening-op contract (see module doc)."""
+
+    name: str
+    matvec: Callable
+    fused_scores: Callable
+    group_scores: Callable
+
+
+def _kernel_backend(name: str, interpret: bool) -> ScreenBackend:
+    return ScreenBackend(
+        name=name,
+        matvec=functools.partial(screen_matvec, interpret=interpret),
+        fused_scores=functools.partial(edpp_screen_scores,
+                                       interpret=interpret),
+        group_scores=functools.partial(group_screen_scores,
+                                       interpret=interpret),
+    )
+
+
+BACKENDS: dict[str, ScreenBackend] = {
+    "pallas": _kernel_backend("pallas", interpret=False),
+    "interpret": _kernel_backend("interpret", interpret=True),
+    "jnp": ScreenBackend(
+        name="jnp",
+        matvec=jax.jit(ref.screen_matvec_ref),
+        fused_scores=jax.jit(ref.edpp_screen_ref),
+        group_scores=jax.jit(ref.group_screen_ref, static_argnames="m"),
+    ),
+}
 
 
 def edpp_screen(X, centre, rho, eps: float = 1e-6, *, col_norms=None,
@@ -47,6 +96,8 @@ def group_edpp_screen(X, centre, rho, m: int, spec_norms, eps: float = 1e-6,
 
 
 __all__ = [
+    "BACKENDS",
+    "ScreenBackend",
     "edpp_screen",
     "edpp_screen_scores",
     "group_edpp_screen",

@@ -10,6 +10,12 @@ import jax
 import jax.numpy as jnp
 
 
+def _acc_dtype(X: jax.Array):
+    """Accumulation dtype: f32 for f32/bf16 inputs (the kernels' contract),
+    but NEVER downcast — f64 inputs (jax_enable_x64 callers) stay f64."""
+    return jnp.promote_types(X.dtype, jnp.float32)
+
+
 def edpp_screen_ref(X: jax.Array, centre: jax.Array, rho) -> tuple[jax.Array, jax.Array]:
     """Fused screening pass (EDPP/DPP family, Theorem 16 LHS+RHS combined).
 
@@ -18,17 +24,19 @@ def edpp_screen_ref(X: jax.Array, centre: jax.Array, rho) -> tuple[jax.Array, ja
         sumsq[j]  = ‖x_j‖₂²
     Discard feature j iff scores[j] < 1 − eps.
     """
-    X32 = X.astype(jnp.float32)
-    c32 = centre.astype(jnp.float32)
-    dot = X32.T @ c32
-    sumsq = jnp.sum(jnp.square(X32), axis=0)
-    scores = jnp.abs(dot) + jnp.asarray(rho, jnp.float32) * jnp.sqrt(sumsq)
+    acc = _acc_dtype(X)
+    Xa = X.astype(acc)
+    ca = centre.astype(acc)
+    dot = Xa.T @ ca
+    sumsq = jnp.sum(jnp.square(Xa), axis=0)
+    scores = jnp.abs(dot) + jnp.asarray(rho, acc) * jnp.sqrt(sumsq)
     return scores, sumsq
 
 
 def screen_matvec_ref(X: jax.Array, centre: jax.Array) -> jax.Array:
     """Plain screening matvec: dot[j] = x_jᵀ·centre (norms cached by caller)."""
-    return X.astype(jnp.float32).T @ centre.astype(jnp.float32)
+    acc = _acc_dtype(X)
+    return X.astype(acc).T @ centre.astype(acc)
 
 
 def group_screen_ref(X: jax.Array, centre: jax.Array, m: int) -> jax.Array:
@@ -36,7 +44,8 @@ def group_screen_ref(X: jax.Array, centre: jax.Array, m: int) -> jax.Array:
 
         gscores[g] = ‖X_gᵀ·centre‖₂
     """
-    dot = X.astype(jnp.float32).T @ centre.astype(jnp.float32)
+    acc = _acc_dtype(X)
+    dot = X.astype(acc).T @ centre.astype(acc)
     return jnp.linalg.norm(dot.reshape(-1, m), axis=1)
 
 

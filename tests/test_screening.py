@@ -5,16 +5,16 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import (DualState, PathConfig, dome_mask, dpp_mask, edpp_mask,
-                        imp1_mask, imp2_mask, lambda_grid, lambda_max,
-                        lasso_path, make_dual_state, safe_mask, seq_safe_mask,
-                        strong_mask, v2_perp)
+                        gap_mask, imp1_mask, imp2_mask, lambda_grid,
+                        lambda_max, lasso_path, make_dual_state, safe_mask,
+                        seq_safe_mask, strong_mask, v2_perp)
 
 from conftest import small_problem
 from ref_lasso import cd_lasso
 
 SAFE_MASKS = {
     "dpp": dpp_mask, "imp1": imp1_mask, "imp2": imp2_mask,
-    "edpp": edpp_mask, "seq_safe": seq_safe_mask,
+    "edpp": edpp_mask, "seq_safe": seq_safe_mask, "gap": gap_mask,
 }
 
 
@@ -125,7 +125,7 @@ def test_trivial_region():
 
 
 @pytest.mark.parametrize("rule", ["edpp", "dpp", "imp1", "imp2", "seq_safe",
-                                  "strong", "safe", "dome"])
+                                  "gap", "strong", "safe", "dome"])
 def test_path_agrees_with_unscreened(rule):
     """End-to-end: screened path == unscreened path for every rule."""
     X, y, Xf, yf, lmax = _setup(seed=7, n=30, p=120)

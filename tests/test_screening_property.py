@@ -8,7 +8,11 @@ plus the geometric invariants the EDPP construction rests on.
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (DualState, dpp_mask, edpp_mask, imp1_mask, imp2_mask,
                         lambda_max, make_dual_state, v2_perp)

@@ -1,0 +1,53 @@
+#!/usr/bin/env python3
+"""Markdown link checker for CI: every relative link/anchor target in the
+given files/directories must exist in the repo. External (http/https/mailto)
+links are not fetched — CI must not depend on network flakiness.
+
+Usage: python tools/check_links.py README.md docs
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(args: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def main(argv: list[str]) -> int:
+    repo = Path(__file__).resolve().parent.parent
+    bad = 0
+    for md in md_files(argv or ["README.md", "docs"]):
+        text = md.read_text(encoding="utf-8")
+        for target in LINK_RE.findall(text):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                print(f"{md}: broken link -> {target}")
+                bad += 1
+    if bad:
+        print(f"{bad} broken link(s)")
+        return 1
+    print("all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
