@@ -11,7 +11,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import emit, grid_for, ground_truth, normalize_columns, run_rule
+from .common import (beta_err_tol, emit, grid_for, ground_truth,
+                     normalize_columns, run_rule)
 
 DATASETS_QUICK = {
     "colon-like": (62, 1000),
@@ -54,7 +55,8 @@ def run(full: bool = False, num_lambdas: int = 100):
             # sequential=False pins the screening state at λ_max = basic rule
             r = run_rule(X, y, grid, rule, betas_ref, t_ref,
                          sequential=False)
-            tol = 5e-4   # solver-precision bound: coefficient error ~ sqrt(gap/mu)
+            # solver-precision bound tied to solver_tol, floored at 5e-4
+            tol = max(5e-4, beta_err_tol(y, 1e-12))
             # strong is heuristic: borderline features (|x·r|≈λ)
             # re-enter only to solver precision (paper §1 KKT loop)
             assert r.max_beta_err < tol, (rule, r.max_beta_err)

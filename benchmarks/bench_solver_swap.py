@@ -1,23 +1,36 @@
 """Paper Fig. 5 + Table 4 — solver agnosticism: the same screening rules
-bolted onto a *different* solver.
+bolted onto a *different* solver — now driven through the SolverEngine.
 
 The paper swaps SLEP's solver for LARS; LARS's sequential active-set
 updates are SPMD-hostile (DESIGN §9.1), so our second solver is cyclic
 coordinate descent (exact per-coordinate minimisation — the same
 "fundamentally different solver class" role LARS plays in Table 4).
-Measured: strong rule + CD vs EDPP + CD, against unscreened CD.
+Measured: strong rule + CD vs EDPP + CD against unscreened CD, plus
+EDPP + FISTA for the strategy A/B.
+
+Because the solvers are SolverEngine strategies behind the kernel-backend
+registry, the same grid also A/Bs **solver backends** with the same flag
+surface as screening: every configuration runs once per backend in
+``BACKENDS_UNDER_TEST`` (the auto-detected default — honouring
+``REPRO_SOLVER_BACKEND`` / ``INTERPRET=1`` — plus the pure-jnp reference
+when they differ). Each cd row reports ``gram_step_frac``: the fraction of
+λ-steps solved on cached Gram blocks (the n ≪ p crossover).
+
+Results land in the ``bench_solver_swap`` section of ``BENCH_solver.json``
+(schema-checked by tools/check_bench_schema.py; CI runs this bench --quick
+under INTERPRET=1 so solver-bench regressions fail in PR).
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import PathConfig, lasso_path
+from repro.core import PathConfig, default_solver_backend, lasso_path
 
-from .common import ZERO_TOL, emit, grid_for
+from .common import (beta_err_tol, emit, grid_for, run_rule,
+                     write_bench_section)
 
 DATASETS_QUICK = {
     "breast-like": (44, 800),
@@ -32,6 +45,17 @@ DATASETS_FULL = {
     "mnist-like": (784, 50000),
 }
 
+# (rule, solver): the paper's Table 4 pairs + the strategy A/B
+CONFIGS = [("strong", "cd"), ("edpp", "cd"), ("edpp", "fista")]
+SOLVER_TOL = 1e-12
+
+
+def backends_under_test() -> list[str]:
+    """The auto-detected backend (REPRO_SOLVER_BACKEND / INTERPRET aware)
+    plus the pure-jnp reference when they differ."""
+    default = default_solver_backend()
+    return [default] if default == "jnp" else [default, "jnp"]
+
 
 def make_dataset(n, p, seed=0):
     rng = np.random.default_rng(seed)
@@ -43,34 +67,68 @@ def make_dataset(n, p, seed=0):
     return X, y
 
 
-def timed_path(X, y, grid, cfg):
-    lasso_path(X, y, grid, cfg)
-    t0 = time.perf_counter()
-    res = lasso_path(X, y, grid, cfg)
-    return res, time.perf_counter() - t0
-
-
 def run(full: bool = False, num_lambdas: int = 100):
     datasets = DATASETS_FULL if full else DATASETS_QUICK
+    backends = backends_under_test()
     rows = []
+    json_rows = []
     for name, (n, p) in datasets.items():
         X, y = make_dataset(n, p)
         grid = grid_for(X, y, num=num_lambdas)
-        base = PathConfig(rule="none", solver="cd", solver_tol=1e-12,
-                          kkt_tol=1e-8)
-        ref, t_ref = timed_path(X, y, grid, base)
-        emit(f"solver_swap/{name}/cd", t_ref * 1e6, "speedup=1.00")
-        for rule in ["strong", "edpp"]:
-            cfg = dataclasses.replace(base, rule=rule)
-            res, dt = timed_path(X, y, grid, cfg)
-            err = float(np.abs(res.betas - ref.betas).max())
-            assert err < 5e-4, (rule, err)
-            emit(f"solver_swap/{name}/{rule}+cd", dt * 1e6,
-                 f"speedup={t_ref / dt:.2f}")
-            rows.append((name, rule, t_ref / dt))
+        tol = beta_err_tol(y, SOLVER_TOL)
+        for backend in backends:
+            # unscreened CD reference (the paper's 'solver' column), timed
+            # on the SAME backend so speedup_vs_unscreened isolates the
+            # screening effect instead of the backend difference
+            base = PathConfig(rule="none", solver="cd",
+                              solver_tol=SOLVER_TOL, kkt_tol=1e-8,
+                              solver_backend=backend)
+            lasso_path(X, y, grid, base)           # warm compile
+            t0 = time.perf_counter()
+            ref = lasso_path(X, y, grid, base)
+            t_ref = time.perf_counter() - t0
+            emit(f"solver_swap/{name}/cd@{backend}", t_ref * 1e6,
+                 "speedup=1.00")
+            for rule, solver in CONFIGS:
+                r = run_rule(X, y, grid, rule, ref.betas, t_ref,
+                             solver_tol=SOLVER_TOL,
+                             solver=solver, solver_backend=backend)
+                assert r.max_beta_err < tol, \
+                    (name, rule, solver, backend, r.max_beta_err, tol)
+                emit(f"solver_swap/{name}/{rule}+{solver}@{backend}",
+                     r.path_time_s * 1e6,
+                     f"speedup={r.speedup:.2f}"
+                     f" gram_step_frac={r.gram_step_frac:.2f}"
+                     f" host_syncs_per_step={r.gap_checks_per_step:.2f}")
+                rows.append((name, rule, solver, backend, r.speedup))
+                json_rows.append({
+                    "dataset": name,
+                    "rule": rule,
+                    "solver": solver,
+                    "solver_backend": r.solver_backend,
+                    "gap_check_cadence": "every_10",
+                    "gram_step_frac": r.gram_step_frac,
+                    "host_syncs_per_step": r.gap_checks_per_step,
+                    "max_beta_err": r.max_beta_err,
+                    "num_lambdas": num_lambdas,
+                    "solver_hbm_passes_per_step":
+                        r.solver_x_passes_per_step,
+                    "solver_iters": r.solver_iters,
+                    "speedup_vs_unscreened": r.speedup,
+                    "wall_time_s": r.path_time_s,
+                })
+    write_bench_section(
+        "bench_solver_swap",
+        meta={"full": full,
+              "shapes": {k: list(v) for k, v in sorted(datasets.items())},
+              "backends": backends, "solver_tol": SOLVER_TOL},
+        rows=json_rows)
     return rows
 
 
 if __name__ == "__main__":
     import sys
-    run(full="--full" in sys.argv)
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    run(full="--full" in sys.argv,
+        num_lambdas=25 if "--quick" in sys.argv else 50)

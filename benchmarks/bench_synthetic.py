@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from repro.data import lasso_problem
 
-from .common import emit, grid_for, ground_truth, run_rule
+from .common import beta_err_tol, emit, grid_for, ground_truth, run_rule
 
 RULES = ["seq_safe", "strong", "edpp"]
 
@@ -33,8 +33,9 @@ def run(full: bool = False, num_lambdas: int = 100, trials: int = 1):
                 for rule in RULES:
                     r = run_rule(X, y, grid, rule, betas_ref, t_ref)
                     # strong is heuristic: borderline features (|x·r|≈λ)
-                    # re-enter only to solver precision (§1 KKT loop)
-                    tol = 5e-4   # solver-precision bound: coefficient error ~ sqrt(gap/mu)
+                    # re-enter only to solver precision (§1 KKT loop);
+                    # bound tied to solver_tol, floored at the seed's 5e-4
+                    tol = max(5e-4, beta_err_tol(y, 1e-12))
                     assert r.max_beta_err < tol, (rule, r.max_beta_err)
                     emit(f"synthetic/{tag}/p{nnz}/{rule}",
                          r.path_time_s * 1e6,

@@ -7,16 +7,25 @@ spaced on λ/λ_max ∈ [0.05, 1.0]; measure
     truth = unscreened float64 solve at tight duality gap);
   * speedup        — time(unscreened path) / time(rule + reduced path);
   * screening cost — the rule's own running time (paper Tables 1-3, last
-    columns).
+    columns);
+  * solver telemetry — duality-gap checks (host syncs) per λ-step, the
+    Gram-CD step fraction and solver HBM passes, via the SolverEngine
+    fields of PathStepStats.
 
 Timing is warm (jit pre-compiled by a first throwaway run; the paper's
 MATLAB numbers have no compile phase either). Default sizes are scaled for
 the CPU container; ``--full`` restores paper sizes.
+
+``write_bench_section`` merges a section into ``BENCH_solver.json`` at the
+repo root — the machine-readable artifact CI's solver-bench smoke job
+schema-checks (tools/check_bench_schema.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 import numpy as np
@@ -26,6 +35,8 @@ from repro.core import (PathConfig, lambda_grid, lasso_path, lambda_max,
 import jax.numpy as jnp
 
 ZERO_TOL = 1e-8
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_solver.json")
 
 
 @dataclasses.dataclass
@@ -38,6 +49,35 @@ class RuleResult:
     max_beta_err: float
     x_passes_per_step: float = 0.0  # engine HBM passes over X per screen
     jnp_x_passes: int = 0           # what the hand-rolled jnp mask would cost
+    gap_checks_per_step: float = 0.0  # solver duality-gap evals (host syncs)
+    gram_step_frac: float = 0.0     # fraction of steps solved via Gram CD
+    solver_backend: str = ""
+    solver_iters: int = 0           # total inner iterations across the path
+    solver_x_passes_per_step: float = 0.0  # full-X-equivalent solver passes
+
+
+def beta_err_tol(y, solver_tol: float, kappa: float = 25.0) -> float:
+    """Exactness threshold for comparing two solver-precision paths.
+
+    Both paths stop at relative duality gap ``solver_tol``, i.e. absolute
+    gap ε ≤ solver_tol·½‖y‖². For a gap-ε point, ‖β − β*‖ ≤ √(2ε/μ) with μ
+    the smallest curvature of the active block (σ²_min(X_active)); comparing
+    two ε-points doubles it. μ is data-dependent — on the ill-conditioned
+    near-square reduced problems the weak rules keep (seq-SAFE at n ≈ kept)
+    σ²_min drops to ~1e-2·‖y‖²/n — so ``kappa`` absorbs √(2·2/μ) with
+    headroom. The point of tying the bound to ``solver_tol``: halve the
+    solver precision and the acceptable drift scales as √solver_tol instead
+    of silently failing (the seed's fixed 5e-4 did exactly that on
+    leukemia-like at 8.26e-4).
+    """
+    scale = 0.5 * float(np.asarray(y) @ np.asarray(y))
+    return kappa * float(np.sqrt(solver_tol * scale))
+
+
+def stats_means(res, attr: str) -> float:
+    """Mean of a PathStepStats field over the screened (non-trivial) steps."""
+    vals = [getattr(s, attr) for s in res.stats if s.screen_time_s > 0]
+    return float(np.mean(vals)) if vals else 0.0
 
 
 def ground_truth(X, y, grid, solver_tol=1e-12) -> "tuple[np.ndarray, float]":
@@ -50,11 +90,11 @@ def ground_truth(X, y, grid, solver_tol=1e-12) -> "tuple[np.ndarray, float]":
 
 
 def run_rule(X, y, grid, rule, betas_ref, t_ref, solver_tol=1e-12,
-             sequential=True) -> RuleResult:
+             sequential=True, **cfg_overrides) -> RuleResult:
     # kkt_tol tight so the heuristic strong rule recovers the exact
     # solution (its violations are re-added down to fp precision)
     cfg = PathConfig(rule=rule, solver_tol=solver_tol,
-                     sequential=sequential, kkt_tol=1e-8)
+                     sequential=sequential, kkt_tol=1e-8, **cfg_overrides)
     lasso_path(X, y, grid, cfg)                    # warm compile
     t0 = time.perf_counter()
     res = lasso_path(X, y, grid, cfg)
@@ -66,19 +106,42 @@ def run_rule(X, y, grid, rule, betas_ref, t_ref, solver_tol=1e-12,
         n_zero = int(zero_truth.sum())
         rej[k] = res.stats[k].n_discarded / max(n_zero, 1)
     err = float(np.abs(res.betas - betas_ref).max())
-    # trivial-region steps (λ ≥ λmax) never screen; exclude them from the mean
-    screened = [s.x_passes for s in res.stats if s.screen_time_s > 0]
-    xpass = float(np.mean(screened)) if screened else 0.0
-    return RuleResult(rule=rule, path_time_s=dt,
-                      screen_time_s=res.total_screen_time,
-                      rejection=rej, speedup=t_ref / max(dt, 1e-12),
-                      max_beta_err=err, x_passes_per_step=xpass,
-                      jnp_x_passes=oracle_x_passes(rule))
+    screened = [s for s in res.stats if s.screen_time_s > 0]
+    return RuleResult(
+        rule=rule, path_time_s=dt,
+        screen_time_s=res.total_screen_time,
+        rejection=rej, speedup=t_ref / max(dt, 1e-12),
+        max_beta_err=err,
+        # trivial-region steps (λ ≥ λmax) never screen/solve; excluded
+        x_passes_per_step=stats_means(res, "x_passes"),
+        jnp_x_passes=oracle_x_passes(rule),
+        gap_checks_per_step=stats_means(res, "gap_checks"),
+        gram_step_frac=stats_means(res, "gram_step_frac"),
+        solver_backend=screened[0].solver_backend if screened else "",
+        solver_iters=int(sum(s.solver_iters for s in res.stats)),
+        solver_x_passes_per_step=stats_means(res, "solver_x_passes"),
+    )
 
 
 def emit(name: str, us_per_call: float, derived: str):
     """The run.py CSV convention: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench_section(section: str, meta: dict, rows: list[dict],
+                        path: str = BENCH_JSON) -> None:
+    """Merge {section: {meta, rows}} into the BENCH_solver.json artifact."""
+    doc = {"sections": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            doc = {"sections": {}}
+    doc.setdefault("sections", {})[section] = {"meta": meta, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
 
 
 def normalize_columns(X, y=None):

@@ -11,32 +11,53 @@ Layering (see docs/screening-rules.md for the rule-by-rule map):
                         per-step screen is one streaming HBM pass over X,
                         dispatched through the kernels.ops.BACKENDS registry
                         (pallas | interpret | jnp)
+    solver.py           SolverEngine — the solver twin of the screening
+                        engine: fista/cd/group_fista as registered
+                        strategies, device-resident while_loop iteration
+                        through the fused solver kernels (same BACKENDS
+                        registry), gap-check cadence, Gram-CD crossover,
+                        per-bucket Lipschitz cache
     path.py             sequential λ-path driver (screen → reduce → solve →
-                        KKT re-check), built on the engine
-    distributed.py      shard_map / pjit variants whose per-shard score
-                        blocks reuse the engine's block_scores arithmetic
+                        KKT re-check): one generic _path_driver consuming
+                        both engines
+    distributed.py      shard_map / pjit variants whose per-shard score and
+                        solver-update blocks reuse the engines' arithmetic
 
 Public API:
     lambda_max, DualState, screen, edpp_mask, dpp_mask, ...   (screening)
     SphereTest, edpp_sphere, gap_mask, make_sphere, ...       (geometry)
     ScreeningEngine, GroupScreeningEngine, PathWorkspace      (engine)
     register_backend, available_backends, default_backend     (backends)
-    fista, cd, soft_threshold                                 (solvers)
-    group_fista, group_lambda_max                             (group solver)
+    SolverEngine, register_solver, available_solvers          (solver engine)
+    fista, cd, group_fista, soft_threshold, SolveResult       (solvers)
+    group_lambda_max, group_duality_gap                       (group solver)
     group_screen, group_edpp_mask, GroupDualState             (group screening)
     lasso_path, group_lasso_path, PathConfig, lambda_grid     (path driver)
 """
 
 from .lasso import (  # noqa: F401
-    FistaResult,
-    cd,
     duality_gap,
     dual_objective,
     feasible_dual_point,
-    fista,
+    gap_from_residual,
     power_iteration,
     primal_objective,
     soft_threshold,
+    top_eigenpair,
+)
+from .solver import (  # noqa: F401
+    FistaResult,
+    GroupFistaResult,
+    SOLVERS,
+    SolveResult,
+    SolverEngine,
+    available_solvers,
+    cd,
+    default_solver_backend,
+    fista,
+    group_fista,
+    register_solver,
+    resolve_solver_backend,
 )
 from .screening import (  # noqa: F401
     EPS_DEFAULT,
@@ -83,9 +104,8 @@ from .engine import (  # noqa: F401
     resolve_backend,
 )
 from .group_lasso import (  # noqa: F401
-    GroupFistaResult,
     group_duality_gap,
-    group_fista,
+    group_gap_from_residual,
     group_lambda_max,
     group_primal,
     group_soft_threshold,

@@ -31,8 +31,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .engine import block_scores
-from .lasso import soft_threshold
 from .screening import EPS_DEFAULT
+from .solver import resolve_solver_backend
 
 
 def feature_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -235,11 +235,19 @@ def dist_power_iteration(mesh: Mesh, X, iters: int = 30):
 
 
 def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
-               iters: int = 200, overlap: str = "none", n_chunks: int = 4):
+               iters: int = 200, overlap: str = "none", n_chunks: int = 4,
+               solver_backend=None):
     """Feature-sharded FISTA, fixed iteration count (jit/scan-friendly).
 
     Per iteration: 1 psum of an N-vector (the fitted values), local matvecs
-    otherwise. Collective-overlap modes (§Perf hillclimb):
+    otherwise; the per-shard soft-threshold + momentum update dispatches
+    through the SolverEngine's backend registry (``solver_backend`` =
+    "pallas" | "interpret" | "jnp" | None → ``REPRO_SOLVER_BACKEND`` /
+    auto) — the same fused ``prox_step`` arithmetic as the single-chip
+    solver, so sharded and single-chip iterates agree on each local block
+    (mirror of ``engine.block_scores`` on the screening side).
+
+    Collective-overlap modes (§Perf hillclimb):
 
     * ``"none"``    — synchronous reference: one full-N psum per iteration.
     * ``"chunked"`` — **exact** overlap: split the sample axis into
@@ -254,6 +262,8 @@ def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
       Kept for the record; do not use in production.
     """
     axes = feature_axes(mesh)
+    backend = resolve_solver_backend(solver_backend)
+    prox_op = backend.prox_step or resolve_solver_backend("jnp").prox_step
     step = 1.0 / jnp.maximum(lipschitz, 1e-12)
     n = X.shape[0]
     assert overlap in ("none", "chunked", "stale")
@@ -287,9 +297,9 @@ def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
             Xz = jax.lax.psum(Xb @ z_b, axes)
             Xz_next = Xz
             g = Xb.T @ (Xz - y)
-        beta_new = soft_threshold(z_b - step * g, step * lam)
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        z_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta_b)
+        mom = (t - 1.0) / t_new
+        beta_new, z_new = prox_op(z_b, g, beta_b, step, lam, mom)
         return beta_new, z_new, t_new, Xz_next
 
     def scan_body(carry, _):

@@ -30,8 +30,6 @@ on every rule and backend.
 
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
@@ -70,12 +68,7 @@ def register_backend(name: str, backend: ops.ScreenBackend) -> None:
 
 
 def default_backend() -> str:
-    env = os.environ.get("REPRO_SCREEN_BACKEND")
-    if env:
-        return env
-    if os.environ.get("INTERPRET", "") not in ("", "0"):
-        return "interpret"
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return ops.default_backend_name("REPRO_SCREEN_BACKEND")
 
 
 def resolve_backend(

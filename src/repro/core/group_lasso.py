@@ -1,4 +1,4 @@
-"""Group Lasso solver (paper eq. 50) — block-FISTA in pure JAX.
+"""Group Lasso (paper eq. 50) objective/dual helpers.
 
     inf_β ½‖y − Σ_g X_g β_g‖² + λ Σ_g √n_g ‖β_g‖₂
 
@@ -7,17 +7,18 @@ layout of the paper's own §4.2 experiments; groups live on the last axis as
 ``β.reshape(G, m)``. The dual (eq. 51) and KKT system (eqs. 52-53) mirror the
 Lasso exactly, with the polytope replaced by an intersection of ellipsoids —
 which is all the EDPP machinery needs (still closed + convex, Lemma 18).
+
+The block-FISTA solver itself is the ``group_fista`` strategy in
+:mod:`repro.core.solver` (re-exported here for compatibility); this module
+owns the math it shares with the screening layer.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 
-from .lasso import power_iteration
+from .lasso import power_iteration  # noqa: F401  (compat re-export)
 
 
 def group_soft_threshold(u: jax.Array, thresh, m: int) -> jax.Array:
@@ -40,75 +41,23 @@ def group_primal(X, y, beta, lam, m: int):
     return 0.5 * jnp.sum(jnp.square(r)) + lam * jnp.sqrt(float(m)) * jnp.sum(gnorms)
 
 
+def group_gap_from_residual(r, dot, beta, lam, m: int, y):
+    """Group duality gap from precomputed r = y − Xβ and dot = Xᵀr.
+
+    The dual point is r/λ scaled into F̄ = {θ: ‖X_gᵀθ‖ ≤ √n_g ∀g}; same
+    hoisted-passes trick as :func:`repro.core.lasso.gap_from_residual`.
+    """
+    gcorr = jnp.linalg.norm(dot.reshape(-1, m), axis=1)
+    ratio = jnp.max(gcorr) / jnp.sqrt(float(m))
+    s = jnp.minimum(1.0, lam / (ratio + 1e-30))
+    gnorms = jnp.linalg.norm(beta.reshape(-1, m), axis=1)
+    return (0.5 * jnp.sum(jnp.square(r))
+            + lam * jnp.sqrt(float(m)) * jnp.sum(gnorms)
+            - 0.5 * jnp.sum(jnp.square(y))
+            + 0.5 * jnp.sum(jnp.square(s * r - y)))
+
+
 def group_duality_gap(X, y, beta, lam, m: int):
     """Gap with the dual point r/λ scaled into F̄ = {θ: ‖X_gᵀθ‖ ≤ √n_g ∀g}."""
     r = y - X @ beta
-    corr = (X.T @ r).reshape(-1, m)
-    ratio = jnp.max(jnp.linalg.norm(corr, axis=1) / jnp.sqrt(float(m)))
-    s = jnp.minimum(1.0, lam / (ratio + 1e-30))
-    theta = s * r / lam
-    dual = 0.5 * jnp.sum(jnp.square(y)) - 0.5 * lam**2 * jnp.sum(
-        jnp.square(theta - y / lam)
-    )
-    return group_primal(X, y, beta, lam, m) - dual
-
-
-class GroupFistaResult(NamedTuple):
-    beta: jax.Array
-    gap: jax.Array
-    iters: jax.Array
-    converged: jax.Array
-
-
-@functools.partial(jax.jit, static_argnames=("m", "max_iter", "check_every"))
-def group_fista(
-    X: jax.Array,
-    y: jax.Array,
-    lam,
-    m: int,
-    beta0: jax.Array | None = None,
-    *,
-    max_iter: int = 2000,
-    tol: float = 1e-8,
-    check_every: int = 10,
-    lipschitz=None,
-) -> GroupFistaResult:
-    """Accelerated proximal gradient for the group Lasso.
-
-    Zero-padded group blocks are fixed points (gradient 0, prox keeps 0), so
-    the screened/reduced path driver can feed power-of-two group buckets.
-    """
-    p = X.shape[1]
-    dtype = X.dtype
-    if beta0 is None:
-        beta0 = jnp.zeros((p,), dtype=dtype)
-    L = power_iteration(X) * 1.05 if lipschitz is None else lipschitz
-    step = 1.0 / jnp.maximum(L, 1e-12)
-    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
-
-    def gap_of(beta):
-        return group_duality_gap(X, y, beta, lam, m)
-
-    def cond(state):
-        _, _, _, k, gap = state
-        return jnp.logical_and(k < max_iter, gap > tol * scale)
-
-    def body(state):
-        beta, z, t, k, _ = state
-
-        def one_step(carry, _):
-            beta, z, t = carry
-            g = X.T @ (X @ z - y)
-            beta_new = group_soft_threshold(z - step * g, step * lam, m)
-            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-            z_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta)
-            return (beta_new, z_new, t_new), None
-
-        (beta, z, t), _ = jax.lax.scan(one_step, (beta, z, t), None,
-                                       length=check_every)
-        return beta, z, t, k + check_every, gap_of(beta)
-
-    t0 = jnp.asarray(1.0, dtype=dtype)
-    state = (beta0, beta0, t0, jnp.asarray(0), gap_of(beta0))
-    beta, _, _, k, gap = jax.lax.while_loop(cond, body, state)
-    return GroupFistaResult(beta, gap, k, gap <= tol * scale)
+    return group_gap_from_residual(r, X.T @ r, beta, lam, m, y)

@@ -1,30 +1,26 @@
-"""Lasso solvers in pure JAX (``jax.lax`` control flow, jit-friendly).
+"""Lasso objective/dual geometry helpers shared by every solver strategy.
 
-The paper's screening rules are solver-agnostic (§1, §4.1.2): they bolt onto
-*any* Lasso solver. We provide two solvers with different trade-offs:
-
-* :func:`fista` — accelerated proximal gradient (same family as the SLEP
-  solver [22] used in the paper's Tables 1-3). Matmul-bound, MXU-friendly,
-  the default for large problems and the distributed path.
-* :func:`cd` — cyclic coordinate descent (exact per-coordinate minimisation,
-  ``lax.fori_loop``). Sequential but extremely accurate; used as the
-  second solver for the paper's "any solver" claim (Table 4) and as a
-  high-precision oracle in the tests.
-
-Both accept zero-padded column buffers (zero columns are fixed points), which
-is how the λ-path driver feeds screened/reduced problems at a small number of
-static shapes (power-of-two buckets) to avoid recompilation.
+The actual solvers (FISTA, coordinate descent, their Gram variants and the
+group-Lasso block FISTA) live in :mod:`repro.core.solver` as strategies
+dispatched by the :class:`~repro.core.solver.SolverEngine`; the public
+``fista`` / ``cd`` entry points are re-exported from there. This module owns
+the math they share:
 
 Primal:  P(β)  = ½‖y − Xβ‖² + λ‖β‖₁                      (paper eq. 1)
 Dual:    D(θ)  = ½‖y‖² − λ²/2 ‖θ − y/λ‖²  s.t. |x_iᵀθ|≤1  (paper eq. 2)
-Duality gap is used as the stopping criterion; a feasible dual point is
-obtained by scaling the residual into the polytope F.
+Duality gap is the stopping criterion; a feasible dual point is obtained by
+scaling the residual into the polytope F.
+
+``power_iteration`` / ``top_eigenpair`` estimate the Lipschitz constant
+‖X‖₂² on matvecs (never forming the p×p Gram). The seed/key/dtype plumbing
+is explicit and a pre-computed eigenvector can be passed as ``v0`` so
+repeated path solves warm-start the estimate instead of re-running the full
+iteration per bucket — the SolverEngine caches (eig, v) per bucket size.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -35,21 +31,38 @@ def soft_threshold(u: jax.Array, thresh) -> jax.Array:
     return jnp.sign(u) * jnp.maximum(jnp.abs(u) - thresh, 0.0)
 
 
-def power_iteration(X: jax.Array, iters: int = 50, seed: int = 0) -> jax.Array:
-    """Largest eigenvalue of XᵀX (= ‖X‖₂²) via power iteration on matvecs.
-
-    Never forms the p×p Gram matrix, so it is safe for p ≫ N.
-    """
-    p = X.shape[1]
-    v = jax.random.normal(jax.random.PRNGKey(seed), (p,), dtype=X.dtype)
-    v = v / (jnp.linalg.norm(v) + 1e-30)
+@functools.partial(jax.jit, static_argnames="iters")
+def _power_iterate(X: jax.Array, v0: jax.Array, iters: int):
+    v = v0 / (jnp.linalg.norm(v0) + 1e-30)
 
     def body(_, v):
         w = X.T @ (X @ v)
         return w / (jnp.linalg.norm(w) + 1e-30)
 
     v = jax.lax.fori_loop(0, iters, body, v)
-    return jnp.sum(jnp.square(X @ v))
+    return jnp.sum(jnp.square(X @ v)), v
+
+
+def top_eigenpair(X: jax.Array, iters: int = 50, *, v0=None, key=None,
+                  seed: int = 0, dtype=None) -> tuple[jax.Array, jax.Array]:
+    """(λ_max(XᵀX), eigenvector) via power iteration on matvecs.
+
+    Never forms the p×p Gram matrix, so it is safe for p ≫ N. Pass ``v0``
+    (e.g. the eigenvector from a previous, similar X) to warm-start: a few
+    iterations then suffice where a cold start needs ~50.
+    """
+    dtype = X.dtype if dtype is None else dtype
+    if v0 is None:
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        v0 = jax.random.normal(key, (X.shape[1],), dtype=dtype)
+    return _power_iterate(X, jnp.asarray(v0, dtype), iters)
+
+
+def power_iteration(X: jax.Array, iters: int = 50, seed: int = 0, *,
+                    v0=None, key=None, dtype=None) -> jax.Array:
+    """Largest eigenvalue of XᵀX (= ‖X‖₂²); see :func:`top_eigenpair`."""
+    return top_eigenpair(X, iters, v0=v0, key=key, seed=seed, dtype=dtype)[0]
 
 
 def primal_objective(X, y, beta, lam):
@@ -74,119 +87,20 @@ def feasible_dual_point(X, y, beta, lam):
     return s * r / lam
 
 
+def gap_from_residual(r, dot, beta, lam, y):
+    """Duality gap from a precomputed residual r = y − Xβ and dot = Xᵀr.
+
+    Identical arithmetic to :func:`duality_gap` with the two X passes
+    hoisted out — the solver strategies' cadence-amortised gap check, and
+    the Gram CD path's zero-extra-pass check (its dot comes from c − Gβ).
+    """
+    corr = jnp.max(jnp.abs(dot))
+    s = jnp.minimum(1.0, lam / (corr + 1e-30))
+    return (0.5 * jnp.sum(jnp.square(r)) + lam * jnp.sum(jnp.abs(beta))
+            - 0.5 * jnp.sum(jnp.square(y))
+            + 0.5 * jnp.sum(jnp.square(s * r - y)))
+
+
 def duality_gap(X, y, beta, lam):
-    theta = feasible_dual_point(X, y, beta, lam)
-    return primal_objective(X, y, beta, lam) - dual_objective(y, theta, lam)
-
-
-class FistaResult(NamedTuple):
-    beta: jax.Array
-    gap: jax.Array       # final duality gap
-    iters: jax.Array     # iterations actually run
-    converged: jax.Array
-
-
-@functools.partial(jax.jit, static_argnames=("max_iter", "check_every"))
-def fista(
-    X: jax.Array,
-    y: jax.Array,
-    lam,
-    beta0: jax.Array | None = None,
-    *,
-    max_iter: int = 2000,
-    tol: float = 1e-8,
-    check_every: int = 10,
-    lipschitz=None,
-) -> FistaResult:
-    """FISTA for the Lasso with duality-gap stopping.
-
-    ``tol`` is a *relative* gap tolerance: stop when gap ≤ tol·½‖y‖².
-    Zero columns in ``X`` are fixed points (their gradient is 0), so padded
-    buffers from the screening driver are handled transparently.
-    """
-    p = X.shape[1]
-    dtype = X.dtype
-    if beta0 is None:
-        beta0 = jnp.zeros((p,), dtype=dtype)
-    L = power_iteration(X) * 1.05 if lipschitz is None else lipschitz
-    L = jnp.maximum(L, 1e-12)
-    step = 1.0 / L
-    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
-
-    def gap_of(beta):
-        return duality_gap(X, y, beta, lam)
-
-    def cond(state):
-        beta, z, t, k, gap = state
-        return jnp.logical_and(k < max_iter, gap > tol * scale)
-
-    def body(state):
-        beta, z, t, k, _ = state
-
-        def one_step(carry, _):
-            beta, z, t = carry
-            g = X.T @ (X @ z - y)
-            beta_new = soft_threshold(z - step * g, step * lam)
-            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-            z_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta)
-            return (beta_new, z_new, t_new), None
-
-        (beta, z, t), _ = jax.lax.scan(
-            one_step, (beta, z, t), None, length=check_every
-        )
-        return beta, z, t, k + check_every, gap_of(beta)
-
-    t0 = jnp.asarray(1.0, dtype=dtype)
-    state = (beta0, beta0, t0, jnp.asarray(0), gap_of(beta0))
-    beta, _, _, k, gap = jax.lax.while_loop(cond, body, state)
-    return FistaResult(beta, gap, k, gap <= tol * scale)
-
-
-@functools.partial(jax.jit, static_argnames=("max_epochs",))
-def cd(
-    X: jax.Array,
-    y: jax.Array,
-    lam,
-    beta0: jax.Array | None = None,
-    *,
-    max_epochs: int = 200,
-    tol: float = 1e-10,
-) -> FistaResult:
-    """Cyclic coordinate descent with residual updates.
-
-    Per coordinate:  β_j ← S(x_jᵀr + ‖x_j‖²β_j, λ) / ‖x_j‖²
-    with the residual r = y − Xβ maintained incrementally. Zero-norm
-    (padded) columns are skipped via a `where`. Stopping: relative duality
-    gap, checked once per epoch.
-    """
-    n, p = X.shape
-    dtype = X.dtype
-    if beta0 is None:
-        beta0 = jnp.zeros((p,), dtype=dtype)
-    sqnorms = jnp.sum(jnp.square(X), axis=0)
-    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
-
-    def coord(j, carry):
-        beta, r = carry
-        xj = X[:, j]
-        bj = beta[j]
-        nj = sqnorms[j]
-        rho = xj @ r + nj * bj
-        bj_new = jnp.where(nj > 0, soft_threshold(rho, lam) / jnp.maximum(nj, 1e-30), 0.0)
-        r = r + xj * (bj - bj_new)
-        return beta.at[j].set(bj_new), r
-
-    def cond(state):
-        beta, r, k, gap = state
-        return jnp.logical_and(k < max_epochs, gap > tol * scale)
-
-    def body(state):
-        beta, r, k, _ = state
-        beta, r = jax.lax.fori_loop(0, p, coord, (beta, r))
-        gap = duality_gap(X, y, beta, lam)
-        return beta, r, k + 1, gap
-
-    r0 = y - X @ beta0
-    state = (beta0, r0, jnp.asarray(0), duality_gap(X, y, beta0, lam))
-    beta, _, k, gap = jax.lax.while_loop(cond, body, state)
-    return FistaResult(beta, gap, k, gap <= tol * scale)
+    r = y - X @ beta
+    return gap_from_residual(r, X.T @ r, beta, lam, y)

@@ -6,16 +6,28 @@ point θ*(λ_k) from each solution into the screen for λ_{k+1}.
 
 Engineering notes
 -----------------
-* Every per-step screen goes through the :class:`repro.core.engine`
-  ``ScreeningEngine``: the λ-independent geometry (column norms, λ_max, the
-  λ_max ray) is computed ONCE per path by a fused kernel pass, after which
-  each screen is a single streaming HBM pass over X regardless of rule
-  (``PathStepStats.x_passes`` records it). Pick the kernel backend with
-  ``PathConfig.backend`` ("pallas" | "interpret" | "jnp" | None = auto).
+* ``lasso_path`` and ``group_lasso_path`` are thin wrappers over ONE generic
+  :func:`_path_driver` that owns bucketing, column gather, the warm-start
+  scatter/gather of β between buckets and the KKT re-check rounds — and
+  consumes BOTH engines:
+
+  - every per-step screen goes through the :class:`repro.core.engine`
+    ``ScreeningEngine`` (λ-independent geometry cached once, one streaming
+    HBM pass over X per screen, ``PathStepStats.x_passes``);
+  - every reduced solve goes through the :class:`repro.core.solver`
+    ``SolverEngine`` (device-resident ``lax.while_loop`` iteration through
+    the fused solver kernels, duality gap checked every
+    ``gap_check_cadence`` iterations — ``PathStepStats.gap_checks`` — and
+    the Gram-CD crossover recorded in ``gram_step_frac``).
+
+  Backends for the two engines are selected independently:
+  ``PathConfig.backend`` / ``REPRO_SCREEN_BACKEND`` for screens,
+  ``PathConfig.solver_backend`` / ``REPRO_SOLVER_BACKEND`` for solves
+  ("pallas" | "interpret" | "jnp" | None = auto).
 * The *reduced* problems have data-dependent sizes, which fights XLA's static
-  shapes. We gather surviving columns into power-of-two **buckets** (zero
-  padded); solvers treat zero columns as fixed points, and jit compiles at
-  most O(log p) program variants across the whole path.
+  shapes. We gather surviving columns (whole groups for m > 1) into
+  power-of-two **buckets** (zero padded); solvers treat zero columns as fixed
+  points, and jit compiles at most O(log p) program variants per path.
 * The strong rule is heuristic: after each reduced solve we run the paper's
   KKT violation loop — violated features are added back and the problem
   re-solved until clean (§1, §4.1.2). Safe rules never trigger it (property-
@@ -37,8 +49,7 @@ import numpy as np
 
 from . import screening as scr
 from .engine import GroupScreeningEngine, ScreeningEngine
-from .lasso import cd, fista
-from .group_lasso import group_fista
+from .solver import SolverEngine
 from . import group_screening as gscr
 
 
@@ -55,23 +66,43 @@ _group_kkt_violations = jax.jit(gscr.group_kkt_violations,
 @dataclasses.dataclass(frozen=True)
 class PathConfig:
     rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|gap|safe|dome|strong|none
-    solver: str = "fista"         # fista|cd
+    solver: str = "fista"         # fista|cd (any registered solver strategy)
     sequential: bool = True       # False = "basic" variants (state pinned at λmax)
     solver_tol: float = 1e-8
     max_iter: int = 5000
+    gap_check_cadence: int = 10   # duality-gap check every k solver iterations
     eps: float = scr.EPS_DEFAULT
     bucket_min: int = 32
     kkt_tol: float = 1e-4
     max_kkt_rounds: int = 10
     paranoid: bool = False        # run KKT loop even for safe rules
     backend: str | None = None    # screening backend (None = auto-detect)
+    solver_backend: str | None = None  # solver backend (None = auto-detect)
     checkpoint_fn: Callable | None = None  # called with (k, lam, beta) per step
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPathConfig:
+    rule: str = "edpp"            # edpp|strong|none
+    solver: str = "group_fista"
+    solver_tol: float = 1e-8
+    max_iter: int = 5000
+    gap_check_cadence: int = 10
+    eps: float = gscr.EPS_DEFAULT
+    bucket_min: int = 16          # in groups
+    kkt_tol: float = 1e-4
+    max_kkt_rounds: int = 10
+    sequential: bool = True
+    paranoid: bool = False
+    backend: str | None = None    # screening backend (None = auto-detect)
+    solver_backend: str | None = None
+    checkpoint_fn: Callable | None = None
 
 
 @dataclasses.dataclass
 class PathStepStats:
     lam: float
-    n_discarded: int
+    n_discarded: int              # units: features (m=1) or groups (m>1)
     n_kept: int
     solver_iters: int
     gap: float
@@ -79,6 +110,11 @@ class PathStepStats:
     screen_time_s: float
     solve_time_s: float
     x_passes: int = 0             # full HBM passes over X this screen took
+    gap_checks: int = 0           # duality-gap evals this step's solves ran
+    gram_step_frac: float = 0.0   # fraction of this step's solves on Gram CD
+    solver_backend: str = ""      # kernel backend the solves dispatched to
+    bucket: int = 0               # padded bucket size (columns) solved at
+    solver_x_passes: float = 0.0  # solver HBM passes in full-X equivalents
 
 
 @dataclasses.dataclass
@@ -111,51 +147,48 @@ def _pad_indices(kept: np.ndarray, bucket: int):
     return jnp.asarray(idx), jnp.asarray(valid)
 
 
-def _solve_reduced(Xr, y, lam, beta0, cfg: PathConfig):
-    if cfg.solver == "cd":
-        return cd(Xr, y, lam, beta0, max_epochs=cfg.max_iter // 10 + 1,
-                  tol=cfg.solver_tol)
-    return fista(Xr, y, lam, beta0, max_iter=cfg.max_iter, tol=cfg.solver_tol)
-
-
 def lambda_grid(lam_max: float, num: int = 100, lo_frac: float = 0.05,
                 hi_frac: float = 1.0) -> np.ndarray:
     """The paper's grid: `num` values equally spaced in λ/λmax ∈ [lo, hi]."""
     return np.linspace(hi_frac, lo_frac, num) * lam_max
 
 
-def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
-    """Solve the Lasso along a decreasing λ grid with screening.
+def _path_driver(X, y, lambdas, cfg, *, m: int, screen_engine,
+                 solver_engine: SolverEngine, need_kkt: bool,
+                 kkt_fn) -> PathResult:
+    """The shared screen → reduce → solve → KKT loop over a decreasing grid.
 
-    `lambdas` must be sorted decreasing and ≤ λmax for sequential rules to be
-    valid (the theorems require λ ≤ λ₀).
+    ``m`` is the unit size: 1 for the Lasso (units = features), the group
+    size for the group Lasso (units = groups; whole groups are gathered).
+    ``kkt_fn(beta_full, lam, discard) -> bool[units]`` flags violations.
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
     p = X.shape[1]
+    units = p // m
+    assert units * m == p
     lambdas = np.asarray(lambdas, dtype=np.float64)
     assert np.all(np.diff(lambdas) <= 1e-12), "grid must be decreasing"
 
-    engine = ScreeningEngine(X, y, backend=cfg.backend, eps=cfg.eps)
-    lmax = engine.lam_max
-    state = engine.state_at_lambda_max()
+    lmax = screen_engine.lam_max
+    state = screen_engine.state_at_lambda_max()
+    arange_m = np.arange(m)[None, :]
 
     betas = np.zeros((len(lambdas), p), dtype=np.float64)
     stats: list[PathStepStats] = []
-
     beta_prev = jnp.zeros((p,), dtype=X.dtype)
 
     for k, lam in enumerate(lambdas):
         lam = float(lam)
         if lam >= lmax:           # trivial region (eq. 8): β* = 0
-            stats.append(PathStepStats(lam, p, 0, 0, 0.0, 0, 0.0, 0.0))
+            stats.append(PathStepStats(lam, units, 0, 0, 0.0, 0, 0.0, 0.0))
             if cfg.checkpoint_fn:
                 cfg.checkpoint_fn(k, lam, np.zeros((p,)))
             continue
 
         # ---- screen (one fused kernel pass over X, engine.py) -----------
         t0 = time.perf_counter()
-        discard = engine.screen(lam, state, rule=cfg.rule)
+        discard = screen_engine.screen(lam, state, rule=cfg.rule)
         discard_np = np.asarray(discard)
         kept = np.flatnonzero(~discard_np)
         screen_time = time.perf_counter() - t0
@@ -163,30 +196,35 @@ def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
         # ---- reduced solve (+ strong-rule KKT loop) ----------------------
         t0 = time.perf_counter()
         kkt_rounds = 0
-        need_kkt = cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid
+        solves = gram_solves = gap_checks = 0
+        solver_x_passes = 0.0
+        bucket = 0
         while True:
-            bucket = next_pow2(max(kept.size, cfg.bucket_min))
-            bucket = min(bucket, p)
+            bucket = min(next_pow2(max(kept.size, cfg.bucket_min)), units)
             if kept.size == 0:
                 beta_full = jnp.zeros((p,), dtype=X.dtype)
                 res_iters, res_gap = 0, 0.0
             else:
-                idx, valid = _pad_indices(kept, bucket)
-                Xr = _gather_cols(X, idx, valid, bucket)
+                col_idx = (kept[:, None] * m + arange_m).reshape(-1)
+                idx, valid = _pad_indices(col_idx, bucket * m)
+                Xr = _gather_cols(X, idx, valid, bucket * m)
                 beta0 = jnp.take(beta_prev, idx) * valid
-                res = _solve_reduced(Xr, y, lam, beta0, cfg)
+                res = solver_engine.solve(Xr, lam, beta0, m=m)
                 beta_full = (
                     jnp.zeros((p,), dtype=X.dtype)
-                    .at[np.asarray(idx)[: kept.size]]
-                    .set(res.beta[: kept.size])
+                    .at[col_idx]
+                    .set(res.beta[: col_idx.size])
                 )
                 res_iters, res_gap = int(res.iters), float(res.gap)
+                solves += 1
+                gram_solves += int(solver_engine.last_used_gram)
+                gap_checks += solver_engine.last_gap_checks
+                solver_x_passes += (solver_engine.last_x_passes
+                                    * (bucket * m) / p)
             if not need_kkt:
                 break
-            viol = np.asarray(
-                _kkt_violations(X, y, beta_full, lam,
-                                jnp.asarray(discard_np), cfg.kkt_tol)
-            )
+            viol = np.asarray(kkt_fn(beta_full, lam,
+                                     jnp.asarray(discard_np)))
             if not viol.any() or kkt_rounds >= cfg.max_kkt_rounds:
                 break
             kkt_rounds += 1
@@ -199,33 +237,45 @@ def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
             lam=lam, n_discarded=int(discard_np.sum()), n_kept=int(kept.size),
             solver_iters=res_iters, gap=res_gap, kkt_rounds=kkt_rounds,
             screen_time_s=screen_time, solve_time_s=solve_time,
-            x_passes=engine.last_x_passes,
+            x_passes=screen_engine.last_x_passes,
+            gap_checks=gap_checks,
+            gram_step_frac=gram_solves / solves if solves else 0.0,
+            solver_backend=solver_engine.backend_name,
+            bucket=bucket * m,
+            solver_x_passes=solver_x_passes,
         ))
         if cfg.checkpoint_fn:
             cfg.checkpoint_fn(k, lam, betas[k])
 
         beta_prev = beta_full
         if cfg.sequential:
-            state = engine.make_state(beta_full, lam)
+            state = screen_engine.make_state(beta_full, lam)
         # basic variants keep `state` pinned at λmax (paper §4.1.1)
     return PathResult(lambdas=lambdas, betas=betas, stats=stats)
 
 
-# ---------------------------------------------------------------------------
-# Group-Lasso path (paper §3 / §4.2)
-# ---------------------------------------------------------------------------
+def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
+    """Solve the Lasso along a decreasing λ grid with screening.
 
-@dataclasses.dataclass(frozen=True)
-class GroupPathConfig:
-    rule: str = "edpp"            # edpp|strong|none
-    solver_tol: float = 1e-8
-    max_iter: int = 5000
-    eps: float = gscr.EPS_DEFAULT
-    bucket_min: int = 16          # in groups
-    kkt_tol: float = 1e-4
-    max_kkt_rounds: int = 10
-    sequential: bool = True
-    backend: str | None = None    # screening backend (None = auto-detect)
+    `lambdas` must be sorted decreasing and ≤ λmax for sequential rules to be
+    valid (the theorems require λ ≤ λ₀).
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    screen_engine = ScreeningEngine(X, y, backend=cfg.backend, eps=cfg.eps)
+    solver_engine = SolverEngine(
+        y, solver=cfg.solver, backend=cfg.solver_backend,
+        tol=cfg.solver_tol, max_iter=cfg.max_iter,
+        gap_check_cadence=cfg.gap_check_cadence)
+
+    def kkt_fn(beta_full, lam, discard):
+        return _kkt_violations(X, y, beta_full, lam, discard, cfg.kkt_tol)
+
+    return _path_driver(
+        X, y, lambdas, cfg, m=1, screen_engine=screen_engine,
+        solver_engine=solver_engine,
+        need_kkt=cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid,
+        kkt_fn=kkt_fn)
 
 
 def group_lasso_path(X, y, m: int, lambdas,
@@ -237,72 +287,19 @@ def group_lasso_path(X, y, m: int, lambdas,
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
-    p = X.shape[1]
-    G = p // m
-    assert G * m == p
-    lambdas = np.asarray(lambdas, dtype=np.float64)
+    screen_engine = GroupScreeningEngine(X, y, m, backend=cfg.backend,
+                                         eps=cfg.eps)
+    solver_engine = SolverEngine(
+        y, solver=cfg.solver, backend=cfg.solver_backend,
+        tol=cfg.solver_tol, max_iter=cfg.max_iter,
+        gap_check_cadence=cfg.gap_check_cadence)
 
-    engine = GroupScreeningEngine(X, y, m, backend=cfg.backend, eps=cfg.eps)
-    lmax = engine.lam_max
-    state = engine.state_at_lambda_max()
+    def kkt_fn(beta_full, lam, discard):
+        return _group_kkt_violations(X, y, beta_full, lam, discard, m,
+                                     cfg.kkt_tol)
 
-    betas = np.zeros((len(lambdas), p), dtype=np.float64)
-    stats: list[PathStepStats] = []
-    beta_prev = jnp.zeros((p,), dtype=X.dtype)
-
-    for k, lam in enumerate(lambdas):
-        lam = float(lam)
-        if lam >= lmax:
-            stats.append(PathStepStats(lam, G, 0, 0, 0.0, 0, 0.0, 0.0))
-            continue
-
-        t0 = time.perf_counter()
-        discard = engine.screen(lam, state, rule=cfg.rule)
-        discard_np = np.asarray(discard)
-        kept_groups = np.flatnonzero(~discard_np)
-        screen_time = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        kkt_rounds = 0
-        need_kkt = cfg.rule == "strong"
-        while True:
-            gbucket = min(next_pow2(max(kept_groups.size, cfg.bucket_min)), G)
-            if kept_groups.size == 0:
-                beta_full = jnp.zeros((p,), dtype=X.dtype)
-                res_iters, res_gap = 0, 0.0
-            else:
-                col_idx = (kept_groups[:, None] * m
-                           + np.arange(m)[None, :]).reshape(-1)
-                idx, valid = _pad_indices(col_idx, gbucket * m)
-                Xr = _gather_cols(X, idx, valid, gbucket * m)
-                beta0 = jnp.take(beta_prev, idx) * valid
-                res = group_fista(Xr, y, lam, m, beta0,
-                                  max_iter=cfg.max_iter, tol=cfg.solver_tol)
-                beta_full = (
-                    jnp.zeros((p,), dtype=X.dtype)
-                    .at[col_idx]
-                    .set(res.beta[: col_idx.size])
-                )
-                res_iters, res_gap = int(res.iters), float(res.gap)
-            if not need_kkt:
-                break
-            viol = np.asarray(_group_kkt_violations(
-                X, y, beta_full, lam, jnp.asarray(discard_np), m, cfg.kkt_tol))
-            if not viol.any() or kkt_rounds >= cfg.max_kkt_rounds:
-                break
-            kkt_rounds += 1
-            discard_np = discard_np & ~viol
-            kept_groups = np.flatnonzero(~discard_np)
-        solve_time = time.perf_counter() - t0
-
-        betas[k] = np.asarray(beta_full, dtype=np.float64)
-        stats.append(PathStepStats(
-            lam=lam, n_discarded=int(discard_np.sum()),
-            n_kept=int(kept_groups.size), solver_iters=res_iters, gap=res_gap,
-            kkt_rounds=kkt_rounds, screen_time_s=screen_time,
-            solve_time_s=solve_time, x_passes=engine.last_x_passes,
-        ))
-        beta_prev = beta_full
-        if cfg.sequential:
-            state = engine.make_state(beta_full, lam)
-    return PathResult(lambdas=lambdas, betas=betas, stats=stats)
+    return _path_driver(
+        X, y, lambdas, cfg, m=m, screen_engine=screen_engine,
+        solver_engine=solver_engine,
+        need_kkt=cfg.rule == "strong" or cfg.paranoid,
+        kkt_fn=kkt_fn)

@@ -1,0 +1,463 @@
+"""SolverEngine: fused, device-resident λ-path solvers behind a registry.
+
+Symmetric to :class:`repro.core.engine.ScreeningEngine`: the paper's rules
+are solver-agnostic (§1, §4.1.2), so the solver layer is its own engine —
+strategies (``fista`` | ``cd`` | ``group_fista``) dispatched through the
+``SOLVERS`` registry, each running a **device-resident**
+``lax.while_loop`` whose inner iterations go through the fused kernels of
+:mod:`repro.kernels.solver_step` via the same ``kernels.ops.BACKENDS``
+registry the screens use (pallas | interpret | jnp).
+
+Key design points
+-----------------
+* **Gap-check cadence.** The duality-gap stopping test costs two extra
+  passes over X and, in a host-driven loop, a device→host sync. Strategies
+  check it every ``gap_check_cadence`` inner iterations (Fercoq et al.
+  2015 show the gap certificate is cheap *because* it is amortised); the
+  count of checks actually run is returned in ``SolveResult.gap_checks``
+  and surfaced per λ-step in ``PathStepStats``.
+* **Gram crossover.** For ``cd`` on a reduced buffer with bucket ≤ n
+  columns (the paper's n ≪ p regime after screening), the engine builds
+  G = XᵀX / c = Xᵀy once per solve (one pass over the bucket) and sweeps
+  the VMEM-resident Gram system (``cd_gram_sweep`` kernel) — zero HBM
+  passes over X per coordinate.
+  Crossover: ``bucket ≤ min(n, GRAM_BUCKET_MAX)``; a sweep is then O(b²)
+  against the matvec sweep's O(n·b). ``gram_step_frac`` in the path stats
+  records how often this fires.
+* **Lipschitz caching.** FISTA's step needs ‖X_r‖₂². The engine caches the
+  top eigenpair per bucket size and warm-starts power iteration from the
+  cached eigenvector on reuse (the kept set drifts slowly along the path),
+  so repeated path solves don't re-estimate from scratch.
+* **Backend selection**: explicit ``backend=`` → ``REPRO_SOLVER_BACKEND``
+  env var → ``INTERPRET=1`` (CI) → ``pallas`` on TPU → ``jnp``. Screen-only
+  backends registered via :func:`repro.core.engine.register_backend` keep
+  working — missing solver ops fall back to the pure-jnp oracles.
+
+The pure-jnp reference solvers remain the semantics oracle:
+tests/test_solver_engine.py checks every strategy × backend against them
+to solver tolerance on lasso and group-lasso paths.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .group_lasso import group_gap_from_residual, group_soft_threshold
+from .lasso import gap_from_residual, soft_threshold, top_eigenpair
+
+
+class SolveResult(NamedTuple):
+    beta: jax.Array
+    gap: jax.Array        # final duality gap
+    iters: jax.Array      # inner iterations (epochs/sweeps for cd) run
+    converged: jax.Array
+    gap_checks: jax.Array = jnp.asarray(0)  # duality-gap evaluations run
+
+
+# Back-compat aliases (the old per-solver result types).
+FistaResult = SolveResult
+GroupFistaResult = SolveResult
+
+
+# ---------------------------------------------------------------------------
+# Backend resolution (same policy shape as engine.default_backend, separate
+# env knob so solver and screening backends can be A/B'd independently)
+# ---------------------------------------------------------------------------
+
+def default_solver_backend() -> str:
+    return ops.default_backend_name("REPRO_SOLVER_BACKEND")
+
+
+def resolve_solver_backend(
+        name: str | ops.ScreenBackend | None = None) -> ops.ScreenBackend:
+    if isinstance(name, ops.ScreenBackend):
+        return name
+    name = name or default_solver_backend()
+    try:
+        return ops.BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver backend {name!r}; "
+            f"available: {tuple(ops.BACKENDS)}") from None
+
+
+def _fista_step_op(backend: ops.ScreenBackend) -> Callable:
+    return backend.fista_step or ops.BACKENDS["jnp"].fista_step
+
+
+def _cd_gram_op(backend: ops.ScreenBackend) -> Callable:
+    return backend.cd_gram_sweep or ops.BACKENDS["jnp"].cd_gram_sweep
+
+
+# ---------------------------------------------------------------------------
+# Strategy bodies: jitted, device-resident while_loops. The gap check runs
+# every `cadence` inner iterations; everything between checks stays on
+# device (no shapes or values cross to host until the final result).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_iter", "cadence"))
+def _fista_solve(backend, X, y, lam, beta0, lipschitz, tol,
+                 max_iter: int, cadence: int) -> SolveResult:
+    """FISTA with the fused gradient+prox+momentum kernel per iteration.
+
+    Per inner step: one forward fit Xz (n-vector) + one fused
+    ``fista_step`` pass over X's columns. ``tol`` is a *relative* gap
+    tolerance: stop when gap ≤ tol·½‖y‖². Zero columns are fixed points,
+    so padded buffers from the path driver pass through.
+    """
+    dtype = X.dtype
+    step_op = _fista_step_op(backend)
+    L = jnp.maximum(lipschitz, 1e-12)
+    step = 1.0 / L
+    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
+
+    def gap_of(beta):
+        r = y - X @ beta
+        return gap_from_residual(r, X.T @ r, beta, lam, y)
+
+    def one_step(carry, _):
+        beta, z, t = carry
+        rz = X @ z - y
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        mom = (t - 1.0) / t_new
+        beta_new, z_new = step_op(X, rz, z, beta, step, lam, mom)
+        return (beta_new.astype(dtype), z_new.astype(dtype), t_new), None
+
+    def cond(state):
+        _, _, _, k, gap, _ = state
+        return jnp.logical_and(k < max_iter, gap > tol * scale)
+
+    def body(state):
+        beta, z, t, k, _, checks = state
+        (beta, z, t), _ = jax.lax.scan(one_step, (beta, z, t), None,
+                                       length=cadence)
+        return beta, z, t, k + cadence, gap_of(beta), checks + 1
+
+    t0 = jnp.asarray(1.0, dtype=dtype)
+    state = (beta0, beta0, t0, jnp.asarray(0), gap_of(beta0),
+             jnp.asarray(1))
+    beta, _, _, k, gap, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, k, gap <= tol * scale, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("max_epochs", "cadence"))
+def _cd_solve(X, y, lam, beta0, tol, max_epochs: int,
+              cadence: int) -> SolveResult:
+    """Cyclic coordinate descent on matvecs (residual maintained).
+
+    Per coordinate:  β_j ← S(x_jᵀr + ‖x_j‖²β_j, λ) / ‖x_j‖²; zero-norm
+    (padded) columns are skipped via a `where`. The duality gap is checked
+    every ``cadence`` epochs. Inherently sequential column access — no
+    kernel; the Gram variant (``_cd_gram_solve``) is the fused path.
+    """
+    p = X.shape[1]
+    sqnorms = jnp.sum(jnp.square(X), axis=0)
+    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
+
+    def gap_of(beta):
+        # recompute r = y − Xβ fresh: the carried residual accumulates
+        # p·eps rounding drift per epoch, which at tight tol could fake
+        # convergence (the stopping certificate must not drift)
+        r = y - X @ beta
+        return gap_from_residual(r, X.T @ r, beta, lam, y)
+
+    def coord(j, carry):
+        beta, r = carry
+        xj = X[:, j]
+        bj = beta[j]
+        nj = sqnorms[j]
+        rho = xj @ r + nj * bj
+        bj_new = jnp.where(nj > 0,
+                           soft_threshold(rho, lam) / jnp.maximum(nj, 1e-30),
+                           0.0)
+        r = r + xj * (bj - bj_new)
+        return beta.at[j].set(bj_new), r
+
+    def cond(state):
+        _, _, k, gap, _ = state
+        return jnp.logical_and(k < max_epochs, gap > tol * scale)
+
+    def body(state):
+        beta, r, k, _, checks = state
+
+        def epoch(_, carry):
+            return jax.lax.fori_loop(0, p, coord, carry)
+
+        beta, r = jax.lax.fori_loop(0, cadence, epoch, (beta, r))
+        return beta, r, k + cadence, gap_of(beta), checks + 1
+
+    r0 = y - X @ beta0
+    state = (beta0, r0, jnp.asarray(0), gap_of(beta0), jnp.asarray(1))
+    beta, _, k, gap, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, k, gap <= tol * scale, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_epochs",
+                                             "cadence"))
+def _cd_gram_solve(backend, X, y, lam, beta0, tol, max_epochs: int,
+                   cadence: int) -> SolveResult:
+    """Coordinate descent over the cached Gram system (n ≪ p regime).
+
+    G = XᵀX and c = Xᵀy are built once (one pass over X); each sweep then
+    runs through the backend's VMEM-resident ``cd_gram_sweep`` kernel with
+    zero HBM traffic over X. The gap check recomputes the residual
+    directly from X (cadence-amortised, avoids the ‖y‖²−2cᵀβ+βᵀGβ
+    cancellation at tight tolerances).
+    """
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+    Xa = X.astype(acc)
+    G = Xa.T @ Xa
+    c = Xa.T @ y.astype(acc)
+    sweep_op = _cd_gram_op(backend)
+    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
+
+    def gap_of(beta):
+        r = y - X @ beta
+        return gap_from_residual(r, X.T @ r, beta, lam, y)
+
+    def cond(state):
+        _, k, gap, _ = state
+        return jnp.logical_and(k < max_epochs, gap > tol * scale)
+
+    def body(state):
+        beta, k, _, checks = state
+        beta = sweep_op(G, c, beta.astype(acc), lam,
+                        sweeps=cadence).astype(X.dtype)
+        return beta, k + cadence, gap_of(beta), checks + 1
+
+    state = (beta0, jnp.asarray(0), gap_of(beta0), jnp.asarray(1))
+    beta, k, gap, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, k, gap <= tol * scale, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "max_iter", "cadence"))
+def _group_fista_solve(X, y, lam, m: int, beta0, lipschitz, tol,
+                       max_iter: int, cadence: int) -> SolveResult:
+    """Block-FISTA for the group Lasso (pure-jnp body on every backend —
+    the block soft-threshold has no fused kernel yet). Zero-padded group
+    blocks are fixed points, so group buckets pass through."""
+    dtype = X.dtype
+    L = jnp.maximum(lipschitz, 1e-12)
+    step = 1.0 / L
+    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
+
+    def gap_of(beta):
+        r = y - X @ beta
+        return group_gap_from_residual(r, X.T @ r, beta, lam, m, y)
+
+    def one_step(carry, _):
+        beta, z, t = carry
+        g = X.T @ (X @ z - y)
+        beta_new = group_soft_threshold(z - step * g, step * lam, m)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = beta_new + ((t - 1.0) / t_new) * (beta_new - beta)
+        return (beta_new, z_new, t_new), None
+
+    def cond(state):
+        _, _, _, k, gap, _ = state
+        return jnp.logical_and(k < max_iter, gap > tol * scale)
+
+    def body(state):
+        beta, z, t, k, _, checks = state
+        (beta, z, t), _ = jax.lax.scan(one_step, (beta, z, t), None,
+                                       length=cadence)
+        return beta, z, t, k + cadence, gap_of(beta), checks + 1
+
+    t0 = jnp.asarray(1.0, dtype=dtype)
+    state = (beta0, beta0, t0, jnp.asarray(0), gap_of(beta0), jnp.asarray(1))
+    beta, _, _, k, gap, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, k, gap <= tol * scale, checks)
+
+
+# ---------------------------------------------------------------------------
+# Strategies + registry. A strategy is `(engine, Xr, lam, beta0, m) ->
+# (SolveResult, info)` with info = {"gram": bool} telemetry.
+# ---------------------------------------------------------------------------
+
+def _fista_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
+    res = _fista_solve(eng.backend, Xr, eng.y, lam, beta0,
+                       eng.lipschitz(Xr), eng.tol, eng.max_iter,
+                       eng.gap_check_cadence)
+    return res, {"gram": False}
+
+
+def _cd_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
+    n, b = Xr.shape
+    max_epochs = eng.max_iter // 10 + 1
+    if b <= min(n, ops.GRAM_BUCKET_MAX):
+        res = _cd_gram_solve(eng.backend, Xr, eng.y, lam, beta0, eng.tol,
+                             max_epochs, eng.gap_check_cadence)
+        return res, {"gram": True}
+    res = _cd_solve(Xr, eng.y, lam, beta0, eng.tol, max_epochs,
+                    eng.gap_check_cadence)
+    return res, {"gram": False}
+
+
+def _group_fista_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
+    res = _group_fista_solve(Xr, eng.y, lam, m, beta0, eng.lipschitz(Xr),
+                             eng.tol, eng.max_iter, eng.gap_check_cadence)
+    return res, {"gram": False}
+
+
+SOLVERS: dict[str, Callable] = {
+    "fista": _fista_strategy,
+    "cd": _cd_strategy,
+    "group_fista": _group_fista_strategy,
+}
+
+
+def register_solver(name: str, strategy: Callable) -> None:
+    """Add a solver strategy: `(engine, Xr, lam, beta0, m) -> (SolveResult,
+    {"gram": bool})`. Select it with ``PathConfig(solver=name)``."""
+    SOLVERS[name] = strategy
+
+
+def available_solvers() -> tuple[str, ...]:
+    return tuple(SOLVERS)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class SolverEngine:
+    """One entry point for every reduced solve on a λ-path.
+
+    Usage (what the path driver does)::
+
+        eng = SolverEngine(y, solver="fista", backend=cfg.solver_backend,
+                           tol=cfg.solver_tol, max_iter=cfg.max_iter,
+                           gap_check_cadence=cfg.gap_check_cadence)
+        for lam in grid:
+            ... screen -> gather bucket Xr, warm start beta0 ...
+            res = eng.solve(Xr, lam, beta0)
+
+    ``last_gap_checks`` / ``last_used_gram`` expose per-solve telemetry for
+    ``PathStepStats``; ``total_gap_checks`` accumulates across the path.
+    """
+
+    def __init__(self, y, *, solver: str = "fista",
+                 backend: str | ops.ScreenBackend | None = None,
+                 tol: float = 1e-8, max_iter: int = 5000,
+                 gap_check_cadence: int = 10,
+                 power_iters: int = 50, warm_power_iters: int = 16,
+                 seed: int = 0):
+        if solver not in SOLVERS:
+            raise ValueError(f"unknown solver {solver!r}; "
+                             f"available: {available_solvers()}")
+        self.y = jnp.asarray(y)
+        self.solver = solver
+        self.backend = resolve_solver_backend(backend)
+        self.tol = tol
+        self.max_iter = max_iter
+        self.gap_check_cadence = max(1, int(gap_check_cadence))
+        self.power_iters = power_iters
+        self.warm_power_iters = warm_power_iters
+        self.seed = seed
+        self._eig_cache: dict[int, jax.Array] = {}
+        self.n_solves = 0
+        self.gram_solves = 0
+        self.total_gap_checks = 0
+        self.last_gap_checks = 0
+        self.last_used_gram = False
+        self.last_x_passes = 0.0   # HBM passes over the reduced buffer
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    def lipschitz(self, Xr) -> jax.Array:
+        """1.05·‖X_r‖₂², warm-started per bucket size.
+
+        The kept set drifts slowly along the path, so the previous
+        eigenvector for the same bucket is an excellent start: a handful
+        of iterations replaces the full cold estimate. A bucket change
+        (new static shape) re-estimates cold.
+        """
+        bucket = Xr.shape[1]
+        v_prev = self._eig_cache.get(bucket)
+        if v_prev is None:
+            eig, v = top_eigenpair(Xr, iters=self.power_iters,
+                                   seed=self.seed)
+        else:
+            eig, v = top_eigenpair(Xr, iters=self.warm_power_iters,
+                                   v0=v_prev)
+        self._eig_cache[bucket] = v
+        return 1.05 * eig
+
+    def solve(self, Xr, lam, beta0=None, m: int = 1) -> SolveResult:
+        """Solve the reduced problem on the bucket buffer Xr (zero-padded
+        columns are fixed points). Returns the SolveResult; telemetry in
+        ``last_gap_checks`` / ``last_used_gram``."""
+        Xr = jnp.asarray(Xr)
+        if beta0 is None:
+            beta0 = jnp.zeros((Xr.shape[1],), dtype=Xr.dtype)
+        res, info = SOLVERS[self.solver](self, Xr, lam, beta0, m)
+        self.n_solves += 1
+        self.last_used_gram = bool(info.get("gram", False))
+        self.gram_solves += int(self.last_used_gram)
+        self.last_gap_checks = int(res.gap_checks)
+        self.total_gap_checks += self.last_gap_checks
+        # Data-movement telemetry in passes over the *reduced* buffer:
+        # FISTA reads Xr twice per iteration (fit + fused gradient), CD
+        # streams the columns once per epoch, Gram CD reads Xr once to
+        # build G (sweeps then cost b/n of a pass each); every gap check
+        # adds two passes (residual + correlations).
+        it, ck = int(res.iters), self.last_gap_checks
+        n, b = Xr.shape
+        if self.last_used_gram:
+            self.last_x_passes = 1.0 + it * (b / max(n, 1)) + 2.0 * ck
+        elif self.solver == "cd":
+            self.last_x_passes = float(it) + 2.0 * ck
+        else:
+            self.last_x_passes = 2.0 * it + 2.0 * ck
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Back-compat entry points (the old core.lasso / core.group_lasso solvers).
+# Same signatures and semantics; now thin wrappers over the strategies.
+# ---------------------------------------------------------------------------
+
+def _as_beta0(beta0, p, dtype):
+    if beta0 is None:
+        return jnp.zeros((p,), dtype=dtype)
+    return jnp.asarray(beta0, dtype)
+
+
+def fista(X, y, lam, beta0=None, *, max_iter: int = 2000, tol: float = 1e-8,
+          check_every: int = 10, lipschitz=None,
+          backend=None) -> SolveResult:
+    """FISTA for the Lasso with duality-gap stopping (see `_fista_solve`)."""
+    X = jnp.asarray(X)
+    if lipschitz is None:
+        lipschitz = top_eigenpair(X)[0] * 1.05
+    return _fista_solve(resolve_solver_backend(backend), X, jnp.asarray(y),
+                        lam, _as_beta0(beta0, X.shape[1], X.dtype),
+                        lipschitz, tol, max_iter, max(1, check_every))
+
+
+def cd(X, y, lam, beta0=None, *, max_epochs: int = 200, tol: float = 1e-10,
+       check_every: int = 1) -> SolveResult:
+    """Cyclic coordinate descent with residual updates (see `_cd_solve`)."""
+    X = jnp.asarray(X)
+    return _cd_solve(X, jnp.asarray(y), lam,
+                     _as_beta0(beta0, X.shape[1], X.dtype), tol, max_epochs,
+                     max(1, check_every))
+
+
+def group_fista(X, y, lam, m: int, beta0=None, *, max_iter: int = 2000,
+                tol: float = 1e-8, check_every: int = 10,
+                lipschitz=None) -> SolveResult:
+    """Accelerated proximal gradient for the group Lasso."""
+    X = jnp.asarray(X)
+    if lipschitz is None:
+        lipschitz = top_eigenpair(X)[0] * 1.05
+    return _group_fista_solve(X, jnp.asarray(y), lam, m,
+                              _as_beta0(beta0, X.shape[1], X.dtype),
+                              lipschitz, tol, max_iter, max(1, check_every))

@@ -21,6 +21,7 @@ ref.py, also the GSPMD-friendly fallback). All accumulate in f32.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable, NamedTuple
 
 import jax
@@ -30,17 +31,29 @@ from . import ref
 from .edpp_screen import edpp_screen_scores, screen_matvec
 from .group_screen import group_screen_scores
 from .prox_step import prox_step
+from .solver_step import GRAM_BUCKET_MAX, cd_gram_sweep, fista_step
 
 INTERPRET = jax.default_backend() != "tpu"
 
 
 class ScreenBackend(NamedTuple):
-    """One implementation of the screening-op contract (see module doc)."""
+    """One implementation of the kernel-op contract (see module doc).
+
+    The first three ops are the screening contract the ScreeningEngine
+    dispatches through; the trailing solver ops (fista_step /
+    cd_gram_sweep / prox_step, see docs/solvers.md) serve the
+    SolverEngine. They default to ``None`` so screen-only backends
+    registered before the solver layer existed keep working — the
+    SolverEngine falls back to the ref.py oracles for missing ops.
+    """
 
     name: str
     matvec: Callable
     fused_scores: Callable
     group_scores: Callable
+    fista_step: Callable | None = None
+    cd_gram_sweep: Callable | None = None
+    prox_step: Callable | None = None
 
 
 def _kernel_backend(name: str, interpret: bool) -> ScreenBackend:
@@ -51,7 +64,23 @@ def _kernel_backend(name: str, interpret: bool) -> ScreenBackend:
                                        interpret=interpret),
         group_scores=functools.partial(group_screen_scores,
                                        interpret=interpret),
+        fista_step=functools.partial(fista_step, interpret=interpret),
+        cd_gram_sweep=functools.partial(cd_gram_sweep, interpret=interpret),
+        prox_step=functools.partial(prox_step, interpret=interpret),
     )
+
+
+def default_backend_name(env_var: str) -> str:
+    """Shared backend auto-detection policy: explicit env var →
+    ``INTERPRET=1`` (CI) → ``pallas`` on TPU → ``jnp``. The two engines
+    differ only in the env var (``REPRO_SCREEN_BACKEND`` vs
+    ``REPRO_SOLVER_BACKEND``) so they can be A/B'd independently."""
+    env = os.environ.get(env_var)
+    if env:
+        return env
+    if os.environ.get("INTERPRET", "") not in ("", "0"):
+        return "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
 BACKENDS: dict[str, ScreenBackend] = {
@@ -62,6 +91,10 @@ BACKENDS: dict[str, ScreenBackend] = {
         matvec=jax.jit(ref.screen_matvec_ref),
         fused_scores=jax.jit(ref.edpp_screen_ref),
         group_scores=jax.jit(ref.group_screen_ref, static_argnames="m"),
+        fista_step=jax.jit(ref.fista_step_ref),
+        cd_gram_sweep=jax.jit(ref.cd_gram_sweep_ref,
+                              static_argnames="sweeps"),
+        prox_step=jax.jit(ref.prox_step_ref),
     ),
 }
 
@@ -97,9 +130,12 @@ def group_edpp_screen(X, centre, rho, m: int, spec_norms, eps: float = 1e-6,
 
 __all__ = [
     "BACKENDS",
+    "GRAM_BUCKET_MAX",
     "ScreenBackend",
+    "cd_gram_sweep",
     "edpp_screen",
     "edpp_screen_scores",
+    "fista_step",
     "group_edpp_screen",
     "group_screen_scores",
     "prox_step",

@@ -62,3 +62,61 @@ def prox_step_ref(z: jax.Array, g: jax.Array, beta_old: jax.Array,
     beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
     z_new = beta_new + mom * (beta_new - beta_old)
     return beta_new, z_new
+
+
+def fista_step_ref(X: jax.Array, r: jax.Array, z: jax.Array,
+                   beta_old: jax.Array, step, lam, mom
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Fused FISTA iteration tail: gradient matvec + prox + momentum.
+
+    Given the residual r = Xz − y (the n-sized forward fit is the caller's
+    one other pass over X), this is ONE streaming pass over X's columns:
+
+        g[j]     = x_jᵀ·r
+        u        = z − step·g
+        beta_new = S(u, step·lam)
+        z_new    = beta_new + mom·(beta_new − beta_old)
+
+    Unfused, g round-trips to HBM as a p-vector and the prox re-reads
+    (z, g, beta_old); fused, the gradient block never leaves VMEM.
+    """
+    acc = _acc_dtype(X)
+    g = X.astype(acc).T @ r.astype(acc)
+    return prox_step_ref(z.astype(acc), g, beta_old.astype(acc),
+                         jnp.asarray(step, acc), jnp.asarray(lam, acc),
+                         jnp.asarray(mom, acc))
+
+
+def cd_gram_sweep_ref(G: jax.Array, c: jax.Array, beta: jax.Array, lam,
+                      sweeps: int = 1) -> jax.Array:
+    """``sweeps`` cyclic coordinate-descent sweeps over the Gram system.
+
+    G = XᵀX and c = Xᵀy are precomputed by the caller (one pass over the
+    reduced bucket per solve); each coordinate update is then O(p) on the
+    Gram row with the correlation vector q = Gβ maintained incrementally:
+
+        ρ_j  = c_j − q_j + G_jj·β_j
+        β_j' = S(ρ_j, λ) / G_jj            (0 where G_jj = 0: padded cols)
+        q   += G_:,j·(β_j' − β_j)
+
+    No pass over X at all — the n ≪ p regime's win once G is resident.
+    """
+    p = G.shape[0]
+    q = G @ beta
+
+    def coord(i, carry):
+        beta, q = carry
+        j = i % p
+        gjj = G[j, j]
+        rho = c[j] - q[j] + gjj * beta[j]
+        bn = jnp.where(
+            gjj > 0,
+            jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lam, 0.0)
+            / jnp.maximum(gjj, 1e-30),
+            0.0,
+        )
+        q = q + G[:, j] * (bn - beta[j])
+        return beta.at[j].set(bn), q
+
+    beta, _ = jax.lax.fori_loop(0, sweeps * p, coord, (beta, q))
+    return beta

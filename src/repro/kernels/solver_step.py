@@ -1,0 +1,212 @@
+"""Pallas TPU kernels for the SolverEngine's device-resident iterations.
+
+Two kernels, mirroring the screening kernels' structure (edpp_screen.py):
+
+``fista_step``
+    One fused FISTA iteration tail over column blocks: the gradient matvec
+    g = Xᵀr, the soft-threshold and the momentum extrapolation in ONE
+    streaming pass over X. Grid = (p_tiles, n_tiles) with the sample axis
+    minor so the (1, bp) gradient accumulator for a feature tile stays
+    resident in VMEM while X streams down the sample axis (same mapping as
+    the screening kernel); the finish step applies the prox update without
+    the p-sized gradient ever round-tripping to HBM. The n-sized forward
+    fit Xz (the iteration's other pass over X) stays with the caller.
+
+``cd_gram_sweep``
+    Cyclic coordinate-descent sweeps over a VMEM-resident Gram system
+    (G = XᵀX, c = Xᵀy). For the paper's n ≪ p regime the *reduced* problem
+    after screening has bucket ≤ n columns, so G is bucket² ≪ n·bucket and
+    the whole sweep runs out of VMEM with zero HBM traffic per coordinate.
+    The per-coordinate update is expressed in masked vector ops (one-hot
+    selects + a dynamic row slice), VPU-friendly and Mosaic-compilable —
+    no scalar gather from the lane dimension.
+
+Accumulation follows ref._acc_dtype: f32 for f32/bf16 inputs, f64 is never
+downcast (x64 benchmark runs keep solver-grade precision in interpret
+mode). Semantics are DEFINED by ref.fista_step_ref / ref.cd_gram_sweep_ref;
+tests/test_kernels.py sweeps shapes/dtypes against them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _acc_dtype
+
+# VMEM guard for cd_gram_sweep: G is (b, b) f32/f64 and must fit on-chip
+# alongside its (1, b) vectors. 1024² f32 = 4 MiB ≪ 16 MiB/core.
+GRAM_BUCKET_MAX = 1024
+
+
+def _fista_step_kernel(s_ref, r_ref, x_ref, z_ref, b_ref,
+                       g_ref, beta_ref, znew_ref, *, n_tiles: int, acc):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = x_ref[...].astype(acc)                       # (bn, bp)
+    r = r_ref[...].astype(acc)                       # (1, bn)
+    # MXU: (1, bn) @ (bn, bp) -> (1, bp) gradient partial
+    g_ref[...] += jax.lax.dot_general(
+        r, x, (((1,), (0,)), ((), ())), preferred_element_type=acc,
+    )
+
+    @pl.when(j == n_tiles - 1)
+    def _finish():
+        step, lam, mom = s_ref[0], s_ref[1], s_ref[2]
+        u = z_ref[...].astype(acc) - step * g_ref[...]
+        t = step * lam
+        beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+        beta_ref[...] = beta_new.astype(beta_ref.dtype)
+        znew_ref[...] = (beta_new + mom * (beta_new - b_ref[...].astype(acc))
+                         ).astype(znew_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bp", "interpret"))
+def fista_step(
+    X: jax.Array,
+    r: jax.Array,
+    z: jax.Array,
+    beta_old: jax.Array,
+    step,
+    lam,
+    mom,
+    *,
+    bn: int | None = None,
+    bp: int | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused FISTA iteration tail (see module doc). Any (N, p); zero padded
+    internally — zero rows/columns are exact no-ops for the accumulator and
+    fixed points for the prox, so padded solver buffers pass through.
+
+    Default tiles shrink to the problem (capped at 512): unlike the screens
+    this runs once per *inner iteration*, so padding a 30×80 reduced bucket
+    to a 512×512 tile would multiply the whole solve's flops.
+    """
+    n, p = X.shape
+    if bn is None:
+        bn = min(512, -(-n // 16) * 16)      # sublane multiple (f32 + bf16)
+    if bp is None:
+        bp = min(512, -(-p // 128) * 128)    # lane multiple
+    acc = _acc_dtype(X)
+    n_pad = -n % bn
+    p_pad = -p % bp
+    Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
+    rp = jnp.pad(r, (0, n_pad)).reshape(1, -1)
+    zp = jnp.pad(z, (0, p_pad)).reshape(1, -1)
+    bp_old = jnp.pad(beta_old, (0, p_pad)).reshape(1, -1)
+    scalars = jnp.stack([
+        jnp.asarray(step, acc),
+        jnp.asarray(lam, acc),
+        jnp.asarray(mom, acc),
+    ])
+    n_tiles = (n + n_pad) // bn
+    p_tiles = (p + p_pad) // bp
+
+    _, beta_new, z_new = pl.pallas_call(
+        functools.partial(_fista_step_kernel, n_tiles=n_tiles, acc=acc),
+        grid=(p_tiles, n_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                 # scalars
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),        # residual
+            pl.BlockSpec((bn, bp), lambda i, j: (j, i)),       # X tile
+            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # z
+            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # beta_old
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # gradient acc
+            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # beta_new
+            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # z_new
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, p + p_pad), acc),
+            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
+            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
+        ],
+        interpret=interpret,
+    )(scalars, rp, Xp, zp, bp_old)
+    return beta_new[0, :p], z_new[0, :p]
+
+
+def _cd_gram_kernel(s_ref, g_ref, c_ref, b_ref, out_ref, *,
+                    p: int, sweeps: int, acc):
+    lam = s_ref[0]
+    G = g_ref[...].astype(acc)                       # (p, p), VMEM-resident
+    c = c_ref[...].astype(acc)                       # (1, p)
+    beta0 = b_ref[...].astype(acc)                   # (1, p)
+    q0 = jax.lax.dot_general(                        # q = Gβ (G symmetric)
+        beta0, G, (((1,), (0,)), ((), ())), preferred_element_type=acc)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)
+
+    def coord(i, carry):
+        beta, q = carry
+        j = i % p
+        onehot = iota == j
+        row = jax.lax.dynamic_slice(G, (j, 0), (1, p))     # G_j,: == G_:,j
+        gjj = jnp.sum(jnp.where(onehot, row, 0.0))
+        bj = jnp.sum(jnp.where(onehot, beta, 0.0))
+        cj = jnp.sum(jnp.where(onehot, c, 0.0))
+        qj = jnp.sum(jnp.where(onehot, q, 0.0))
+        rho = cj - qj + gjj * bj
+        bn_ = jnp.where(
+            gjj > 0,
+            jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lam, 0.0)
+            / jnp.maximum(gjj, 1e-30),
+            0.0,
+        )
+        beta = jnp.where(onehot, bn_, beta)
+        q = q + row * (bn_ - bj)
+        return beta, q
+
+    beta, _ = jax.lax.fori_loop(0, sweeps * p, coord, (beta0, q0))
+    out_ref[...] = beta.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "interpret"))
+def cd_gram_sweep(
+    G: jax.Array,
+    c: jax.Array,
+    beta: jax.Array,
+    lam,
+    sweeps: int = 1,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """``sweeps`` cyclic CD sweeps over the VMEM-resident Gram system.
+
+    Matches ref.cd_gram_sweep_ref. Requires p ≤ GRAM_BUCKET_MAX (the
+    SolverEngine's Gram-vs-matvec crossover guards this); p is padded to a
+    lane multiple — padded columns have G_jj = 0 and stay at β = 0.
+    """
+    p = G.shape[0]
+    if p > GRAM_BUCKET_MAX:
+        raise ValueError(
+            f"cd_gram_sweep: p={p} exceeds GRAM_BUCKET_MAX={GRAM_BUCKET_MAX}")
+    acc = _acc_dtype(G)
+    p_pad = -p % 128
+    Gp = jnp.pad(G, ((0, p_pad), (0, p_pad)))
+    cp = jnp.pad(c, (0, p_pad)).reshape(1, -1)
+    bp_ = jnp.pad(beta, (0, p_pad)).reshape(1, -1)
+    scalars = jnp.asarray([lam], dtype=acc)
+
+    out = pl.pallas_call(
+        functools.partial(_cd_gram_kernel, p=p + p_pad, sweeps=sweeps,
+                          acc=acc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),        # lam
+            pl.BlockSpec((p + p_pad, p + p_pad), lambda: (0, 0)),
+            pl.BlockSpec((1, p + p_pad), lambda: (0, 0)),
+            pl.BlockSpec((1, p + p_pad), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p + p_pad), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, p + p_pad), beta.dtype),
+        interpret=interpret,
+    )(scalars, Gp, cp, bp_)
+    return out[0, :p]

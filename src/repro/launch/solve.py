@@ -32,7 +32,11 @@ def main():
     ap.add_argument("--nnz", type=int, default=60)
     ap.add_argument("--corr", type=float, default=0.0)
     ap.add_argument("--rule", default="edpp")
-    ap.add_argument("--solver", default="fista", choices=["fista", "cd"])
+    ap.add_argument("--solver", default="fista",
+                    help="any registered solver strategy (fista|cd|...)")
+    ap.add_argument("--solver-backend", default=None,
+                    help="pallas|interpret|jnp (default: auto / "
+                         "REPRO_SOLVER_BACKEND)")
     ap.add_argument("--num-lambdas", type=int, default=100)
     ap.add_argument("--group-size", type=int, default=0,
                     help=">0 switches to group Lasso with this group size")
@@ -46,8 +50,8 @@ def main():
         lmax = float(group_lambda_max(jnp.asarray(X), jnp.asarray(y), m))
         grid = lambda_grid(lmax, num=args.num_lambdas)
         t0 = time.perf_counter()
-        res = group_lasso_path(X, y, m, grid,
-                               GroupPathConfig(rule=args.rule))
+        res = group_lasso_path(X, y, m, grid, GroupPathConfig(
+            rule=args.rule, solver_backend=args.solver_backend))
     else:
         X, y, _ = lasso_problem(args.n, args.p, nnz=args.nnz,
                                 corr=args.corr)
@@ -60,7 +64,8 @@ def main():
                      {"beta": jnp.asarray(beta)}, extra={"lam": lam})
         t0 = time.perf_counter()
         res = lasso_path(X, y, grid, PathConfig(
-            rule=args.rule, solver=args.solver, checkpoint_fn=ckpt_fn))
+            rule=args.rule, solver=args.solver,
+            solver_backend=args.solver_backend, checkpoint_fn=ckpt_fn))
     dt = time.perf_counter() - t0
 
     print(f"rule={args.rule} solver={args.solver} "

@@ -75,6 +75,46 @@ def test_prox_step_kernel(p, dtype):
                                np.asarray(zn_ref, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fista_step_kernel(shape, dtype):
+    n, p = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    r = jnp.asarray(rng.standard_normal(n), dtype)
+    z = jnp.asarray(rng.standard_normal(p), dtype)
+    b = jnp.asarray(rng.standard_normal(p), dtype)
+    bn_ref, zn_ref = ref.fista_step_ref(X, r, z, b, 0.01, 2.5, 0.6)
+    bn, zn = ops.fista_step(X, r, z, b, 0.01, 2.5, 0.6, interpret=True)
+    np.testing.assert_allclose(np.asarray(bn, np.float32),
+                               np.asarray(bn_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(zn, np.float32),
+                               np.asarray(zn_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("b", [17, 64, 130, 512])
+def test_cd_gram_sweep_kernel(b):
+    rng = np.random.default_rng(b)
+    A = rng.standard_normal((2 * b, b)).astype(np.float32)
+    A[:, -3:] = 0.0                         # padded (zero-norm) columns
+    G = jnp.asarray(A.T @ A)
+    c = jnp.asarray(A.T @ rng.standard_normal(2 * b).astype(np.float32))
+    beta0 = jnp.asarray(rng.standard_normal(b).astype(np.float32) * 0.1)
+    lam = 0.5 * float(jnp.max(jnp.abs(c)))
+    out_ref = ref.cd_gram_sweep_ref(G, c, beta0, lam, sweeps=3)
+    out = ops.cd_gram_sweep(G, c, beta0, lam, sweeps=3, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=2e-4, atol=2e-5)
+    assert np.all(np.asarray(out)[-3:] == 0)   # zero-Gram cols stay fixed
+
+
+def test_cd_gram_sweep_rejects_oversized():
+    b = ops.GRAM_BUCKET_MAX + 1
+    G = jnp.zeros((b, b), jnp.float32)
+    with pytest.raises(ValueError, match="GRAM_BUCKET_MAX"):
+        ops.cd_gram_sweep(G, jnp.zeros(b), jnp.zeros(b), 0.1, interpret=True)
+
+
 def test_kernel_screening_matches_rule():
     """Kernel-based screening decision == reference edpp_mask decision."""
     from repro.core import DualState, edpp_mask, lambda_max, v2_perp

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Schema check for the BENCH_solver.json artifact (CI solver-bench smoke).
+
+The benchmarks (benchmarks/common.py:write_bench_section) merge one
+``{meta, rows}`` section per bench into ``BENCH_solver.json``. CI runs
+``benchmarks/bench_solver_swap.py --quick`` under ``INTERPRET=1`` and then
+this script, so a solver-bench regression (missing section, empty rows,
+dropped telemetry keys) fails in PR instead of rotting silently.
+
+Usage:
+    python tools/check_bench_schema.py BENCH_solver.json
+    python tools/check_bench_schema.py BENCH_solver.json --section bench_solver_swap
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED_ROW_KEYS = {
+    "dataset",
+    "rule",
+    "gap_check_cadence",
+    "gram_step_frac",
+    "max_beta_err",
+    "num_lambdas",
+    "solver_iters",
+    "speedup_vs_unscreened",
+    "wall_time_s",
+}
+
+
+def check(path: str, sections: list[str]) -> int:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: unreadable ({e})")
+        return 1
+
+    if not isinstance(doc.get("sections"), dict) or not doc["sections"]:
+        print(f"{path}: missing or empty top-level 'sections' dict")
+        return 1
+
+    bad = 0
+    wanted = sections or sorted(doc["sections"])
+    for name in wanted:
+        sec = doc["sections"].get(name)
+        if sec is None:
+            print(f"{path}: section {name!r} missing "
+                  f"(have: {sorted(doc['sections'])})")
+            bad += 1
+            continue
+        for key in ("meta", "rows"):
+            if key not in sec:
+                print(f"{path}: section {name!r} missing {key!r}")
+                bad += 1
+        rows = sec.get("rows")
+        if not isinstance(rows, list) or not rows:
+            print(f"{path}: section {name!r} has no rows")
+            bad += 1
+            continue
+        for i, row in enumerate(rows):
+            missing = REQUIRED_ROW_KEYS - set(row)
+            if missing:
+                print(f"{path}: {name} row {i} missing keys "
+                      f"{sorted(missing)}")
+                bad += 1
+    if bad:
+        print(f"{bad} schema violation(s)")
+        return 1
+    counts = ", ".join(
+        f"{n}={len(doc['sections'][n]['rows'])} rows" for n in wanted)
+    print(f"{path}: schema OK ({counts})")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="BENCH_solver.json")
+    ap.add_argument("--section", action="append", default=[],
+                    help="require this section (repeatable); default: all")
+    args = ap.parse_args(argv)
+    return check(args.path, args.section)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
