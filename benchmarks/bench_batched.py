@@ -1,0 +1,170 @@
+"""Batched multi-query paths vs a Python loop of single-query paths.
+
+The amortisation claim of the batched driver (docs/serving.md): B queries
+against one fitted dictionary cost ONE fused screen pass over X per grid
+step — 1/B HBM passes per query — and one union-bucketed batched solve,
+while a query loop pays the full per-step pass (and the per-step Python/
+dispatch overhead) B times over.
+
+Protocol, per B ∈ {1, 8, 64}:
+
+  * replay the same deterministic ``QueryStream`` slice into both arms,
+  * batched arm: ``lasso_path_batched`` (per-query grids over each query's
+    own λ_max), warm-timed like every bench here,
+  * sequential arm: ``lasso_path`` per query on identical grids,
+  * exactness: per-query screening masks must be IDENTICAL bit-for-bit and
+    β within ``common.beta_err_tol`` (both asserted),
+  * amortisation (asserted on the jnp backend): screen HBM passes per query
+    at B = 64 ≤ 1/8 of B = 1, and batched wall-clock beats the loop.
+
+Writes a schema-checked ``bench_batched`` section into ``BENCH_batch.json``
+(tools/check_bench_schema.py; CI job batch-bench-smoke runs ``--quick``
+under INTERPRET=1).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro.core import (PathConfig, lambda_grid, lasso_path,
+                        lasso_path_batched)
+from repro.core.engine import DictionaryGeometry
+from repro.data import QueryStream
+
+from .common import beta_err_tol, write_bench_section
+
+BATCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_batch.json")
+
+B_LIST = (1, 8, 64)
+
+
+def gather_queries(stream: QueryStream, count: int) -> np.ndarray:
+    ys, step = [], 0
+    while len(ys) < count:
+        ys.extend(stream.host_batch(step)["y"])
+        step += 1
+    return np.stack(ys[:count])
+
+
+def run_one(X, Y, grids, cfg, geometry):
+    """Warm-timed batched run + warm-timed sequential loop on one stream."""
+    B = Y.shape[0]
+    lasso_path_batched(X, Y, grids, cfg, geometry=geometry)   # warm compile
+    t0 = time.perf_counter()
+    res_b = lasso_path_batched(X, Y, grids, cfg, geometry=geometry)
+    t_batch = time.perf_counter() - t0
+
+    lasso_path(X, Y[0], grids[0], cfg, geometry=geometry)     # warm compile
+    t0 = time.perf_counter()
+    singles = [lasso_path(X, Y[b], grids[b], cfg, geometry=geometry)
+               for b in range(B)]
+    t_seq = time.perf_counter() - t0
+    return res_b, singles, t_batch, t_seq
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, interpret-safe)")
+    ap.add_argument("--rule", default="edpp")
+    ap.add_argument("--solver", default="fista")
+    ap.add_argument("--backend", default="jnp",
+                    help="backend for the timed A/B (explicit jnp by "
+                         "default so INTERPRET=1 smoke runs stay honest "
+                         "about wall-clock)")
+    ap.add_argument("--solver-tol", type=float, default=1e-8)
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        n, p, num_lambdas, nnz = 40, 256, 8, 8
+    else:
+        n, p, num_lambdas, nnz = 100, 1000, 25, 20
+    stream = QueryStream(n=n, p=p, batch=8, nnz=nnz, seed=3)
+    X = stream.dictionary()
+    cfg = PathConfig(rule=args.rule, solver=args.solver,
+                     solver_tol=args.solver_tol, backend=args.backend,
+                     solver_backend=args.backend)
+    geometry = DictionaryGeometry(X, backend=args.backend)
+
+    rows = []
+    passes_per_query = {}
+    print(f"bench_batched: n={n} p={p} K={num_lambdas} rule={args.rule} "
+          f"solver={args.solver} backend={args.backend}")
+    for B in B_LIST:
+        Y = gather_queries(stream, B)
+        # grids strictly inside (0, λ_max): the λ = λ_max point is a
+        # trivial step whose live/dead classification flips on the last
+        # bit of λ_max (different kernel reductions per arm) — excluded
+        # from the bit-exactness claim, it carries no work anyway
+        eng_grids = np.stack([
+            lambda_grid(float(np.max(np.abs(X.T @ Y[b]))), num=num_lambdas,
+                        hi_frac=0.95)
+            for b in range(B)])
+        res_b, singles, t_batch, t_seq = run_one(X, Y, eng_grids, cfg,
+                                                 geometry)
+
+        # -- exactness: masks bit-for-bit, β within solver-precision drift
+        tol = max(beta_err_tol(Y[b], args.solver_tol) for b in range(B))
+        masks_ok = all(np.array_equal(res_b.masks[b], singles[b].masks)
+                       for b in range(B))
+        beta_err = max(float(np.abs(res_b.betas[b] - singles[b].betas).max())
+                       for b in range(B))
+        assert masks_ok, f"B={B}: batched masks differ from single runs"
+        assert beta_err <= tol, (B, beta_err, tol)
+
+        # -- amortisation: screen passes per query per λ-step
+        screened = [s for s in res_b.stats if s.screen_time_s > 0]
+        per_query = float(np.mean([s.x_passes_per_query for s in screened]))
+        passes_per_query[B] = per_query
+        rej = res_b.masks.sum() / res_b.masks.size
+        print(f"  B={B:3d}  batched {t_batch:7.3f}s  loop {t_seq:7.3f}s  "
+              f"speedup {t_seq / t_batch:5.2f}x  "
+              f"screen passes/query/step {per_query:.4f}  "
+              f"max|Δβ| {beta_err:.2e} (tol {tol:.2e})")
+        rows.append({
+            "dataset": f"synthetic n={n} p={p}",
+            "rule": args.rule,
+            "solver": args.solver,
+            "backend": args.backend,
+            "batch_size": B,
+            "num_lambdas": num_lambdas,
+            "wall_time_s": t_batch,
+            "seq_wall_time_s": t_seq,
+            "speedup_vs_sequential": t_seq / max(t_batch, 1e-12),
+            "x_passes_per_query": per_query,
+            "masks_identical": bool(masks_ok),
+            "max_beta_err": beta_err,
+            "beta_err_tol": tol,
+            "rejection_frac": float(rej),
+            "queries_converged_frac": float(np.mean(
+                [s.queries_converged / s.batch_size for s in screened])),
+        })
+
+    # -- acceptance: B=64 amortises ≥8× over B=1, batched beats the loop
+    assert passes_per_query[64] <= passes_per_query[1] / 8.0, passes_per_query
+    big = next(r for r in rows if r["batch_size"] == max(B_LIST))
+    assert big["speedup_vs_sequential"] > 1.0, big
+
+    write_bench_section(
+        "bench_batched",
+        meta={"n": n, "p": p, "num_lambdas": num_lambdas,
+              "rule": args.rule, "solver": args.solver,
+              "backend": args.backend, "solver_tol": args.solver_tol,
+              "batch_sizes": list(B_LIST), "quick": bool(args.quick)},
+        rows=rows, path=BATCH_JSON)
+    print(f"wrote {BATCH_JSON}")
+
+
+def run(full: bool = False, num_lambdas: int | None = None):
+    """benchmarks/run.py entrypoint (num_lambdas is fixed per arm here —
+    the A/B compares batch sizes, not grid densities)."""
+    main([] if full else ["--quick"])
+
+
+if __name__ == "__main__":
+    main()

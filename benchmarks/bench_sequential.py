@@ -77,6 +77,11 @@ def _row(name, rule, r, num_lambdas, cadence):
         "mean_rejection": float(r.rejection.mean()),
         "num_lambdas": num_lambdas,
         "screen_hbm_passes_per_step": r.x_passes_per_step,
+        # single- vs multi-query cost on one axis: at batch_size=1 this
+        # equals passes/step; bench_batched.py reports the same metric at
+        # B ∈ {8, 64} (≈ passes/step/B)
+        "batch_size": r.batch_size,
+        "screen_hbm_passes_per_query": r.x_passes_per_query,
         "screen_time_s": r.screen_time_s,
         "solver_backend": r.solver_backend,
         "solver_hbm_passes_per_step": r.solver_x_passes_per_step,

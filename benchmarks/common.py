@@ -54,6 +54,10 @@ class RuleResult:
     solver_backend: str = ""
     solver_iters: int = 0           # total inner iterations across the path
     solver_x_passes_per_step: float = 0.0  # full-X-equivalent solver passes
+    batch_size: int = 1             # queries sharing each screen/solve pass
+    x_passes_per_query: float = 0.0  # amortised screen passes: passes/B —
+    #                                  the axis bench_batched.py reports its
+    #                                  multi-query runs on (docs/serving.md)
 
 
 def beta_err_tol(y, solver_tol: float, kappa: float = 25.0) -> float:
@@ -120,6 +124,8 @@ def run_rule(X, y, grid, rule, betas_ref, t_ref, solver_tol=1e-12,
         solver_backend=screened[0].solver_backend if screened else "",
         solver_iters=int(sum(s.solver_iters for s in res.stats)),
         solver_x_passes_per_step=stats_means(res, "solver_x_passes"),
+        batch_size=screened[0].batch_size if screened else 1,
+        x_passes_per_query=stats_means(res, "x_passes_per_query"),
     )
 
 

@@ -22,9 +22,9 @@ def main() -> None:
     import jax
     jax.config.update("jax_enable_x64", True)
 
-    from . import (bench_basic_rules, bench_dpp_family, bench_group,
-                   bench_kernels, bench_roofline, bench_sequential,
-                   bench_solver_swap, bench_synthetic)
+    from . import (bench_basic_rules, bench_batched, bench_dpp_family,
+                   bench_group, bench_kernels, bench_roofline,
+                   bench_sequential, bench_solver_swap, bench_synthetic)
 
     print("name,us_per_call,derived")
     bench_dpp_family.run(full=full, num_lambdas=num)      # Fig 1 / Table 1
@@ -35,6 +35,7 @@ def main() -> None:
     bench_group.run(full=full, num_lambdas=num)           # Fig 6 / Table 5
     bench_kernels.run(full=full)                          # ours
     bench_roofline.run(full=full)                         # §Roofline reader
+    bench_batched.run(full=full)                          # ours: serving B-axis
 
 
 if __name__ == "__main__":

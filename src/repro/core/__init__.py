@@ -5,11 +5,13 @@ Layering (see docs/screening-rules.md for the rule-by-rule map):
     screening.py        rule geometry — every ball rule as a SphereTest
                         (centre, ρ) constructor + its pure-jnp oracle mask
     engine.py           ScreeningEngine — the ONE entry point every screen
-                        goes through: a PathWorkspace caches the
-                        λ-independent geometry (column norms, λ_max, the
-                        λ_max ray) via a single fused kernel pass, then each
-                        per-step screen is one streaming HBM pass over X,
-                        dispatched through the kernels.ops.BACKENDS registry
+                        goes through: an immutable DictionaryGeometry (X,
+                        ‖x_j‖² — query-independent, fitted once) plus a
+                        per-query PathWorkspace (|XᵀY|, λ_max, v₁ — one
+                        fused kernel pass, batched over B queries), then
+                        each per-step screen is one streaming HBM pass over
+                        X for the WHOLE batch, dispatched through the
+                        kernels.ops.BACKENDS registry
                         (pallas | interpret | jnp)
     solver.py           SolverEngine — the solver twin of the screening
                         engine: fista/cd/group_fista as registered
@@ -19,20 +21,26 @@ Layering (see docs/screening-rules.md for the rule-by-rule map):
                         per-bucket Lipschitz cache
     path.py             sequential λ-path driver (screen → reduce → solve →
                         KKT re-check): one generic _path_driver consuming
-                        both engines
+                        both engines, single-query (lasso_path) or batched
+                        multi-query (lasso_path_batched: per-query λ-grids,
+                        union bucketing, convergence freezing —
+                        docs/serving.md)
     distributed.py      shard_map / pjit variants whose per-shard score and
-                        solver-update blocks reuse the engines' arithmetic
+                        solver-update blocks reuse the engines' arithmetic;
+                        batched multi-query variants psum (B, N) blocks
 
 Public API:
     lambda_max, DualState, screen, edpp_mask, dpp_mask, ...   (screening)
     SphereTest, edpp_sphere, gap_mask, make_sphere, ...       (geometry)
     ScreeningEngine, GroupScreeningEngine, PathWorkspace      (engine)
+    DictionaryGeometry                                        (fitted dict)
     register_backend, available_backends, default_backend     (backends)
     SolverEngine, register_solver, available_solvers          (solver engine)
     fista, cd, group_fista, soft_threshold, SolveResult       (solvers)
     group_lambda_max, group_duality_gap                       (group solver)
     group_screen, group_edpp_mask, GroupDualState             (group screening)
     lasso_path, group_lasso_path, PathConfig, lambda_grid     (path driver)
+    lasso_path_batched, BatchPathResult                       (batched paths)
 """
 
 from .lasso import (  # noqa: F401
@@ -46,6 +54,7 @@ from .lasso import (  # noqa: F401
     top_eigenpair,
 )
 from .solver import (  # noqa: F401
+    BATCHED_SOLVERS,
     FistaResult,
     GroupFistaResult,
     SOLVERS,
@@ -92,6 +101,7 @@ from .screening import (  # noqa: F401
     v2_perp,
 )
 from .engine import (  # noqa: F401
+    DictionaryGeometry,
     GroupScreeningEngine,
     PathWorkspace,
     ScreeningEngine,
@@ -123,6 +133,7 @@ from .group_screening import (  # noqa: F401
     make_group_dual_state,
 )
 from .path import (  # noqa: F401
+    BatchPathResult,
     GroupPathConfig,
     PathConfig,
     PathResult,
@@ -130,5 +141,6 @@ from .path import (  # noqa: F401
     group_lasso_path,
     lambda_grid,
     lasso_path,
+    lasso_path_batched,
     next_pow2,
 )

@@ -11,6 +11,20 @@ strong, DOME — through the ``kernels.screen_matvec`` streaming kernel with
 the cached norms: **one HBM pass over X per screen** (two for DOME's extra
 direction).
 
+Dictionary vs query
+-------------------
+The cache splits along the paper's own geometry: the dual polytope F, the
+column norms ‖x_j‖ and the Gram/Lipschitz machinery depend on **X only**
+(:class:`DictionaryGeometry` — immutable, computed once, shared across
+every query against this dictionary), while |Xᵀy|, λ_max, the λ_max ray v₁
+and the dual state θ are cheap **per-query** state (:class:`PathWorkspace`
+= geometry + one query batch). A workspace built over a (B, n) batch of
+response vectors screens all B queries per single fused pass over X:
+``screen`` takes per-query λ (B,) and a batched
+:class:`~repro.core.screening.DualState` and returns a (B, p) mask — HBM
+traffic over X is amortised 1/B per query (the serving regime: one fitted
+dictionary, millions of y's).
+
 Backend registry
 ----------------
 The kernels are dispatched through ``kernels.ops.BACKENDS``:
@@ -32,6 +46,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import ops
 from . import group_screening as gscr
@@ -98,16 +113,27 @@ def block_scores(Xb, centre, rho, col_norms=None):
 
 
 # ---------------------------------------------------------------------------
-# Jitted combine steps (O(p), applied to the kernel's single-pass output)
+# Jitted combine steps (O(p) or O(B·p), applied to the kernel's single-pass
+# output). Each branches on a leading batch axis at trace time: batched
+# inputs use the (B, ·) arithmetic of the screening module's batched oracles.
 # ---------------------------------------------------------------------------
 
 @jax.jit
 def _sphere_combine(dot, rho, col_norms, eps):
+    if dot.ndim == 2:
+        return jnp.abs(dot) + scr._col(rho) * col_norms \
+            < 1.0 - scr._col(jnp.asarray(eps))
     return jnp.abs(dot) + rho * col_norms < 1.0 - eps
 
 
 @jax.jit
 def _gap_combine(dot, y, lam_next, state, col_norms, eps):
+    if dot.ndim == 2:
+        sup_corr = jnp.max(jnp.abs(dot), axis=-1)
+        test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+        s = jnp.maximum(1.0, sup_corr)
+        return jnp.abs(dot) / scr._col(s) \
+            + scr._col(test.rho) * col_norms < 1.0 - eps
     sup_corr = jnp.max(jnp.abs(dot))
     test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
     s = jnp.maximum(1.0, sup_corr)
@@ -116,6 +142,8 @@ def _gap_combine(dot, y, lam_next, state, col_norms, eps):
 
 @jax.jit
 def _strong_combine(dot, lam_next, lam_prev, eps):
+    if dot.ndim == 2:
+        return jnp.abs(dot) < scr._col(2.0 * lam_next - lam_prev - eps)
     return jnp.abs(dot) < 2.0 * lam_next - lam_prev - eps
 
 
@@ -143,6 +171,24 @@ def _make_state(X, y, beta, lam, lmax, v1max):
 
 
 @jax.jit
+def _make_state_batched(X, y, beta, lam, lmax, v1max):
+    """Batched `_make_state`: y/beta (B, ·), lam/lmax (B,), v1max (B, n).
+    Each query selects its own eq. (17) branch."""
+    theta_seq = (y - beta @ X.T) / scr._col(lam)
+    at_max = lam >= lmax * (1.0 - 1e-12)                 # (B,)
+    at_col = scr._col(at_max)
+    theta = jnp.where(at_col, y / scr._col(lmax), theta_seq)
+    v1 = jnp.where(at_col, v1max, y / scr._col(lam) - theta_seq)
+    return scr.DualState(
+        theta=theta,
+        lam=jnp.where(at_max, lmax, lam).astype(X.dtype),
+        v1=v1,
+        at_lmax=at_max,
+        beta_l1=jnp.where(at_max, 0.0, jnp.sum(jnp.abs(beta), axis=-1)),
+    )
+
+
+@jax.jit
 def _make_group_state(X, y, beta, lam, lmax, theta_max, v1max):
     theta_seq = (y - X @ beta) / lam
     at_max = lam >= lmax * (1.0 - 1e-12)
@@ -163,44 +209,120 @@ _group_spec_norms = jax.jit(gscr.group_spectral_norms, static_argnames="m")
 
 
 # ---------------------------------------------------------------------------
-# Per-path workspace: the λ-independent geometry, one fused pass over X
+# Dictionary geometry (query-independent, computed once) + per-query state
 # ---------------------------------------------------------------------------
 
+class DictionaryGeometry:
+    """The immutable, query-independent geometry of a fitted dictionary X.
+
+    Everything the screens and solvers reuse across *different response
+    vectors y*: the device-resident X itself, ``‖x_j‖²`` and the column
+    norms (one fused kernel pass with a zero centre — the scores vanish,
+    the sum-of-squares accumulator is the payload). The serving loop
+    (launch/serve.py) builds this ONCE and then attaches micro-batches of
+    queries via :class:`PathWorkspace`, so per-query setup is a single
+    batched ``|XᵀY|`` pass instead of a full re-fit.
+    """
+
+    def __init__(self, X, backend: str | None = None, *, _sumsq=None):
+        self.backend = resolve_backend(backend)
+        self.X = jnp.asarray(X)
+        if _sumsq is None:
+            _, _sumsq = self.backend.fused_scores(
+                self.X, jnp.zeros((self.X.shape[0],), self.X.dtype), 0.0)
+        self.sumsq = _sumsq                       # ‖x_j‖²
+        self.col_norms = jnp.sqrt(_sumsq)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.X.shape
+
+
 class PathWorkspace:
-    """Caches everything about (X, y) the screens reuse across the λ-grid.
+    """Caches everything about (X, y) the screens reuse across the λ-grid:
+    a :class:`DictionaryGeometry` plus the per-query fit.
 
     One fused ``edpp_screen_scores(X, y, rho=0)`` pass yields BOTH
     ``|Xᵀy|`` (→ λ_max, the argmax feature) and ``‖x_j‖²`` (→ the column
     norms every sphere test needs); the λ_max ray v₁ = sign(x*ᵀy)·x* and
     ‖y‖ follow in O(n). Nothing here is recomputed per grid step.
+
+    ``y`` may be a (B, n) batch: the SAME single fused pass then fits all
+    B queries (scores (B, p)), and the per-query fields grow a leading
+    batch axis — ``lam_max``/``istar`` (B,), ``v1_at_lmax``/``ghat``
+    (B, n). Pass ``geometry=`` to reuse a prefitted dictionary: setup then
+    costs one batched matvec pass instead of the fused pass.
     """
 
-    def __init__(self, X, y, backend: str | None = None):
-        self.backend = resolve_backend(backend)
-        self.X = jnp.asarray(X)
-        self.y = jnp.asarray(y)
-        scores, sumsq = self.backend.fused_scores(self.X, self.y, 0.0)
-        self.abs_xty = scores                     # |Xᵀy| (rho = 0)
-        self.sumsq = sumsq                        # ‖x_j‖²
-        self.col_norms = jnp.sqrt(sumsq)
-        self.istar = int(jnp.argmax(scores))
-        self.lam_max = float(scores[self.istar])
-        xstar = self.X[:, self.istar]
+    def __init__(self, X, y, backend: str | None = None, *,
+                 geometry: DictionaryGeometry | None = None):
+        if geometry is None:
+            y_arr = jnp.asarray(y)
+            backend_r = resolve_backend(backend)
+            scores, sumsq = backend_r.fused_scores(jnp.asarray(X), y_arr, 0.0)
+            geometry = DictionaryGeometry(X, backend_r, _sumsq=sumsq)
+        else:
+            y_arr = jnp.asarray(y)
+            scores = jnp.abs(geometry.backend.matvec(geometry.X, y_arr))
+        self.geometry = geometry
+        self.backend = geometry.backend
+        self.y = y_arr
+        self.batch = None if y_arr.ndim == 1 else y_arr.shape[0]
+        self.abs_xty = scores                     # |Xᵀy|, (p,) or (B, p)
         acc = jnp.promote_types(self.X.dtype, jnp.float32)
-        sgn = jnp.sign(jnp.vdot(xstar.astype(acc), self.y.astype(acc)))
-        self.v1_at_lmax = sgn * xstar             # eq. (17) at λ₀ = λ_max
+        if self.batch is None:
+            self.istar = int(jnp.argmax(scores))
+            self.lam_max = float(scores[self.istar])
+            xstar = self.X[:, self.istar]
+            sgn = jnp.sign(jnp.vdot(xstar.astype(acc), self.y.astype(acc)))
+            self.v1_at_lmax = sgn * xstar         # eq. (17) at λ₀ = λ_max
+        else:
+            istar = jnp.argmax(scores, axis=-1)               # (B,)
+            self.istar = np.asarray(istar)
+            self.lam_max = np.asarray(
+                jnp.take_along_axis(scores, istar[:, None], axis=-1)[:, 0],
+                dtype=np.float64)                             # (B,)
+            xstar = self.X[:, istar].T                        # (B, n)
+            sgn = jnp.sign(jnp.sum(
+                xstar.astype(acc) * self.y.astype(acc), axis=-1))
+            self.v1_at_lmax = scr._col(sgn) * xstar
         self.ghat = self.v1_at_lmax / (
-            jnp.linalg.norm(self.v1_at_lmax) + 1e-30)   # DOME halfspace
+            jnp.linalg.norm(self.v1_at_lmax, axis=-1, keepdims=True)
+            + 1e-30)                                  # DOME halfspace
+
+    @property
+    def X(self) -> jax.Array:
+        return self.geometry.X
+
+    @property
+    def sumsq(self) -> jax.Array:
+        return self.geometry.sumsq
+
+    @property
+    def col_norms(self) -> jax.Array:
+        return self.geometry.col_norms
+
+    def lam_max_array(self) -> jax.Array:
+        """λ_max as a device array: scalar (single) or (B,) (batched)."""
+        return jnp.asarray(self.lam_max, self.X.dtype)
 
     def state_at_lambda_max(self) -> scr.DualState:
         """β* = 0, θ* = y/λ_max (eq. 9) — from cache, no X pass."""
-        lmax = jnp.asarray(self.lam_max, self.X.dtype)
+        lmax = self.lam_max_array()
+        if self.batch is None:
+            return scr.DualState(
+                theta=self.y / lmax,
+                lam=lmax,
+                v1=self.v1_at_lmax,
+                at_lmax=jnp.asarray(True),
+                beta_l1=jnp.zeros((), dtype=self.X.dtype),
+            )
         return scr.DualState(
-            theta=self.y / lmax,
+            theta=self.y / scr._col(lmax),
             lam=lmax,
             v1=self.v1_at_lmax,
-            at_lmax=jnp.asarray(True),
-            beta_l1=jnp.zeros((), dtype=self.X.dtype),
+            at_lmax=jnp.ones((self.batch,), dtype=bool),
+            beta_l1=jnp.zeros((self.batch,), dtype=self.X.dtype),
         )
 
 
@@ -216,21 +338,37 @@ class ScreeningEngine:
             ... reduced solve -> beta ...
             state = eng.make_state(beta, lam)
 
+    Batched (one fitted dictionary, B queries): construct with ``y`` of
+    shape (B, n) — ideally passing a shared prefitted ``geometry=`` — and
+    call ``screen`` with per-query λ (B,) and a batched DualState. Each
+    screen is STILL one streaming pass over X; ``last_x_passes`` counts
+    passes per *batch*, so the per-query cost is ``last_x_passes / B``.
+
     ``last_x_passes`` / ``total_x_passes`` count full HBM passes over X so
     callers (benchmarks, PathStepStats) can report data movement.
     """
 
     def __init__(self, X, y, backend: str | None = None,
-                 eps: float = scr.EPS_DEFAULT):
-        self.ws = PathWorkspace(X, y, backend)
+                 eps: float = scr.EPS_DEFAULT, *,
+                 geometry: DictionaryGeometry | None = None):
+        self.ws = PathWorkspace(X, y, backend, geometry=geometry)
         self.eps = eps
         self.n_screens = 0
         self.total_x_passes = 0
         self.last_x_passes = 0
 
     @property
-    def lam_max(self) -> float:
+    def lam_max(self):
+        """float (single query) or float64 (B,) array (batched)."""
         return self.ws.lam_max
+
+    @property
+    def batch(self) -> int | None:
+        return self.ws.batch
+
+    @property
+    def geometry(self) -> DictionaryGeometry:
+        return self.ws.geometry
 
     @property
     def backend_name(self) -> str:
@@ -240,7 +378,13 @@ class ScreeningEngine:
         return self.ws.state_at_lambda_max()
 
     def make_state(self, beta, lam) -> scr.DualState:
-        """Sequential DualState from the solution at λ (KKT eq. 3)."""
+        """Sequential DualState from the solution at λ (KKT eq. 3).
+        Batched: beta (B, p), lam (B,) → batched state, still no X pass."""
+        if self.ws.batch is not None:
+            return _make_state_batched(
+                self.ws.X, self.ws.y, beta,
+                jnp.asarray(lam, self.ws.X.dtype),
+                self.ws.lam_max_array(), self.ws.v1_at_lmax)
         return _make_state(self.ws.X, self.ws.y, beta, lam,
                            self.ws.lam_max, self.ws.v1_at_lmax)
 
@@ -251,30 +395,48 @@ class ScreeningEngine:
 
     def screen(self, lam_next, state: scr.DualState | None,
                rule: str = "edpp") -> jax.Array:
-        """Discard mask bool[p] for λ_next; dispatches every rule through
-        the backend's streaming matvec with cached column norms."""
+        """Discard mask for λ_next; dispatches every rule through the
+        backend's streaming matvec with cached column norms. Single query:
+        scalar λ → bool[p]. Batched: λ (B,) → bool[B, p], one X pass for
+        the whole batch."""
         ws = self.ws
+        batched = ws.batch is not None
+        if batched:
+            lam_next = jnp.asarray(lam_next, ws.X.dtype)
         if rule == "none":
             self._count(0)
-            return jnp.zeros((ws.X.shape[1],), dtype=bool)
+            shape = (ws.X.shape[1],) if not batched else (ws.batch,
+                                                          ws.X.shape[1])
+            return jnp.zeros(shape, dtype=bool)
         if rule == "safe":
-            test = scr.safe_sphere(ws.y, lam_next, ws.lam_max)
+            lmax = ws.lam_max_array() if batched else ws.lam_max
+            test = scr.safe_sphere(ws.y, lam_next, lmax)
             dot = ws.backend.matvec(ws.X, test.centre)
             self._count(1)
             # eq. 15's eps margin is at λ scale: eps/λ once unit-normalised
             return _sphere_combine(dot, test.rho, ws.col_norms,
                                    self.eps / lam_next)
         if rule == "dome":
-            c = ws.y / lam_next
-            rho = jnp.linalg.norm(ws.y) * (1.0 / lam_next - 1.0 / ws.lam_max)
-            gnorm = jnp.linalg.norm(ws.v1_at_lmax) + 1e-30
+            if batched:
+                lmax = ws.lam_max_array()
+                c = ws.y / scr._col(lam_next)
+                rho = jnp.linalg.norm(ws.y, axis=-1) * (
+                    1.0 / lam_next - 1.0 / lmax)
+                gnorm = jnp.linalg.norm(ws.v1_at_lmax, axis=-1) + 1e-30
+            else:
+                c = ws.y / lam_next
+                rho = jnp.linalg.norm(ws.y) * (
+                    1.0 / lam_next - 1.0 / ws.lam_max)
+                gnorm = jnp.linalg.norm(ws.v1_at_lmax) + 1e-30
             scores_c = ws.backend.matvec(ws.X, c)
             gdot = ws.backend.matvec(ws.X, ws.ghat)
             self._count(2)
             return _dome_combine(scores_c, gdot, ws.col_norms, c, rho,
                                  ws.ghat, 1.0 / gnorm, self.eps)
         if rule == "strong":
-            dot = ws.backend.matvec(ws.X, state.theta * state.lam)
+            theta_lam = (state.theta * scr._col(state.lam) if batched
+                         else state.theta * state.lam)
+            dot = ws.backend.matvec(ws.X, theta_lam)
             self._count(1)
             return _strong_combine(dot, lam_next, state.lam, self.eps)
         if rule == "gap":

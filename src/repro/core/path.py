@@ -28,6 +28,17 @@ Engineering notes
   shapes. We gather surviving columns (whole groups for m > 1) into
   power-of-two **buckets** (zero padded); solvers treat zero columns as fixed
   points, and jit compiles at most O(log p) program variants per path.
+* **Batched multi-query paths** (``lasso_path_batched``): one fitted
+  dictionary, B response vectors through the whole loop. Per grid step the
+  engine screens all B queries in ONE fused pass over X, the survivors are
+  **union-bucketed** into a shared buffer, and a single batched solve runs
+  with per-query λ, per-query validity masks and per-query convergence
+  freezing inside the solver ``lax.while_loop`` (converged queries become
+  fixed points — counted in ``PathStepStats.queries_converged``). Queries in
+  their trivial region (λ ≥ own λ_max) stay at β = 0. Program variants stay
+  O(log p) per batch shape (buckets are pow-2, B is fixed per call), and
+  screen HBM cost is amortised ~1/B per query
+  (``PathStepStats.x_passes_per_query``).
 * The strong rule is heuristic: after each reduced solve we run the paper's
   KKT violation loop — violated features are added back and the problem
   re-solved until clean (§1, §4.1.2). Safe rules never trigger it (property-
@@ -115,6 +126,9 @@ class PathStepStats:
     solver_backend: str = ""      # kernel backend the solves dispatched to
     bucket: int = 0               # padded bucket size (columns) solved at
     solver_x_passes: float = 0.0  # solver HBM passes in full-X equivalents
+    batch_size: int = 1           # queries screened/solved together this step
+    queries_converged: int = 0    # queries whose reduced solve converged
+    x_passes_per_query: float = 0.0  # amortised screen passes: x_passes/B
 
 
 @dataclasses.dataclass
@@ -122,6 +136,7 @@ class PathResult:
     lambdas: np.ndarray
     betas: np.ndarray             # (K, p)
     stats: list[PathStepStats]
+    masks: np.ndarray | None = None   # (K, units) bool discard masks
 
     @property
     def total_solve_time(self) -> float:
@@ -130,6 +145,35 @@ class PathResult:
     @property
     def total_screen_time(self) -> float:
         return sum(s.screen_time_s for s in self.stats)
+
+
+@dataclasses.dataclass
+class BatchPathResult:
+    """Result of a batched multi-query path: B queries against one fitted
+    dictionary. ``betas[b]``/``masks[b]``/``lambdas[b]`` line up with the
+    single-query :class:`PathResult` of query b (same grid, same rule)."""
+
+    lambdas: np.ndarray           # (B, K) per-query λ grids
+    betas: np.ndarray             # (B, K, p)
+    stats: list[PathStepStats]    # per grid step (shared across the batch)
+    masks: np.ndarray             # (B, K, units) bool discard masks
+
+    @property
+    def batch(self) -> int:
+        return self.betas.shape[0]
+
+    @property
+    def total_solve_time(self) -> float:
+        return sum(s.solve_time_s for s in self.stats)
+
+    @property
+    def total_screen_time(self) -> float:
+        return sum(s.screen_time_s for s in self.stats)
+
+    def query(self, b: int) -> PathResult:
+        """View of query b as a single-query PathResult (stats stay shared)."""
+        return PathResult(lambdas=self.lambdas[b], betas=self.betas[b],
+                          stats=self.stats, masks=self.masks[b])
 
 
 @functools.partial(jax.jit, static_argnames=("bucket",))
@@ -153,44 +197,78 @@ def lambda_grid(lam_max: float, num: int = 100, lo_frac: float = 0.05,
     return np.linspace(hi_frac, lo_frac, num) * lam_max
 
 
-def _path_driver(X, y, lambdas, cfg, *, m: int, screen_engine,
+def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                  solver_engine: SolverEngine, need_kkt: bool,
-                 kkt_fn) -> PathResult:
+                 kkt_fn, batch: int | None = None):
     """The shared screen → reduce → solve → KKT loop over a decreasing grid.
 
     ``m`` is the unit size: 1 for the Lasso (units = features), the group
     size for the group Lasso (units = groups; whole groups are gathered).
-    ``kkt_fn(beta_full, lam, discard) -> bool[units]`` flags violations.
+    ``kkt_fn(beta_full, lam, discard)`` flags violations per unit.
+
+    ``batch``: None runs the classic single-query path (Y (n,), lambdas
+    (K,), engine called with scalar λ). batch=B runs B queries against one
+    fitted dictionary END-TO-END: Y (B, n), per-query grids (B, K), one
+    fused screen per step for the whole batch, survivors UNION-bucketed
+    into a shared buffer, a single batched solve with per-query validity
+    masks and convergence freezing (``solve_batched``), per-query KKT
+    re-check rounds, and per-query trivial-region handling (a query whose
+    λ ≥ its own λ_max stays at β = 0 and screens everything). Internally
+    everything is (B, ·)-shaped with B = 1 for the single-query case, so
+    both modes share one loop.
     """
     X = jnp.asarray(X)
-    y = jnp.asarray(y)
+    Y = jnp.asarray(Y)
     p = X.shape[1]
     units = p // m
     assert units * m == p
+    B = 1 if batch is None else batch
     lambdas = np.asarray(lambdas, dtype=np.float64)
-    assert np.all(np.diff(lambdas) <= 1e-12), "grid must be decreasing"
+    if batch is None:
+        assert np.all(np.diff(lambdas) <= 1e-12), "grid must be decreasing"
+        K = lambdas.shape[0]
+    else:
+        assert lambdas.ndim == 2 and lambdas.shape[0] == B, \
+            "batched grids must be (B, K)"
+        assert np.all(np.diff(lambdas, axis=1) <= 1e-12), \
+            "grids must be decreasing"
+        K = lambdas.shape[1]
 
-    lmax = screen_engine.lam_max
+    lmax = np.atleast_1d(np.asarray(screen_engine.lam_max,
+                                    dtype=np.float64))      # (B,)
     state = screen_engine.state_at_lambda_max()
     arange_m = np.arange(m)[None, :]
 
-    betas = np.zeros((len(lambdas), p), dtype=np.float64)
+    betas = np.zeros((B, K, p), dtype=np.float64)
+    masks = np.ones((B, K, units), dtype=bool)
     stats: list[PathStepStats] = []
-    beta_prev = jnp.zeros((p,), dtype=X.dtype)
+    beta_prev = jnp.zeros((B, p), dtype=X.dtype)
 
-    for k, lam in enumerate(lambdas):
-        lam = float(lam)
-        if lam >= lmax:           # trivial region (eq. 8): β* = 0
-            stats.append(PathStepStats(lam, units, 0, 0, 0.0, 0, 0.0, 0.0))
+    for k in range(K):
+        lam_vec = lambdas[None, k] if batch is None else lambdas[:, k]
+        live = lam_vec < lmax          # per-query trivial region (eq. 8)
+        if not live.any():             # β* = 0 for the whole batch
+            stats.append(PathStepStats(
+                float(lam_vec.max()), units, 0, 0, 0.0, 0, 0.0, 0.0,
+                batch_size=B, queries_converged=B))
             if cfg.checkpoint_fn:
-                cfg.checkpoint_fn(k, lam, np.zeros((p,)))
+                if batch is None:
+                    cfg.checkpoint_fn(k, float(lam_vec[0]), np.zeros((p,)))
+                else:
+                    cfg.checkpoint_fn(k, lam_vec, np.zeros((B, p)))
             continue
 
-        # ---- screen (one fused kernel pass over X, engine.py) -----------
+        # ---- screen (one fused kernel pass over X for ALL queries) ------
         t0 = time.perf_counter()
-        discard = screen_engine.screen(lam, state, rule=cfg.rule)
-        discard_np = np.asarray(discard)
-        kept = np.flatnonzero(~discard_np)
+        if batch is None:
+            discard = screen_engine.screen(float(lam_vec[0]), state,
+                                           rule=cfg.rule)
+            discard_np = np.asarray(discard)[None, :]
+        else:
+            discard = screen_engine.screen(jnp.asarray(lam_vec, X.dtype),
+                                           state, rule=cfg.rule)
+            discard_np = np.asarray(discard)
+        discard_np = discard_np | ~live[:, None]   # dead queries keep nothing
         screen_time = time.perf_counter() - t0
 
         # ---- reduced solve (+ strong-rule KKT loop) ----------------------
@@ -199,23 +277,48 @@ def _path_driver(X, y, lambdas, cfg, *, m: int, screen_engine,
         solves = gram_solves = gap_checks = 0
         solver_x_passes = 0.0
         bucket = 0
+        res_iters, res_gap, q_conv = 0, 0.0, B
         while True:
+            # union of survivors across the batch: one shared buffer
+            kept = np.flatnonzero((~discard_np).any(axis=0))
             bucket = min(next_pow2(max(kept.size, cfg.bucket_min)), units)
             if kept.size == 0:
-                beta_full = jnp.zeros((p,), dtype=X.dtype)
-                res_iters, res_gap = 0, 0.0
+                beta_full = jnp.zeros((B, p), dtype=X.dtype)
+                res_iters, res_gap, q_conv = 0, 0.0, B
             else:
                 col_idx = (kept[:, None] * m + arange_m).reshape(-1)
                 idx, valid = _pad_indices(col_idx, bucket * m)
                 Xr = _gather_cols(X, idx, valid, bucket * m)
-                beta0 = jnp.take(beta_prev, idx) * valid
-                res = solver_engine.solve(Xr, lam, beta0, m=m)
-                beta_full = (
-                    jnp.zeros((p,), dtype=X.dtype)
-                    .at[col_idx]
-                    .set(res.beta[: col_idx.size])
-                )
-                res_iters, res_gap = int(res.iters), float(res.gap)
+                if batch is None:
+                    beta0 = jnp.take(beta_prev[0], idx) * valid
+                    res = solver_engine.solve(Xr, float(lam_vec[0]), beta0,
+                                              m=m)
+                    beta_full = (
+                        jnp.zeros((p,), dtype=X.dtype)
+                        .at[col_idx]
+                        .set(res.beta[: col_idx.size])
+                    )[None, :]
+                    res_iters, res_gap = int(res.iters), float(res.gap)
+                    q_conv = int(bool(res.converged))
+                else:
+                    # per-query validity on the union buffer: each query
+                    # solves exactly its own reduced problem
+                    kept_q = np.repeat(~discard_np[:, kept], m, axis=1)
+                    vq_np = np.zeros((B, bucket * m), dtype=np.float32)
+                    vq_np[:, : col_idx.size] = kept_q
+                    vq = jnp.asarray(vq_np)
+                    beta0 = jnp.take(beta_prev, idx, axis=1) * vq
+                    res = solver_engine.solve_batched(
+                        Xr, jnp.asarray(lam_vec, X.dtype), beta0,
+                        valid=vq, m=m)
+                    beta_full = (
+                        jnp.zeros((B, p), dtype=X.dtype)
+                        .at[:, col_idx]
+                        .set(res.beta[:, : col_idx.size])
+                    )
+                    res_iters = int(jnp.max(res.iters))
+                    res_gap = float(jnp.max(res.gap))
+                    q_conv = int(jnp.sum(res.converged))
                 solves += 1
                 gram_solves += int(solver_engine.last_used_gram)
                 gap_checks += solver_engine.last_gap_checks
@@ -223,18 +326,26 @@ def _path_driver(X, y, lambdas, cfg, *, m: int, screen_engine,
                                     * (bucket * m) / p)
             if not need_kkt:
                 break
-            viol = np.asarray(kkt_fn(beta_full, lam,
-                                     jnp.asarray(discard_np)))
+            if batch is None:
+                viol = np.asarray(kkt_fn(beta_full[0], float(lam_vec[0]),
+                                         jnp.asarray(discard_np[0])))[None, :]
+            else:
+                viol = np.asarray(kkt_fn(beta_full,
+                                         jnp.asarray(lam_vec, X.dtype),
+                                         jnp.asarray(discard_np)))
+            viol = viol & live[:, None]
             if not viol.any() or kkt_rounds >= cfg.max_kkt_rounds:
                 break
             kkt_rounds += 1
             discard_np = discard_np & ~viol
-            kept = np.flatnonzero(~discard_np)
         solve_time = time.perf_counter() - t0
 
-        betas[k] = np.asarray(beta_full, dtype=np.float64)
+        betas[:, k] = np.asarray(beta_full, dtype=np.float64)
+        masks[:, k] = discard_np
         stats.append(PathStepStats(
-            lam=lam, n_discarded=int(discard_np.sum()), n_kept=int(kept.size),
+            lam=float(lam_vec[0]) if batch is None else float(lam_vec.max()),
+            n_discarded=int(discard_np.all(axis=0).sum()),
+            n_kept=int(kept.size),
             solver_iters=res_iters, gap=res_gap, kkt_rounds=kkt_rounds,
             screen_time_s=screen_time, solve_time_s=solve_time,
             x_passes=screen_engine.last_x_passes,
@@ -243,26 +354,45 @@ def _path_driver(X, y, lambdas, cfg, *, m: int, screen_engine,
             solver_backend=solver_engine.backend_name,
             bucket=bucket * m,
             solver_x_passes=solver_x_passes,
+            batch_size=B,
+            queries_converged=q_conv,
+            x_passes_per_query=screen_engine.last_x_passes / B,
         ))
         if cfg.checkpoint_fn:
-            cfg.checkpoint_fn(k, lam, betas[k])
+            if batch is None:
+                cfg.checkpoint_fn(k, float(lam_vec[0]), betas[0, k])
+            else:
+                cfg.checkpoint_fn(k, lam_vec, betas[:, k])
 
         beta_prev = beta_full
         if cfg.sequential:
-            state = screen_engine.make_state(beta_full, lam)
+            if batch is None:
+                state = screen_engine.make_state(beta_full[0],
+                                                 float(lam_vec[0]))
+            else:
+                state = screen_engine.make_state(
+                    beta_full, jnp.asarray(lam_vec, X.dtype))
         # basic variants keep `state` pinned at λmax (paper §4.1.1)
-    return PathResult(lambdas=lambdas, betas=betas, stats=stats)
+    if batch is None:
+        return PathResult(lambdas=lambdas, betas=betas[0], stats=stats,
+                          masks=masks[0])
+    return BatchPathResult(lambdas=lambdas, betas=betas, stats=stats,
+                           masks=masks)
 
 
-def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
+def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig(), *,
+               geometry=None) -> PathResult:
     """Solve the Lasso along a decreasing λ grid with screening.
 
     `lambdas` must be sorted decreasing and ≤ λmax for sequential rules to be
-    valid (the theorems require λ ≤ λ₀).
+    valid (the theorems require λ ≤ λ₀). Pass ``geometry`` (a
+    :class:`repro.core.engine.DictionaryGeometry`) to reuse a prefitted
+    dictionary across many calls (the serving loop does this).
     """
     X = jnp.asarray(X)
     y = jnp.asarray(y)
-    screen_engine = ScreeningEngine(X, y, backend=cfg.backend, eps=cfg.eps)
+    screen_engine = ScreeningEngine(X, y, backend=cfg.backend, eps=cfg.eps,
+                                    geometry=geometry)
     solver_engine = SolverEngine(
         y, solver=cfg.solver, backend=cfg.solver_backend,
         tol=cfg.solver_tol, max_iter=cfg.max_iter,
@@ -276,6 +406,54 @@ def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig()) -> PathResult:
         solver_engine=solver_engine,
         need_kkt=cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid,
         kkt_fn=kkt_fn)
+
+
+def lasso_path_batched(X, Y, lambdas=None, cfg: PathConfig = PathConfig(),
+                       *, num_lambdas: int = 100, lo_frac: float = 0.05,
+                       geometry=None) -> BatchPathResult:
+    """Solve B Lasso paths against ONE fitted dictionary, batched end-to-end.
+
+    ``Y`` is (B, n); ``lambdas`` is either a (B, K) array of per-query
+    decreasing grids, a shared (K,) grid (broadcast to every query), or
+    None — then each query gets the paper's grid over its own λ_max
+    (``lambda_grid(lam_max_b, num_lambdas, lo_frac)``). Each grid step runs
+    ONE fused screen over X for the whole batch and one batched reduced
+    solve on the union of surviving features (per-query validity masks and
+    convergence freezing — see ``SolverEngine.solve_batched``), so the HBM
+    cost per query is amortised ~1/B (``PathStepStats.x_passes_per_query``).
+
+    Per-query screening masks are exactly the single-query masks: the
+    batched result's ``masks[b]``/``betas[b]`` reproduce
+    ``lasso_path(X, Y[b], lambdas[b], cfg)`` (masks bit-for-bit for safe
+    rules, β to solver tolerance — property-tested).
+    """
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+    assert Y.ndim == 2, "lasso_path_batched needs Y of shape (B, n)"
+    B = Y.shape[0]
+    screen_engine = ScreeningEngine(X, Y, backend=cfg.backend, eps=cfg.eps,
+                                    geometry=geometry)
+    if lambdas is None:
+        lambdas = np.stack([
+            lambda_grid(float(lm), num=num_lambdas, lo_frac=lo_frac)
+            for lm in np.atleast_1d(screen_engine.lam_max)])
+    else:
+        lambdas = np.asarray(lambdas, dtype=np.float64)
+        if lambdas.ndim == 1:
+            lambdas = np.broadcast_to(lambdas, (B, lambdas.shape[0])).copy()
+    solver_engine = SolverEngine(
+        Y, solver=cfg.solver, backend=cfg.solver_backend,
+        tol=cfg.solver_tol, max_iter=cfg.max_iter,
+        gap_check_cadence=cfg.gap_check_cadence)
+
+    def kkt_fn(beta_full, lam, discard):
+        return _kkt_violations(X, Y, beta_full, lam, discard, cfg.kkt_tol)
+
+    return _path_driver(
+        X, Y, lambdas, cfg, m=1, screen_engine=screen_engine,
+        solver_engine=solver_engine,
+        need_kkt=cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid,
+        kkt_fn=kkt_fn, batch=B)
 
 
 def group_lasso_path(X, y, m: int, lambdas,

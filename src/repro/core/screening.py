@@ -33,6 +33,16 @@ All rules share the sequential interface ``rule(X, y, lam_next, state)`` where
 (larger) λ on the grid; the *basic* variants are the special case
 ``state = DualState.at_lambda_max(X, y)`` (paper Remark 3).
 
+Batch axis
+----------
+The polytope F and the column norms depend on X only — every query-side
+quantity (y, θ, v₁, λ, ρ) batches trivially. All sphere constructors and
+mask oracles therefore accept a **leading batch axis B** on the query
+operands: ``y``/``theta``/``v1`` as (B, n), ``lam``/``rho``/``beta_l1`` as
+(B,), producing (B, p) masks — B response vectors screened against one
+fitted dictionary in a single pass over X. Rank-1 inputs take the exact
+pre-batch code paths, so single-query masks are unchanged bit-for-bit.
+
 Strict inequalities are evaluated with a safety margin ``eps``: we only ever
 *shrink* the discard set, preserving safety under floating point (DESIGN §9.4).
 """
@@ -122,9 +132,23 @@ def make_dual_state(X, y, beta, lam, lam_max_val) -> DualState:
 # EDPP geometry (Theorems 7 & 15)
 # ---------------------------------------------------------------------------
 
+def _is_batched(y) -> bool:
+    """Leading batch axis on the query operand (y or θ is (B, n))."""
+    return jnp.ndim(y) == 2
+
+
+def _col(s) -> jax.Array:
+    """Per-query scalar(s) → broadcastable column: (B,) → (B, 1), () → (1,)."""
+    return jnp.asarray(s)[..., None]
+
+
 def v2_perp(y: jax.Array, lam_next, state: DualState) -> jax.Array:
     """v₂⊥(λ, λ₀) of eq. (19): component of v₂ orthogonal to the ray v₁."""
     v1 = state.v1
+    if _is_batched(y):
+        v2 = y / _col(lam_next) - state.theta        # eq. (18), (B, n)
+        denom = jnp.sum(jnp.square(v1), axis=-1) + 1e-30
+        return v2 - _col(jnp.sum(v1 * v2, axis=-1) / denom) * v1
     v2 = y / lam_next - state.theta                  # eq. (18)
     denom = jnp.sum(jnp.square(v1)) + 1e-30
     return v2 - (jnp.dot(v1, v2) / denom) * v1
@@ -136,7 +160,11 @@ def v2_perp(y: jax.Array, lam_next, state: DualState) -> jax.Array:
 
 class SphereTest(NamedTuple):
     """A safe sphere B(centre, rho) ∋ θ*(λ): discard i iff
-    |x_iᵀ·centre| + rho·‖x_i‖ < 1 (up to the eps safety margin)."""
+    |x_iᵀ·centre| + rho·‖x_i‖ < 1 (up to the eps safety margin).
+
+    Batched: centre (B, n) and rho (B,) hold B per-query spheres — the B
+    tests still share one streaming pass over X (see core.engine).
+    """
 
     centre: jax.Array
     rho: jax.Array
@@ -144,19 +172,23 @@ class SphereTest(NamedTuple):
 
 def dpp_sphere(y, lam_next, state: DualState) -> SphereTest:
     """DPP (Theorem 3): B(θ*(λ₀), |1/λ − 1/λ₀|·‖y‖)."""
-    rho = jnp.abs(1.0 / lam_next - 1.0 / state.lam) * jnp.linalg.norm(y)
+    rho = jnp.abs(1.0 / jnp.asarray(lam_next) - 1.0 / state.lam) \
+        * jnp.linalg.norm(y, axis=-1)
     return SphereTest(centre=state.theta, rho=rho)
 
 
 def imp1_sphere(y, lam_next, state: DualState) -> SphereTest:
     """Improvement 1 (Theorem 11): B(θ*(λ₀), ‖v₂⊥‖)."""
     vp = v2_perp(y, lam_next, state)
-    return SphereTest(centre=state.theta, rho=jnp.linalg.norm(vp))
+    return SphereTest(centre=state.theta, rho=jnp.linalg.norm(vp, axis=-1))
 
 
 def imp2_sphere(y, lam_next, state: DualState) -> SphereTest:
     """Improvement 2 (Theorem 14): half-radius ball at shifted centre."""
-    d = 0.5 * (1.0 / lam_next - 1.0 / state.lam)
+    d = 0.5 * (1.0 / jnp.asarray(lam_next) - 1.0 / state.lam)
+    if _is_batched(y):
+        return SphereTest(centre=state.theta + _col(d) * y,
+                          rho=jnp.abs(d) * jnp.linalg.norm(y, axis=-1))
     return SphereTest(centre=state.theta + d * y,
                       rho=jnp.abs(d) * jnp.linalg.norm(y))
 
@@ -165,7 +197,7 @@ def edpp_sphere(y, lam_next, state: DualState) -> SphereTest:
     """EDPP (Theorem 16 / Corollary 17): B(θ*(λ₀) + ½v₂⊥, ½‖v₂⊥‖)."""
     vp = v2_perp(y, lam_next, state)
     return SphereTest(centre=state.theta + 0.5 * vp,
-                      rho=0.5 * jnp.linalg.norm(vp))
+                      rho=0.5 * jnp.linalg.norm(vp, axis=-1))
 
 
 def seq_safe_sphere(y, lam_next, state: DualState) -> SphereTest:
@@ -175,18 +207,19 @@ def seq_safe_sphere(y, lam_next, state: DualState) -> SphereTest:
     the recursive-SAFE construction (El Ghaoui et al.) instantiated with the
     previous exact dual point.
     """
-    centre = y / lam_next
+    centre = y / _col(lam_next) if _is_batched(y) else y / lam_next
     return SphereTest(centre=centre,
-                      rho=jnp.linalg.norm(centre - state.theta))
+                      rho=jnp.linalg.norm(centre - state.theta, axis=-1))
 
 
 def safe_sphere(y, lam_next, lam_max_val) -> SphereTest:
     """Basic SAFE / ST1 (eq. 15) normalised to the unit test: dividing
     |x_iᵀy| < λ − ‖x_i‖‖y‖(λ_max − λ)/λ_max through by λ gives the sphere
     B(y/λ, ‖y‖(λ_max − λ)/(λ_max·λ))."""
-    rho = jnp.linalg.norm(y) * (lam_max_val - lam_next) / (
+    rho = jnp.linalg.norm(y, axis=-1) * (lam_max_val - lam_next) / (
         lam_max_val * lam_next)
-    return SphereTest(centre=y / lam_next, rho=rho)
+    centre = y / _col(lam_next) if _is_batched(y) else y / lam_next
+    return SphereTest(centre=centre, rho=rho)
 
 
 def gap_sphere(y, lam_next, state: DualState, sup_corr=None) -> SphereTest:
@@ -201,6 +234,19 @@ def gap_sphere(y, lam_next, state: DualState, sup_corr=None) -> SphereTest:
     floating point (θ_c = θ₀/max(1, sup_corr)); pass the value cached from
     the screening matvec, or None to trust θ₀'s feasibility.
     """
+    if _is_batched(y):
+        s = (jnp.ones(y.shape[:1], y.dtype) if sup_corr is None
+             else jnp.maximum(1.0, sup_corr))
+        centre = state.theta / _col(s)
+        resid = state.theta * _col(state.lam)        # y − Xβ*(λ₀)
+        lam_next = jnp.asarray(lam_next)
+        primal = 0.5 * jnp.sum(jnp.square(resid), axis=-1) \
+            + lam_next * state.beta_l1
+        dual = 0.5 * jnp.sum(jnp.square(y), axis=-1) \
+            - 0.5 * lam_next * lam_next * jnp.sum(
+                jnp.square(centre - y / _col(lam_next)), axis=-1)
+        gap = jnp.maximum(primal - dual, 0.0)
+        return SphereTest(centre=centre, rho=jnp.sqrt(2.0 * gap) / lam_next)
     s = 1.0 if sup_corr is None else jnp.maximum(1.0, sup_corr)
     centre = state.theta / s
     resid = state.theta * state.lam                  # y − Xβ*(λ₀)
@@ -229,7 +275,12 @@ def make_sphere(rule: str, y, lam_next, state: DualState) -> SphereTest:
 
 def sphere_mask(X, test: SphereTest, eps: float = EPS_DEFAULT):
     """Pure-jnp oracle for a SphereTest: the fused-score form
-    |x_iᵀc| + ρ‖x_i‖ < 1 − eps, bit-matching kernels/ref.edpp_screen_ref."""
+    |x_iᵀc| + ρ‖x_i‖ < 1 − eps, bit-matching kernels/ref.edpp_screen_ref.
+    Batched tests (centre (B, n), rho (B,)) give a (B, p) mask."""
+    if _is_batched(test.centre):
+        scores = jnp.abs(test.centre @ X) \
+            + _col(test.rho) * jnp.linalg.norm(X, axis=0)
+        return scores < 1.0 - _col(jnp.asarray(eps))
     scores = jnp.abs(X.T @ test.centre) + test.rho * jnp.linalg.norm(X, axis=0)
     return scores < 1.0 - eps
 
@@ -279,6 +330,14 @@ def gap_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
     """GAP-safe sphere rule (see gap_sphere). One matvec Xᵀθ₀ serves both
     the feasibility rescale ‖Xᵀθ₀‖∞ and the scores — the engine fuses this
     into a single HBM pass; this oracle mirrors the arithmetic exactly."""
+    if _is_batched(y):
+        dot = state.theta @ X                        # (B, p)
+        sup_corr = jnp.max(jnp.abs(dot), axis=-1)
+        test = gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+        s = jnp.maximum(1.0, sup_corr)
+        scores = jnp.abs(dot) / _col(s) \
+            + _col(test.rho) * jnp.linalg.norm(X, axis=0)
+        return scores < 1.0 - eps
     dot = X.T @ state.theta
     sup_corr = jnp.max(jnp.abs(dot))
     test = gap_sphere(y, lam_next, state, sup_corr=sup_corr)
@@ -294,6 +353,10 @@ def strong_mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
     May discard active features — callers MUST run the KKT violation loop
     (see path.py). Basic variant: state at λ_max gives |x_iᵀy| < 2λ − λ_max.
     """
+    if _is_batched(y):
+        resid_corr = jnp.abs((state.theta * _col(state.lam)) @ X)
+        return resid_corr < _col(
+            2.0 * jnp.asarray(lam_next) - state.lam - eps)
     resid_corr = jnp.abs(X.T @ (state.theta * state.lam))
     return resid_corr < 2.0 * lam_next - state.lam - eps
 
@@ -303,8 +366,20 @@ def _sup_over_dome(a_scores, a_gdot, a_norms, c, rho, ghat, b):
 
     a_scores = aᵀc, a_gdot = aᵀĝ, a_norms = ‖a‖ (vectorised over features).
     Closed form: decompose a along ĝ; the cap constraint clips the sphere
-    maximiser at t_b = (b − ĝᵀc)/ρ.
+    maximiser at t_b = (b − ĝᵀc)/ρ. Query-batched inputs (a_scores/a_gdot
+    (B, p), c/ghat (B, n), rho/b (B,)) give (B, p) sups.
     """
+    if _is_batched(c):
+        t_b = jnp.clip(
+            (b - jnp.sum(ghat * c, axis=-1)) / (rho + 1e-30), -1.0, 1.0)
+        t_star = a_gdot / (a_norms + 1e-30)
+        a_perp = jnp.sqrt(jnp.maximum(
+            jnp.square(a_norms) - jnp.square(a_gdot), 0.0))
+        unclipped = a_scores + _col(rho) * a_norms
+        clipped = a_scores + _col(rho) * (
+            a_gdot * _col(t_b)
+            + a_perp * _col(jnp.sqrt(jnp.maximum(1.0 - t_b * t_b, 0.0))))
+        return jnp.where(t_star <= _col(t_b), unclipped, clipped)
     t_b = jnp.clip((b - jnp.dot(ghat, c)) / (rho + 1e-30), -1.0, 1.0)
     t_star = a_gdot / (a_norms + 1e-30)          # unconstrained maximiser
     a_perp = jnp.sqrt(jnp.maximum(jnp.square(a_norms) - jnp.square(a_gdot), 0.0))
@@ -336,7 +411,24 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
 
     The paper notes DOME assumes unit-norm features and y; this closed form
     does not need that, but benchmarks normalise for parity (Fig. 2).
+    Batched: y (B, n), lam_next/lam_max_val (B,) → (B, p) mask.
     """
+    if _is_batched(y):
+        corr = y @ X                                   # (B, p)
+        istar = jnp.argmax(jnp.abs(corr), axis=-1)
+        g = _col(jnp.sign(jnp.take_along_axis(
+            corr, istar[:, None], axis=-1)[:, 0])) * X[:, istar].T
+        gnorm = jnp.linalg.norm(g, axis=-1) + 1e-30
+        ghat = g / _col(gnorm)
+        b = 1.0 / gnorm
+        c = y / _col(jnp.asarray(lam_next))
+        rho = jnp.linalg.norm(y, axis=-1) * (
+            1.0 / jnp.asarray(lam_next) - 1.0 / jnp.asarray(lam_max_val))
+        scores_c = c @ X
+        gdot = ghat @ X
+        col_norms = jnp.linalg.norm(X, axis=0)
+        return dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) \
+            < 1.0 - eps
     corr = X.T @ y
     istar = jnp.argmax(jnp.abs(corr))
     g = jnp.sign(corr[istar]) * X[:, istar]
@@ -358,7 +450,12 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
 
 def kkt_violations(X, y, beta, lam, discarded, tol: float = 1e-4):
     """Features whose KKT condition |x_iᵀr| ≤ λ is violated among the
-    discarded set — the strong rule's correctness loop (paper §1)."""
+    discarded set — the strong rule's correctness loop (paper §1).
+    Batched: y/beta (B, ·), lam (B,) → (B, p) violation flags."""
+    if _is_batched(y):
+        r = y - beta @ X.T
+        viol = jnp.abs(r @ X) > _col(lam) * (1.0 + tol)
+        return jnp.logical_and(viol, discarded)
     r = y - X @ beta
     viol = jnp.abs(X.T @ r) > lam * (1.0 + tol)
     return jnp.logical_and(viol, discarded)

@@ -52,6 +52,11 @@ from .lasso import gap_from_residual, soft_threshold, top_eigenpair
 
 
 class SolveResult(NamedTuple):
+    """Result of one reduced solve. Batched solves return the same tuple
+    with a leading batch axis on beta (B, b) and per-query gap / iters /
+    converged (B,) — gap_checks stays scalar (checks are shared: one fused
+    gap pass evaluates all B certificates)."""
+
     beta: jax.Array
     gap: jax.Array        # final duality gap
     iters: jax.Array      # inner iterations (epochs/sweeps for cd) run
@@ -235,6 +240,179 @@ def _cd_gram_solve(backend, X, y, lam, beta0, tol, max_epochs: int,
     return SolveResult(beta, gap, k, gap <= tol * scale, checks)
 
 
+# ---------------------------------------------------------------------------
+# Batched strategy bodies: B queries against one reduced buffer Xr. The
+# while_loop carries per-query convergence masks — a converged query's
+# (β, z) become FIXED POINTS (further batched iterations are identity on
+# them), its iteration counter stops, and the loop exits when every query
+# has converged. ``valid`` (B, b) ∈ {0, 1} pins the columns each query
+# screened out (the buffer holds the UNION of survivors across the batch),
+# so every query solves exactly its own reduced problem.
+# ---------------------------------------------------------------------------
+
+def _gap_from_residual_batched(r, dot, beta, lam, y):
+    """Per-query duality gaps (B,) from batched residuals r (B, n) and
+    correlations dot (B, b) — same arithmetic as lasso.gap_from_residual
+    per row, one fused evaluation for the batch."""
+    corr = jnp.max(jnp.abs(dot), axis=-1)                     # (B,)
+    s = jnp.minimum(1.0, lam / (corr + 1e-30))
+    return (0.5 * jnp.sum(jnp.square(r), axis=-1)
+            + lam * jnp.sum(jnp.abs(beta), axis=-1)
+            - 0.5 * jnp.sum(jnp.square(y), axis=-1)
+            + 0.5 * jnp.sum(jnp.square(s[:, None] * r - y), axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_iter", "cadence"))
+def _fista_solve_batched(backend, X, Y, lam, beta0, valid, lipschitz, tol,
+                         max_iter: int, cadence: int) -> SolveResult:
+    """Batched FISTA: B queries share every pass over X (forward fits and
+    the fused ``fista_step`` gradient+prox+momentum kernel both carry the
+    batch axis), per-query λ, per-query convergence freezing."""
+    dtype = X.dtype
+    step_op = _fista_step_op(backend)
+    L = jnp.maximum(lipschitz, 1e-12)                 # shared: same buffer
+    step = 1.0 / L
+    scale = 0.5 * jnp.sum(jnp.square(Y), axis=-1) + 1e-30     # (B,)
+
+    def gap_of(beta):
+        r = Y - beta @ X.T
+        return _gap_from_residual_batched(r, r @ X, beta, lam, Y)
+
+    def body(state):
+        beta, z, t, k, _, conv, iters, checks = state
+        frozen = conv[:, None]
+
+        def one_step(carry, _):
+            beta, z, t = carry
+            rz = z @ X.T - Y
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            mom = (t - 1.0) / t_new
+            beta_new, z_new = step_op(X, rz, z, beta, step, lam, mom)
+            beta_new = (beta_new * valid).astype(dtype)
+            z_new = (z_new * valid).astype(dtype)
+            # converged queries are fixed points of further iterations
+            beta_new = jnp.where(frozen, beta, beta_new)
+            z_new = jnp.where(frozen, z, z_new)
+            return (beta_new, z_new, t_new), None
+
+        (beta, z, t), _ = jax.lax.scan(one_step, (beta, z, t), None,
+                                       length=cadence)
+        iters = iters + jnp.where(conv, 0, cadence)
+        gap = gap_of(beta)
+        conv = jnp.logical_or(conv, gap <= tol * scale)
+        return beta, z, t, k + cadence, gap, conv, iters, checks + 1
+
+    def cond(state):
+        _, _, _, k, _, conv, _, _ = state
+        return jnp.logical_and(k < max_iter, jnp.any(~conv))
+
+    t0 = jnp.asarray(1.0, dtype=dtype)
+    gap0 = gap_of(beta0)
+    conv0 = gap0 <= tol * scale
+    iters0 = jnp.zeros(Y.shape[:1], jnp.int32)
+    state = (beta0, beta0, t0, jnp.asarray(0), gap0, conv0, iters0,
+             jnp.asarray(1))
+    beta, _, _, _, gap, conv, iters, checks = jax.lax.while_loop(
+        cond, body, state)
+    return SolveResult(beta, gap, iters, conv, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("max_epochs", "cadence"))
+def _cd_solve_batched(X, Y, lam, beta0, valid, tol, max_epochs: int,
+                      cadence: int) -> SolveResult:
+    """Batched cyclic CD on matvecs: each coordinate update touches x_j
+    once for ALL B residual rows; convergence freezing at epoch-block
+    granularity (frozen queries' updates are discarded)."""
+    p = X.shape[1]
+    sqnorms = jnp.sum(jnp.square(X), axis=0)
+    scale = 0.5 * jnp.sum(jnp.square(Y), axis=-1) + 1e-30
+
+    def gap_of(beta):
+        r = Y - beta @ X.T
+        return _gap_from_residual_batched(r, r @ X, beta, lam, Y)
+
+    def coord(j, carry):
+        beta, r = carry
+        xj = X[:, j]
+        bj = beta[:, j]
+        nj = sqnorms[j]
+        rho = r @ xj + nj * bj                            # (B,)
+        bj_new = jnp.where(
+            nj > 0, soft_threshold(rho, lam) / jnp.maximum(nj, 1e-30), 0.0
+        ) * valid[:, j]
+        r = r + xj[None, :] * (bj - bj_new)[:, None]
+        return beta.at[:, j].set(bj_new), r
+
+    def body(state):
+        beta, r, k, _, conv, iters, checks = state
+
+        def epoch(_, carry):
+            return jax.lax.fori_loop(0, p, coord, carry)
+
+        beta_new, r_new = jax.lax.fori_loop(0, cadence, epoch, (beta, r))
+        frozen = conv[:, None]
+        beta_new = jnp.where(frozen, beta, beta_new)
+        r_new = jnp.where(frozen, r, r_new)
+        iters = iters + jnp.where(conv, 0, cadence)
+        gap = gap_of(beta_new)
+        conv = jnp.logical_or(conv, gap <= tol * scale)
+        return beta_new, r_new, k + cadence, gap, conv, iters, checks + 1
+
+    def cond(state):
+        _, _, k, _, conv, _, _ = state
+        return jnp.logical_and(k < max_epochs, jnp.any(~conv))
+
+    r0 = Y - beta0 @ X.T
+    gap0 = gap_of(beta0)
+    conv0 = gap0 <= tol * scale
+    iters0 = jnp.zeros(Y.shape[:1], jnp.int32)
+    state = (beta0, r0, jnp.asarray(0), gap0, conv0, iters0, jnp.asarray(1))
+    beta, _, _, gap, conv, iters, checks = jax.lax.while_loop(
+        cond, body, state)
+    return SolveResult(beta, gap, iters, conv, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_epochs",
+                                             "cadence"))
+def _cd_gram_solve_batched(backend, X, Y, lam, beta0, valid, tol,
+                           max_epochs: int, cadence: int) -> SolveResult:
+    """Batched Gram CD: ONE shared G = XᵀX (the dictionary Gram of the
+    union bucket, built with a single pass over X) serves all B coordinate
+    systems; per-query c = Xᵀy_b, λ_b and validity masks ride through the
+    batched ``cd_gram_sweep`` kernel."""
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+    Xa = X.astype(acc)
+    G = Xa.T @ Xa
+    C = Y.astype(acc) @ Xa                                    # (B, b)
+    sweep_op = _cd_gram_op(backend)
+    scale = 0.5 * jnp.sum(jnp.square(Y), axis=-1) + 1e-30
+
+    def gap_of(beta):
+        r = Y - beta @ X.T
+        return _gap_from_residual_batched(r, r @ X, beta, lam, Y)
+
+    def body(state):
+        beta, k, _, conv, iters, checks = state
+        beta_new = sweep_op(G, C, beta.astype(acc), lam, sweeps=cadence,
+                            valid=valid).astype(X.dtype)
+        beta_new = jnp.where(conv[:, None], beta, beta_new)
+        iters = iters + jnp.where(conv, 0, cadence)
+        gap = gap_of(beta_new)
+        conv = jnp.logical_or(conv, gap <= tol * scale)
+        return beta_new, k + cadence, gap, conv, iters, checks + 1
+
+    def cond(state):
+        _, k, _, conv, _, _ = state
+        return jnp.logical_and(k < max_epochs, jnp.any(~conv))
+
+    gap0 = gap_of(beta0)
+    conv0 = gap0 <= tol * scale
+    iters0 = jnp.zeros(Y.shape[:1], jnp.int32)
+    state = (beta0, jnp.asarray(0), gap0, conv0, iters0, jnp.asarray(1))
+    beta, _, gap, conv, iters, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, iters, conv, checks)
+
+
 @functools.partial(jax.jit, static_argnames=("m", "max_iter", "cadence"))
 def _group_fista_solve(X, y, lam, m: int, beta0, lipschitz, tol,
                        max_iter: int, cadence: int) -> SolveResult:
@@ -304,17 +482,53 @@ def _group_fista_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
     return res, {"gram": False}
 
 
+def _fista_strategy_batched(eng: "SolverEngine", Xr, lam, beta0, valid,
+                            m: int):
+    res = _fista_solve_batched(eng.backend, Xr, eng.y, lam, beta0, valid,
+                               eng.lipschitz(Xr), eng.tol, eng.max_iter,
+                               eng.gap_check_cadence)
+    return res, {"gram": False}
+
+
+def _cd_strategy_batched(eng: "SolverEngine", Xr, lam, beta0, valid, m: int):
+    n, b = Xr.shape
+    max_epochs = eng.max_iter // 10 + 1
+    if b <= min(n, ops.GRAM_BUCKET_MAX):
+        res = _cd_gram_solve_batched(eng.backend, Xr, eng.y, lam, beta0,
+                                     valid, eng.tol, max_epochs,
+                                     eng.gap_check_cadence)
+        return res, {"gram": True}
+    res = _cd_solve_batched(Xr, eng.y, lam, beta0, valid, eng.tol,
+                            max_epochs, eng.gap_check_cadence)
+    return res, {"gram": False}
+
+
 SOLVERS: dict[str, Callable] = {
     "fista": _fista_strategy,
     "cd": _cd_strategy,
     "group_fista": _group_fista_strategy,
 }
 
+# Batched twins: `(engine, Xr, lam (B,), beta0 (B, b), valid (B, b), m) ->
+# (SolveResult, info)`. Strategies without an entry fall back to a
+# per-query Python loop in SolverEngine.solve_batched.
+BATCHED_SOLVERS: dict[str, Callable] = {
+    "fista": _fista_strategy_batched,
+    "cd": _cd_strategy_batched,
+}
 
-def register_solver(name: str, strategy: Callable) -> None:
+
+def register_solver(name: str, strategy: Callable,
+                    batched: Callable | None = None) -> None:
     """Add a solver strategy: `(engine, Xr, lam, beta0, m) -> (SolveResult,
-    {"gram": bool})`. Select it with ``PathConfig(solver=name)``."""
+    {"gram": bool})`. Select it with ``PathConfig(solver=name)``. Pass
+    ``batched`` to serve multi-query paths natively (see BATCHED_SOLVERS);
+    without it, batched solves loop the single-query strategy per query."""
     SOLVERS[name] = strategy
+    if batched is not None:
+        BATCHED_SOLVERS[name] = batched
+    else:
+        BATCHED_SOLVERS.pop(name, None)
 
 
 def available_solvers() -> tuple[str, ...]:
@@ -416,6 +630,99 @@ class SolverEngine:
             self.last_x_passes = float(it) + 2.0 * ck
         else:
             self.last_x_passes = 2.0 * it + 2.0 * ck
+        return res
+
+    def solve_batched(self, Xr, lam, beta0=None, valid=None,
+                      m: int = 1) -> SolveResult:
+        """Solve B reduced problems that share the bucket buffer Xr.
+
+        The engine must have been built with y of shape (B, n); ``lam`` is
+        the per-query λ (B,), ``valid`` (B, b) ∈ {0, 1} masks the columns
+        each query kept (the buffer holds the union of survivors across
+        the batch — see the batched path driver). Every pass over Xr
+        serves all B queries; converged queries freeze in place (their β
+        is untouched by further batched iterations). ``last_x_passes``
+        counts buffer passes per *batch* — divide by B for the amortised
+        per-query cost.
+        """
+        Xr = jnp.asarray(Xr)
+        if self.y.ndim != 2:
+            raise ValueError("solve_batched needs a batched engine "
+                             "(construct SolverEngine with y of shape (B, n))")
+        bsz = self.y.shape[0]
+        lam = jnp.asarray(lam, Xr.dtype)
+        if beta0 is None:
+            beta0 = jnp.zeros((bsz, Xr.shape[1]), dtype=Xr.dtype)
+        if valid is None:
+            valid = jnp.ones((bsz, Xr.shape[1]), dtype=Xr.dtype)
+        n, b = Xr.shape
+
+        def _passes(it: int, ck: int, gram: bool) -> float:
+            # same per-solve formulas as solve(): Gram builds G once then
+            # sweeps in VMEM; matvec CD streams once per epoch; FISTA
+            # reads the buffer twice per iteration; each gap check adds 2.
+            if gram:
+                return 1.0 + it * (b / max(n, 1)) + 2.0 * ck
+            if self.solver == "cd":
+                return float(it) + 2.0 * ck
+            return 2.0 * it + 2.0 * ck
+
+        strategy = BATCHED_SOLVERS.get(self.solver)
+        if strategy is not None:
+            res, info = strategy(self, Xr, lam, beta0, valid, m)
+            self.last_gap_checks = int(res.gap_checks)
+            # Shared-pass accounting: one buffer pass serves the whole
+            # batch, and the loop runs until the LAST query converges.
+            self.last_x_passes = _passes(int(jnp.max(res.iters)),
+                                         self.last_gap_checks,
+                                         bool(info.get("gram", False)))
+        else:
+            # per-query fallback: loops the single-query strategy (custom
+            # registered solvers without a batched twin stay usable)
+            parts, checks, gram, passes = [], 0, False, 0.0
+            y_full = self.y
+            try:
+                for qb in range(bsz):
+                    self.y = y_full[qb]
+                    # zero the columns this query screened out: they become
+                    # solver fixed points, so the single-query strategy
+                    # solves exactly the query's OWN reduced problem (gap /
+                    # converged describe the returned β, matching the
+                    # native batched strategies' `valid` pinning)
+                    Xq = Xr * valid[qb][None, :]
+                    # the per-bucket Lipschitz cache must not leak between
+                    # differently-masked buffers: a cached eigenvector
+                    # supported only on another query's columns lies in
+                    # Xq's null space and warm power iteration would
+                    # return eig ≈ 0 (divergent step). Cold-start each
+                    # query instead.
+                    self._eig_cache.pop(Xq.shape[1], None)
+                    r, info_b = SOLVERS[self.solver](
+                        self, Xq, lam[qb], beta0[qb] * valid[qb], m)
+                    parts.append(r)
+                    checks += int(r.gap_checks)
+                    gram_b = bool(info_b.get("gram", False))
+                    gram = gram or gram_b
+                    # passes here are per-query, NOT shared: sum them
+                    passes += _passes(int(r.iters), int(r.gap_checks),
+                                      gram_b)
+            finally:
+                self.y = y_full
+            res = SolveResult(
+                beta=jnp.stack([r.beta for r in parts]),
+                gap=jnp.stack([r.gap for r in parts]),
+                iters=jnp.stack([jnp.asarray(r.iters) for r in parts]),
+                converged=jnp.stack([jnp.asarray(r.converged)
+                                     for r in parts]),
+                gap_checks=jnp.asarray(checks),
+            )
+            info = {"gram": gram}
+            self.last_gap_checks = checks
+            self.last_x_passes = passes
+        self.n_solves += 1
+        self.last_used_gram = bool(info.get("gram", False))
+        self.gram_solves += int(self.last_used_gram)
+        self.total_gap_checks += self.last_gap_checks
         return res
 
 

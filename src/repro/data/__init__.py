@@ -1,5 +1,7 @@
 from .pipeline import (  # noqa: F401
+    QueryStream,
     SyntheticLM,
+    design_matrix,
     device_batch,
     group_lasso_problem,
     lasso_problem,

@@ -16,6 +16,7 @@ Two sources:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import numpy as np
@@ -60,6 +61,29 @@ class SyntheticLM:
         raise ValueError(self.frontend)
 
 
+def design_matrix(n: int, p: int, *, corr: float = 0.0, rng=None,
+                  seed: int = 0) -> np.ndarray:
+    """The paper's §4.1.2 design matrix (eq. 74): i.i.d. standard Gaussian
+    columns, optionally AR(1)-correlated (pairwise corr^{|i−j|}).
+
+    Pass ``rng`` to keep drawing from an existing generator (exactly the
+    draws ``lasso_problem`` always made), or ``seed`` for a standalone
+    deterministic dictionary (what :class:`QueryStream` fixes once).
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    if corr > 0:
+        # AR(1): x_j = corr·x_{j-1}_part + sqrt(1-corr²)·fresh ⇒ 0.5^{|i-j|}
+        base = rng.standard_normal((n, p))
+        X = np.empty((n, p))
+        X[:, 0] = base[:, 0]
+        a = np.sqrt(1.0 - corr * corr)
+        for j in range(1, p):
+            X[:, j] = corr * X[:, j - 1] + a * base[:, j]
+        return X
+    return rng.standard_normal((n, p))
+
+
 def lasso_problem(n: int, p: int, *, nnz: int, corr: float = 0.0,
                   sigma: float = 0.1, seed: int = 0, dtype=np.float64):
     """The paper's synthetic generator (eq. 74).
@@ -69,21 +93,70 @@ def lasso_problem(n: int, p: int, *, nnz: int, corr: float = 0.0,
     Returns (X, y, beta_star).
     """
     rng = np.random.default_rng(seed)
-    if corr > 0:
-        # AR(1): x_j = corr·x_{j-1}_part + sqrt(1-corr²)·fresh ⇒ 0.5^{|i-j|}
-        base = rng.standard_normal((n, p))
-        X = np.empty((n, p))
-        X[:, 0] = base[:, 0]
-        a = np.sqrt(1.0 - corr * corr)
-        for j in range(1, p):
-            X[:, j] = corr * X[:, j - 1] + a * base[:, j]
-    else:
-        X = rng.standard_normal((n, p))
+    X = design_matrix(n, p, corr=corr, rng=rng)
     beta = np.zeros(p)
     idx = rng.choice(p, nnz, replace=False)
     beta[idx] = rng.uniform(-1.0, 1.0, nnz)
     y = X @ beta + sigma * rng.standard_normal(n)
     return X.astype(dtype), y.astype(dtype), beta
+
+
+@functools.lru_cache(maxsize=8)
+def _cached_design(n: int, p: int, corr: float, seed: int) -> np.ndarray:
+    """The dictionary is a pure function of its parameters — generate it
+    once per (n, p, corr, seed) instead of per host_batch call (the AR(1)
+    construction is an O(p) Python loop). Marked read-only: every external
+    consumer goes through QueryStream.dictionary(), which copies."""
+    X = design_matrix(n, p, corr=corr, seed=seed)
+    X.setflags(write=False)
+    return X
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryStream:
+    """Deterministic stream of Lasso queries against ONE fixed dictionary.
+
+    The serving regime (docs/serving.md): the dictionary X is a pure
+    function of ``(n, p, corr, seed)`` — fitted once, shared by every
+    consumer — while the response vectors stream in batches that are a pure
+    function of ``(seed, step, shard)``, reusing the paper's §4.1.2 recipe
+    per query (sparse ground-truth β, y = Xβ* + σ·ε). Like
+    :class:`SyntheticLM`, determinism doubles as failure mitigation: a
+    re-spawned worker regenerates exactly the lost worker's queries, and
+    the batched-path benches replay identical streams across A/B arms.
+    """
+
+    n: int
+    p: int
+    batch: int                    # queries per (step, shard) batch
+    nnz: int = 10
+    corr: float = 0.0
+    sigma: float = 0.1
+    seed: int = 0
+
+    def dictionary(self, dtype=np.float64) -> np.ndarray:
+        """The fixed design matrix X (n, p) — same for every step/shard.
+        Cached per (n, p, corr, seed); ``astype`` hands back a fresh copy."""
+        return _cached_design(self.n, self.p, self.corr,
+                              self.seed).astype(dtype)
+
+    def host_batch(self, step: int, shard: int = 0, n_shards: int = 1,
+                   dtype=np.float64) -> dict:
+        """Batch of queries for (step, host shard): ``{"y": (b, n),
+        "beta": (b, p)}`` with b = batch // n_shards. Each query's draws
+        are keyed by (seed, step, shard, query) so any slice of the stream
+        is reproducible in isolation."""
+        b = self.batch // n_shards
+        X = _cached_design(self.n, self.p, self.corr, self.seed)
+        ys = np.empty((b, self.n))
+        betas = np.zeros((b, self.p))
+        for q in range(b):
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, shard, q]))
+            idx = rng.choice(self.p, self.nnz, replace=False)
+            betas[q, idx] = rng.uniform(-1.0, 1.0, self.nnz)
+            ys[q] = X @ betas[q] + self.sigma * rng.standard_normal(self.n)
+        return {"y": ys.astype(dtype), "beta": betas.astype(dtype)}
 
 
 def group_lasso_problem(n: int, p: int, m: int, *, active_groups: int,

@@ -9,18 +9,29 @@ matvec, the column sum-of-squares, and the score combine are fused into that
 single pass (a naive jnp implementation reads X twice — once for Xᵀo, once for
 the norms — and materialises two p-vectors in between).
 
+Batch axis
+----------
+``o`` may be a (B, n) block of B query centres (one fitted dictionary, B
+response vectors). The kernel then computes all B score rows in the SAME
+single pass over X: the per-tile dot grows from (1, bn)×(bn, bp) to
+(Bp, bn)×(bn, bp) — still one MXU contraction — so HBM traffic over X is
+amortised 1/B per query. ρ becomes per-query (scalar-or-(B,)). B = 1 takes
+the exact original code shape ((1, bn) centre block), so single-query
+results are unchanged.
+
 TPU mapping
 -----------
 * Grid = (p_tiles, n_tiles); the sample axis n is the *minor* grid dim, so the
-  (bp,)-shaped accumulators for a feature tile stay resident in VMEM while we
-  stream X tile-by-tile down the sample axis.
+  (Bp, bp)-shaped accumulators for a feature tile stay resident in VMEM while
+  we stream X tile-by-tile down the sample axis.
 * X tile (bn, bp) with bp a multiple of 128 (lane dim) and bn a multiple of 8
-  (sublane dim); the (1, bn)×(bn, bp) dot hits the MXU, the square/accumulate
-  runs on the VPU.
+  (sublane dim); the (Bp, bn)×(bn, bp) dot hits the MXU, the
+  square/accumulate runs on the VPU. Batched centres are padded to a sublane
+  multiple (Bp = 8⌈B/8⌉ for B > 1).
 * Accumulation is f32 regardless of input dtype (bf16 X supported).
 
-VMEM budget (defaults bn=512, bp=512, f32): X tile 1 MiB + o tile 2 KiB +
-2 accumulators 4 KiB ≈ 1 MiB ≪ 16 MiB/core.
+VMEM budget (defaults bn=512, bp=512, f32, B=64): X tile 1 MiB + o tile
+128 KiB + accumulators 3·128 KiB ≈ 1.5 MiB ≪ 16 MiB/core.
 """
 
 from __future__ import annotations
@@ -30,6 +41,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _centre_block(centre: jax.Array, n_pad: int):
+    """Lift a (n,)|(B, n) centre to a sublane-padded (Bp, n+n_pad) block.
+
+    Returns (block, B, squeeze): B is the true batch size, squeeze marks a
+    rank-1 input whose outputs must drop the batch axis again.
+    """
+    squeeze = centre.ndim == 1
+    c2 = centre[None, :] if squeeze else centre
+    b = c2.shape[0]
+    b_pad = 0 if b == 1 else -b % 8           # sublane multiple for B > 1
+    block = jnp.pad(c2, ((0, b_pad), (0, n_pad)))
+    return block, b, squeeze
 
 
 def _screen_kernel(o_ref, rho_ref, x_ref, dot_ref, ss_ref, scores_ref, *,
@@ -42,19 +67,19 @@ def _screen_kernel(o_ref, rho_ref, x_ref, dot_ref, ss_ref, scores_ref, *,
         ss_ref[...] = jnp.zeros_like(ss_ref)
 
     x = x_ref[...]                                    # (bn, bp)
-    o = o_ref[...].astype(jnp.float32)                # (1, bn)
+    o = o_ref[...].astype(jnp.float32)                # (Bp, bn)
     x32 = x.astype(jnp.float32)
-    # MXU: (1, bn) @ (bn, bp) -> (1, bp)
+    # MXU: (Bp, bn) @ (bn, bp) -> (Bp, bp)
     dot_ref[...] += jax.lax.dot_general(
         o, x32, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    # VPU: running column sum-of-squares
+    # VPU: running column sum-of-squares (query-independent: one row)
     ss_ref[...] += jnp.sum(x32 * x32, axis=0, keepdims=True)
 
     @pl.when(j == n_tiles - 1)
     def _finish():
-        rho = rho_ref[0]
+        rho = rho_ref[...][:, None]                   # (Bp, 1)
         scores_ref[...] = jnp.abs(dot_ref[...]) + rho * jnp.sqrt(ss_ref[...])
 
 
@@ -71,14 +96,18 @@ def edpp_screen_scores(
     """Fused scores[j] = |x_jᵀ·centre| + rho·‖x_j‖ and sumsq[j] = ‖x_j‖².
 
     Inputs of any (N, p); zero-padded internally to tile multiples (zero rows
-    and columns are exact no-ops for both accumulators).
+    and columns are exact no-ops for both accumulators). ``centre`` may be
+    (n,) or (B, n) — the batched call still reads X exactly once; ``rho`` is
+    then scalar-or-(B,). ``sumsq`` is always (p,) (dictionary geometry).
     """
     n, p = X.shape
     n_pad = -n % bn
     p_pad = -p % bp
     Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
-    op = jnp.pad(centre, (0, n_pad)).reshape(1, -1)
-    rho_arr = jnp.asarray([rho], dtype=jnp.float32)
+    op, b, squeeze = _centre_block(centre, n_pad)
+    bq = op.shape[0]
+    rho_arr = jnp.pad(
+        jnp.broadcast_to(jnp.asarray(rho, jnp.float32), (b,)), (0, bq - b))
 
     n_tiles = (n + n_pad) // bn
     p_tiles = (p + p_pad) // bp
@@ -87,23 +116,24 @@ def edpp_screen_scores(
         functools.partial(_screen_kernel, n_tiles=n_tiles),
         grid=(p_tiles, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),       # centre
-            pl.BlockSpec(memory_space=pl.ANY),                 # rho (scalar)
+            pl.BlockSpec((bq, bn), lambda i, j: (0, j)),       # centres
+            pl.BlockSpec(memory_space=pl.ANY),                 # rho (Bp,)
             pl.BlockSpec((bn, bp), lambda i, j: (j, i)),       # X tile
         ],
         out_specs=[
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # dot acc
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # dot acc
             pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # sumsq acc
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # scores
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # scores
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((bq, p + p_pad), jnp.float32),
             jax.ShapeDtypeStruct((1, p + p_pad), jnp.float32),
-            jax.ShapeDtypeStruct((1, p + p_pad), jnp.float32),
-            jax.ShapeDtypeStruct((1, p + p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((bq, p + p_pad), jnp.float32),
         ],
         interpret=interpret,
     )(op, rho_arr, Xp)
-    return scores[0, :p], ss[0, :p]
+    scores = scores[:b, :p]
+    return (scores[0] if squeeze else scores), ss[0, :p]
 
 
 def _matvec_kernel(o_ref, x_ref, dot_ref, *, n_tiles: int):
@@ -131,12 +161,14 @@ def screen_matvec(
     interpret: bool = False,
 ) -> jax.Array:
     """dot[j] = x_jᵀ·centre — the per-step screening matvec when column norms
-    are cached across the λ-path (X is fixed along the path)."""
+    are cached across the λ-path (X is fixed along the path). ``centre`` may
+    be (B, n): one pass over X yields all B correlation rows (B, p)."""
     n, p = X.shape
     n_pad = -n % bn
     p_pad = -p % bp
     Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
-    op = jnp.pad(centre, (0, n_pad)).reshape(1, -1)
+    op, b, squeeze = _centre_block(centre, n_pad)
+    bq = op.shape[0]
     n_tiles = (n + n_pad) // bn
     p_tiles = (p + p_pad) // bp
 
@@ -144,11 +176,12 @@ def screen_matvec(
         functools.partial(_matvec_kernel, n_tiles=n_tiles),
         grid=(p_tiles, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bq, bn), lambda i, j: (0, j)),
             pl.BlockSpec((bn, bp), lambda i, j: (j, i)),
         ],
-        out_specs=pl.BlockSpec((1, bp), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, p + p_pad), jnp.float32),
+        out_specs=pl.BlockSpec((bq, bp), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((bq, p + p_pad), jnp.float32),
         interpret=interpret,
     )(op, Xp)
-    return dot[0, :p]
+    dot = dot[:b, :p]
+    return dot[0] if squeeze else dot

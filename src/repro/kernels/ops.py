@@ -16,6 +16,14 @@ sharing one contract (see docs/kernels.md):
 Backends: ``pallas`` (compiled Mosaic, TPU), ``interpret`` (the same kernel
 bodies on the Pallas interpreter — CI/CPU), ``jnp`` (the pure-jnp oracles of
 ref.py, also the GSPMD-friendly fallback). All accumulate in f32.
+
+Every op is **batch-polymorphic** over the query operands (see ref.py):
+``centre``/``r``/``z``/``beta`` may carry a leading batch axis (B, ·) with
+per-query scalars as (B,) vectors — one fitted dictionary, B queries, ONE
+pass over X per call. ``sumsq`` stays (p,): dictionary geometry. This is
+the kernel-level contract the batched engines and ``lasso_path_batched``
+ride on (docs/serving.md); rank-1 inputs keep single-query arithmetic
+bit-for-bit.
 """
 
 from __future__ import annotations
@@ -109,6 +117,9 @@ def edpp_screen(X, centre, rho, eps: float = 1e-6, *, col_norms=None,
     it = INTERPRET if interpret is None else interpret
     if col_norms is not None:
         dot = screen_matvec(X, centre, interpret=it)
+        rho = jnp.asarray(rho)
+        if dot.ndim == 2:                 # batched: per-query rho column
+            rho = rho[..., None]
         scores = jnp.abs(dot) + rho * col_norms
         sumsq = jnp.square(col_norms)
     else:

@@ -7,6 +7,10 @@
 Unfused, this is 5 elementwise HBM round-trips over p-vectors; fused it is a
 single read of (z, g, beta_old) and a single write of (beta_new, z_new) —
 pure VPU work, trivially memory-bound, so fusion is the whole win.
+
+Batch axis: z/g/beta_old may be (B, p) blocks (B queries through one fused
+pass), with step/λ/mom each scalar-or-(B,). Rank-1 inputs keep the original
+single-query arithmetic.
 """
 
 from __future__ import annotations
@@ -19,7 +23,8 @@ from jax.experimental import pallas as pl
 
 
 def _prox_kernel(s_ref, z_ref, g_ref, b_ref, beta_ref, znew_ref):
-    step, lam, mom = s_ref[0], s_ref[1], s_ref[2]
+    s = s_ref[...]                                    # (3, Bp)
+    step, lam, mom = s[0][:, None], s[1][:, None], s[2][:, None]
     u = z_ref[...] - step * g_ref[...]
     t = step * lam
     beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
@@ -39,16 +44,23 @@ def prox_step(
     bp: int = 1024,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused FISTA update over p-vectors (any length; zero padded)."""
-    p = z.shape[0]
+    """Fused FISTA update over p-vectors (any length; zero padded).
+    z/g/beta_old may carry a leading batch axis (B, p); step/lam/mom are
+    then scalar-or-(B,) per-query parameters."""
+    squeeze = z.ndim == 1
+    z2 = z[None, :] if squeeze else z
+    g2 = g[None, :] if squeeze else g
+    bo2 = beta_old[None, :] if squeeze else beta_old
+    b, p = z2.shape
+    b_pad = 0 if b == 1 else -b % 8
+    bq = b + b_pad
     p_pad = -p % bp
-    zp = jnp.pad(z, (0, p_pad)).reshape(1, -1)
-    gp = jnp.pad(g, (0, p_pad)).reshape(1, -1)
-    bp_old = jnp.pad(beta_old, (0, p_pad)).reshape(1, -1)
+    zp = jnp.pad(z2, ((0, b_pad), (0, p_pad)))
+    gp = jnp.pad(g2, ((0, b_pad), (0, p_pad)))
+    bp_old = jnp.pad(bo2, ((0, b_pad), (0, p_pad)))
     scalars = jnp.stack([
-        jnp.asarray(step, z.dtype),
-        jnp.asarray(lam, z.dtype),
-        jnp.asarray(mom, z.dtype),
+        jnp.pad(jnp.broadcast_to(jnp.asarray(s, z.dtype), (b,)), (0, b_pad))
+        for s in (step, lam, mom)
     ])
     p_tiles = (p + p_pad) // bp
 
@@ -56,19 +68,23 @@ def prox_step(
         _prox_kernel,
         grid=(p_tiles,),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),          # scalars
-            pl.BlockSpec((1, bp), lambda i: (0, i)),
-            pl.BlockSpec((1, bp), lambda i: (0, i)),
-            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec(memory_space=pl.ANY),          # scalars (3, Bp)
+            pl.BlockSpec((bq, bp), lambda i: (0, i)),
+            pl.BlockSpec((bq, bp), lambda i: (0, i)),
+            pl.BlockSpec((bq, bp), lambda i: (0, i)),
         ],
         out_specs=[
-            pl.BlockSpec((1, bp), lambda i: (0, i)),
-            pl.BlockSpec((1, bp), lambda i: (0, i)),
+            pl.BlockSpec((bq, bp), lambda i: (0, i)),
+            pl.BlockSpec((bq, bp), lambda i: (0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
-            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
+            jax.ShapeDtypeStruct((bq, p + p_pad), z.dtype),
+            jax.ShapeDtypeStruct((bq, p + p_pad), z.dtype),
         ],
         interpret=interpret,
     )(scalars, zp, gp, bp_old)
-    return beta_new[0, :p], z_new[0, :p]
+    beta_new = beta_new[:b, :p]
+    z_new = z_new[:b, :p]
+    if squeeze:
+        return beta_new[0], z_new[0]
+    return beta_new, z_new

@@ -2,6 +2,18 @@
 
 These define the semantics; the kernels must match them to float tolerance
 across the shape/dtype sweep in tests/test_kernels.py.
+
+Batch axis
+----------
+Every query-side op is **batch-polymorphic**: the query operand (``centre``
+for the screens, ``r``/``z``/``beta`` for the solver steps) may carry a
+leading batch axis B, in which case the per-query parameters (``rho``,
+``step``, ``lam``, ``mom``) may each be a scalar (shared) or a ``(B,)``
+vector, and the outputs grow the same leading axis. X is never batched —
+one fitted dictionary serves all B queries, which is the whole point: a
+batched call reads X from HBM **once** for the entire batch. Rank-1 inputs
+take the exact pre-batch code paths, so single-query results are
+bit-identical to the unbatched implementation.
 """
 
 from __future__ import annotations
@@ -16,26 +28,41 @@ def _acc_dtype(X: jax.Array):
     return jnp.promote_types(X.dtype, jnp.float32)
 
 
+def _per_query(s, batch: int, dtype) -> jax.Array:
+    """Broadcast a scalar-or-(B,) per-query parameter to (B,) in dtype."""
+    return jnp.broadcast_to(jnp.asarray(s, dtype), (batch,))
+
+
 def edpp_screen_ref(X: jax.Array, centre: jax.Array, rho) -> tuple[jax.Array, jax.Array]:
     """Fused screening pass (EDPP/DPP family, Theorem 16 LHS+RHS combined).
 
     Returns (scores, sumsq) with
         scores[j] = |x_jᵀ·centre| + rho·‖x_j‖₂
         sumsq[j]  = ‖x_j‖₂²
-    Discard feature j iff scores[j] < 1 − eps.
+    Discard feature j iff scores[j] < 1 − eps. Batched: centre (B, n) and
+    rho scalar-or-(B,) give scores (B, p); sumsq stays (p,) (it is a
+    property of the dictionary, not the query).
     """
     acc = _acc_dtype(X)
     Xa = X.astype(acc)
     ca = centre.astype(acc)
-    dot = Xa.T @ ca
     sumsq = jnp.sum(jnp.square(Xa), axis=0)
+    if ca.ndim == 2:
+        dot = ca @ Xa                                 # (B, p)
+        rho_b = _per_query(rho, ca.shape[0], acc)
+        scores = jnp.abs(dot) + rho_b[:, None] * jnp.sqrt(sumsq)
+        return scores, sumsq
+    dot = Xa.T @ ca
     scores = jnp.abs(dot) + jnp.asarray(rho, acc) * jnp.sqrt(sumsq)
     return scores, sumsq
 
 
 def screen_matvec_ref(X: jax.Array, centre: jax.Array) -> jax.Array:
-    """Plain screening matvec: dot[j] = x_jᵀ·centre (norms cached by caller)."""
+    """Plain screening matvec: dot[j] = x_jᵀ·centre (norms cached by caller).
+    Batched: centre (B, n) → dot (B, p), one logical pass over X for all B."""
     acc = _acc_dtype(X)
+    if centre.ndim == 2:
+        return centre.astype(acc) @ X.astype(acc)
     return X.astype(acc).T @ centre.astype(acc)
 
 
@@ -56,7 +83,14 @@ def prox_step_ref(z: jax.Array, g: jax.Array, beta_old: jax.Array,
         u        = z − step·g
         beta_new = sign(u)·max(|u| − step·lam, 0)
         z_new    = beta_new + mom·(beta_new − beta_old)
+
+    Batched: z/g/beta_old (B, p) with step/lam/mom scalar-or-(B,).
     """
+    if z.ndim == 2:
+        acc = z.dtype
+        step = _per_query(step, z.shape[0], acc)[:, None]
+        lam = _per_query(lam, z.shape[0], acc)[:, None]
+        mom = _per_query(mom, z.shape[0], acc)[:, None]
     u = z - step * g
     t = step * lam
     beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
@@ -79,16 +113,24 @@ def fista_step_ref(X: jax.Array, r: jax.Array, z: jax.Array,
 
     Unfused, g round-trips to HBM as a p-vector and the prox re-reads
     (z, g, beta_old); fused, the gradient block never leaves VMEM.
+    Batched: r (B, n), z/beta_old (B, p), step/lam/mom scalar-or-(B,) —
+    the B gradients come out of the same single pass over X's columns.
     """
     acc = _acc_dtype(X)
-    g = X.astype(acc).T @ r.astype(acc)
+    if r.ndim == 2:
+        g = r.astype(acc) @ X.astype(acc)             # (B, p)
+    else:
+        g = X.astype(acc).T @ r.astype(acc)
+        step = jnp.asarray(step, acc)
+        lam = jnp.asarray(lam, acc)
+        mom = jnp.asarray(mom, acc)
     return prox_step_ref(z.astype(acc), g, beta_old.astype(acc),
-                         jnp.asarray(step, acc), jnp.asarray(lam, acc),
-                         jnp.asarray(mom, acc))
+                         step, lam, mom)
 
 
 def cd_gram_sweep_ref(G: jax.Array, c: jax.Array, beta: jax.Array, lam,
-                      sweeps: int = 1) -> jax.Array:
+                      sweeps: int = 1, valid: jax.Array | None = None
+                      ) -> jax.Array:
     """``sweeps`` cyclic coordinate-descent sweeps over the Gram system.
 
     G = XᵀX and c = Xᵀy are precomputed by the caller (one pass over the
@@ -100,8 +142,35 @@ def cd_gram_sweep_ref(G: jax.Array, c: jax.Array, beta: jax.Array, lam,
         q   += G_:,j·(β_j' − β_j)
 
     No pass over X at all — the n ≪ p regime's win once G is resident.
+    Batched: G stays (p, p) (shared dictionary Gram), c/beta grow to
+    (B, p), lam is scalar-or-(B,), and ``valid`` (B, p) ∈ {0, 1} pins each
+    query's screened-out columns at 0 so every query solves *its own*
+    reduced problem on the shared union bucket.
     """
     p = G.shape[0]
+    if beta.ndim == 2:
+        lam_b = _per_query(lam, beta.shape[0], beta.dtype)
+        q = beta @ G                                  # (B, p); G symmetric
+
+        def coord_b(i, carry):
+            beta, q = carry
+            j = i % p
+            gjj = G[j, j]
+            rho = c[:, j] - q[:, j] + gjj * beta[:, j]
+            bn = jnp.where(
+                gjj > 0,
+                jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lam_b, 0.0)
+                / jnp.maximum(gjj, 1e-30),
+                0.0,
+            )
+            if valid is not None:
+                bn = bn * valid[:, j]
+            q = q + G[:, j][None, :] * (bn - beta[:, j])[:, None]
+            return beta.at[:, j].set(bn), q
+
+        beta, _ = jax.lax.fori_loop(0, sweeps * p, coord_b, (beta, q))
+        return beta
+
     q = G @ beta
 
     def coord(i, carry):

@@ -6,7 +6,7 @@ Two kernels, mirroring the screening kernels' structure (edpp_screen.py):
     One fused FISTA iteration tail over column blocks: the gradient matvec
     g = Xᵀr, the soft-threshold and the momentum extrapolation in ONE
     streaming pass over X. Grid = (p_tiles, n_tiles) with the sample axis
-    minor so the (1, bp) gradient accumulator for a feature tile stays
+    minor so the (Bp, bp) gradient accumulator for a feature tile stays
     resident in VMEM while X streams down the sample axis (same mapping as
     the screening kernel); the finish step applies the prox update without
     the p-sized gradient ever round-tripping to HBM. The n-sized forward
@@ -20,6 +20,17 @@ Two kernels, mirroring the screening kernels' structure (edpp_screen.py):
     The per-coordinate update is expressed in masked vector ops (one-hot
     selects + a dynamic row slice), VPU-friendly and Mosaic-compilable —
     no scalar gather from the lane dimension.
+
+Batch axis
+----------
+Both kernels are batch-polymorphic over the *query* operands (see
+kernels/ref.py): ``fista_step`` takes r (B, n) + z/beta_old (B, p) and the
+B gradients fall out of the SAME single pass over X (the dot grows to
+(Bp, bn)×(bn, bp)); ``cd_gram_sweep`` shares one G across the batch and
+sweeps all B coordinate systems in lockstep vector ops, with an optional
+``valid`` (B, p) mask pinning each query's screened-out columns at zero.
+step/lam/mom are scalar-or-(B,). Rank-1 inputs keep the original
+single-query arithmetic exactly.
 
 Accumulation follows ref._acc_dtype: f32 for f32/bf16 inputs, f64 is never
 downcast (x64 benchmark runs keep solver-grade precision in interpret
@@ -38,8 +49,22 @@ from jax.experimental import pallas as pl
 from .ref import _acc_dtype
 
 # VMEM guard for cd_gram_sweep: G is (b, b) f32/f64 and must fit on-chip
-# alongside its (1, b) vectors. 1024² f32 = 4 MiB ≪ 16 MiB/core.
+# alongside its (Bp, b) vectors. 1024² f32 = 4 MiB ≪ 16 MiB/core.
 GRAM_BUCKET_MAX = 1024
+
+
+def _q2d(v: jax.Array):
+    """(p,)|(B, p) query operand → ((B, p), B, squeeze)."""
+    if v.ndim == 1:
+        return v[None, :], 1, True
+    return v, v.shape[0], False
+
+
+def _scalar_rows(b: int, b_pad: int, acc, *params) -> jax.Array:
+    """Stack per-query scalar-or-(B,) params into a (len(params), Bp) array."""
+    rows = [jnp.pad(jnp.broadcast_to(jnp.asarray(s, acc), (b,)), (0, b_pad))
+            for s in params]
+    return jnp.stack(rows)
 
 
 def _fista_step_kernel(s_ref, r_ref, x_ref, z_ref, b_ref,
@@ -51,15 +76,16 @@ def _fista_step_kernel(s_ref, r_ref, x_ref, z_ref, b_ref,
         g_ref[...] = jnp.zeros_like(g_ref)
 
     x = x_ref[...].astype(acc)                       # (bn, bp)
-    r = r_ref[...].astype(acc)                       # (1, bn)
-    # MXU: (1, bn) @ (bn, bp) -> (1, bp) gradient partial
+    r = r_ref[...].astype(acc)                       # (Bp, bn)
+    # MXU: (Bp, bn) @ (bn, bp) -> (Bp, bp) gradient partial
     g_ref[...] += jax.lax.dot_general(
         r, x, (((1,), (0,)), ((), ())), preferred_element_type=acc,
     )
 
     @pl.when(j == n_tiles - 1)
     def _finish():
-        step, lam, mom = s_ref[0], s_ref[1], s_ref[2]
+        s = s_ref[...]                               # (3, Bp)
+        step, lam, mom = s[0][:, None], s[1][:, None], s[2][:, None]
         u = z_ref[...].astype(acc) - step * g_ref[...]
         t = step * lam
         beta_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
@@ -85,6 +111,8 @@ def fista_step(
     """Fused FISTA iteration tail (see module doc). Any (N, p); zero padded
     internally — zero rows/columns are exact no-ops for the accumulator and
     fixed points for the prox, so padded solver buffers pass through.
+    r may be (B, n) with z/beta_old (B, p): all B iterations share the one
+    streaming pass over X.
 
     Default tiles shrink to the problem (capped at 512): unlike the screens
     this runs once per *inner iteration*, so padding a 30×80 reduced bucket
@@ -98,15 +126,16 @@ def fista_step(
     acc = _acc_dtype(X)
     n_pad = -n % bn
     p_pad = -p % bp
+    r2, b, squeeze = _q2d(r)
+    b_pad = 0 if b == 1 else -b % 8          # sublane multiple for B > 1
+    bq = b + b_pad
+    z2 = z[None, :] if squeeze else z
+    bo2 = beta_old[None, :] if squeeze else beta_old
     Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
-    rp = jnp.pad(r, (0, n_pad)).reshape(1, -1)
-    zp = jnp.pad(z, (0, p_pad)).reshape(1, -1)
-    bp_old = jnp.pad(beta_old, (0, p_pad)).reshape(1, -1)
-    scalars = jnp.stack([
-        jnp.asarray(step, acc),
-        jnp.asarray(lam, acc),
-        jnp.asarray(mom, acc),
-    ])
+    rp = jnp.pad(r2, ((0, b_pad), (0, n_pad)))
+    zp = jnp.pad(z2, ((0, b_pad), (0, p_pad)))
+    bp_old = jnp.pad(bo2, ((0, b_pad), (0, p_pad)))
+    scalars = _scalar_rows(b, b_pad, acc, step, lam, mom)
     n_tiles = (n + n_pad) // bn
     p_tiles = (p + p_pad) // bp
 
@@ -115,54 +144,60 @@ def fista_step(
         grid=(p_tiles, n_tiles),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),                 # scalars
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),        # residual
+            pl.BlockSpec((bq, bn), lambda i, j: (0, j)),       # residuals
             pl.BlockSpec((bn, bp), lambda i, j: (j, i)),       # X tile
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # z
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # beta_old
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # z
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # beta_old
         ],
         out_specs=[
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # gradient acc
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # beta_new
-            pl.BlockSpec((1, bp), lambda i, j: (0, i)),        # z_new
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # gradient acc
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # beta_new
+            pl.BlockSpec((bq, bp), lambda i, j: (0, i)),       # z_new
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((1, p + p_pad), acc),
-            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
-            jax.ShapeDtypeStruct((1, p + p_pad), z.dtype),
+            jax.ShapeDtypeStruct((bq, p + p_pad), acc),
+            jax.ShapeDtypeStruct((bq, p + p_pad), z.dtype),
+            jax.ShapeDtypeStruct((bq, p + p_pad), z.dtype),
         ],
         interpret=interpret,
     )(scalars, rp, Xp, zp, bp_old)
-    return beta_new[0, :p], z_new[0, :p]
+    beta_new = beta_new[:b, :p]
+    z_new = z_new[:b, :p]
+    if squeeze:
+        return beta_new[0], z_new[0]
+    return beta_new, z_new
 
 
-def _cd_gram_kernel(s_ref, g_ref, c_ref, b_ref, out_ref, *,
+def _cd_gram_kernel(s_ref, g_ref, c_ref, b_ref, v_ref, out_ref, *,
                     p: int, sweeps: int, acc):
-    lam = s_ref[0]
+    lam = s_ref[...][:, None]                        # (Bp, 1)
     G = g_ref[...].astype(acc)                       # (p, p), VMEM-resident
-    c = c_ref[...].astype(acc)                       # (1, p)
-    beta0 = b_ref[...].astype(acc)                   # (1, p)
-    q0 = jax.lax.dot_general(                        # q = Gβ (G symmetric)
+    c = c_ref[...].astype(acc)                       # (Bp, p)
+    beta0 = b_ref[...].astype(acc)                   # (Bp, p)
+    valid = v_ref[...].astype(acc)                   # (Bp, p)
+    q0 = jax.lax.dot_general(                        # q = βG (G symmetric)
         beta0, G, (((1,), (0,)), ((), ())), preferred_element_type=acc)
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, p), 1)
 
     def coord(i, carry):
         beta, q = carry
         j = i % p
-        onehot = iota == j
+        onehot = iota == j                                 # (1, p)
         row = jax.lax.dynamic_slice(G, (j, 0), (1, p))     # G_j,: == G_:,j
         gjj = jnp.sum(jnp.where(onehot, row, 0.0))
-        bj = jnp.sum(jnp.where(onehot, beta, 0.0))
-        cj = jnp.sum(jnp.where(onehot, c, 0.0))
-        qj = jnp.sum(jnp.where(onehot, q, 0.0))
+        bj = jnp.sum(jnp.where(onehot, beta, 0.0), axis=1)     # (Bp,)
+        cj = jnp.sum(jnp.where(onehot, c, 0.0), axis=1)
+        qj = jnp.sum(jnp.where(onehot, q, 0.0), axis=1)
+        vj = jnp.sum(jnp.where(onehot, valid, 0.0), axis=1)
         rho = cj - qj + gjj * bj
         bn_ = jnp.where(
             gjj > 0,
-            jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lam, 0.0)
+            jnp.sign(rho) * jnp.maximum(jnp.abs(rho) - lam[:, 0], 0.0)
             / jnp.maximum(gjj, 1e-30),
             0.0,
-        )
-        beta = jnp.where(onehot, bn_, beta)
-        q = q + row * (bn_ - bj)
+        ) * vj
+        beta = jnp.where(onehot, bn_[:, None], beta)
+        q = q + row * (bn_ - bj)[:, None]
         return beta, q
 
     beta, _ = jax.lax.fori_loop(0, sweeps * p, coord, (beta0, q0))
@@ -176,6 +211,7 @@ def cd_gram_sweep(
     beta: jax.Array,
     lam,
     sweeps: int = 1,
+    valid: jax.Array | None = None,
     *,
     interpret: bool = False,
 ) -> jax.Array:
@@ -184,6 +220,8 @@ def cd_gram_sweep(
     Matches ref.cd_gram_sweep_ref. Requires p ≤ GRAM_BUCKET_MAX (the
     SolverEngine's Gram-vs-matvec crossover guards this); p is padded to a
     lane multiple — padded columns have G_jj = 0 and stay at β = 0.
+    Batched: c/beta (B, p) share the one (p, p) Gram block; lam is
+    scalar-or-(B,); ``valid`` (B, p) pins screened-out columns per query.
     """
     p = G.shape[0]
     if p > GRAM_BUCKET_MAX:
@@ -191,22 +229,34 @@ def cd_gram_sweep(
             f"cd_gram_sweep: p={p} exceeds GRAM_BUCKET_MAX={GRAM_BUCKET_MAX}")
     acc = _acc_dtype(G)
     p_pad = -p % 128
+    c2, b, squeeze = _q2d(c)
+    beta2 = beta[None, :] if squeeze else beta
+    b_pad = 0 if b == 1 else -b % 8
+    bq = b + b_pad
+    if valid is None:
+        valid2 = jnp.ones((b, p), acc)
+    else:
+        valid2 = valid[None, :] if valid.ndim == 1 else valid
     Gp = jnp.pad(G, ((0, p_pad), (0, p_pad)))
-    cp = jnp.pad(c, (0, p_pad)).reshape(1, -1)
-    bp_ = jnp.pad(beta, (0, p_pad)).reshape(1, -1)
-    scalars = jnp.asarray([lam], dtype=acc)
+    cp = jnp.pad(c2, ((0, b_pad), (0, p_pad)))
+    bp_ = jnp.pad(beta2, ((0, b_pad), (0, p_pad)))
+    vp_ = jnp.pad(valid2.astype(acc), ((0, b_pad), (0, p_pad)))
+    scalars = jnp.pad(jnp.broadcast_to(jnp.asarray(lam, acc), (b,)),
+                      (0, b_pad))
 
     out = pl.pallas_call(
         functools.partial(_cd_gram_kernel, p=p + p_pad, sweeps=sweeps,
                           acc=acc),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),        # lam
+            pl.BlockSpec(memory_space=pl.ANY),        # lam (Bp,)
             pl.BlockSpec((p + p_pad, p + p_pad), lambda: (0, 0)),
-            pl.BlockSpec((1, p + p_pad), lambda: (0, 0)),
-            pl.BlockSpec((1, p + p_pad), lambda: (0, 0)),
+            pl.BlockSpec((bq, p + p_pad), lambda: (0, 0)),
+            pl.BlockSpec((bq, p + p_pad), lambda: (0, 0)),
+            pl.BlockSpec((bq, p + p_pad), lambda: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, p + p_pad), lambda: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, p + p_pad), beta.dtype),
+        out_specs=pl.BlockSpec((bq, p + p_pad), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bq, p + p_pad), beta.dtype),
         interpret=interpret,
-    )(scalars, Gp, cp, bp_)
-    return out[0, :p]
+    )(scalars, Gp, cp, bp_, vp_)
+    out = out[:b, :p]
+    return out[0] if squeeze else out

@@ -4,6 +4,10 @@
         --rule edpp --num-lambdas 100 [--group-size 5] [--ckpt-dir DIR]
 
 Checkpoints (λ_k, β_k) per grid point; a killed run resumes mid-path.
+
+Precision: ``--x64`` (the default here — reproduction-grade paths) enables
+jax_enable_x64 BEFORE any jax import touches arrays; ``--no-x64`` runs the
+f32 serving configuration (what launch/serve.py uses by default).
 """
 
 from __future__ import annotations
@@ -11,21 +15,8 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import numpy as np
 
-jax.config.update("jax_enable_x64", True)
-
-import jax.numpy as jnp  # noqa: E402
-
-from repro.checkpoint import latest_step, restore, save  # noqa: E402
-from repro.core import (GroupPathConfig, PathConfig, group_lambda_max,  # noqa: E402
-                        group_lasso_path, lambda_grid, lambda_max,
-                        lasso_path)
-from repro.data import group_lasso_problem, lasso_problem  # noqa: E402
-
-
-def main():
+def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=150)
     ap.add_argument("--p", type=int, default=3000)
@@ -41,7 +32,27 @@ def main():
     ap.add_argument("--group-size", type=int, default=0,
                     help=">0 switches to group Lasso with this group size")
     ap.add_argument("--ckpt-dir", default="")
-    args = ap.parse_args()
+    ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="float64 path solves (default on for repro; "
+                         "--no-x64 = the f32 serving configuration)")
+    return ap.parse_args(argv)
+
+
+def main(argv=None):
+    args = _parse_args(argv)
+
+    import jax
+    jax.config.update("jax_enable_x64", bool(args.x64))
+
+    import jax.numpy as jnp  # noqa: E402
+    import numpy as np  # noqa: E402,F401
+
+    from repro.checkpoint import save  # noqa: E402
+    from repro.core import (GroupPathConfig, PathConfig,  # noqa: E402
+                            group_lambda_max, group_lasso_path, lambda_grid,
+                            lambda_max, lasso_path)
+    from repro.data import group_lasso_problem, lasso_problem  # noqa: E402
 
     if args.group_size > 0:
         m = args.group_size

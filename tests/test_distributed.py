@@ -71,3 +71,64 @@ def test_distributed_matches_local(subproc):
 def test_multipod_mesh(subproc):
     out = subproc(MULTIPOD_CODE, devices=8)
     assert "POD_OK" in out
+
+
+BATCHED_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed as D
+from repro.core import lambda_max, edpp_mask, make_dual_state, fista
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(2)
+N, p, B = 48, 512, 4
+X = rng.standard_normal((N, p)).astype(np.float32)
+Y = np.stack([
+    (X[:, rng.choice(p, 8, replace=False)] @ rng.uniform(-1, 1, 8)
+     + 0.1 * rng.standard_normal(N)).astype(np.float32)
+    for _ in range(B)])
+Xd, _ = D.shard_problem(mesh, X, Y[0])
+Yd = jax.device_put(jnp.asarray(Y), D.replicated(mesh))
+
+corr = Y @ X                                # (B, p)
+istar = np.argmax(np.abs(corr), axis=-1)
+lmax = np.abs(corr)[np.arange(B), istar]
+v1max = jnp.asarray(np.sign(corr[np.arange(B), istar])[:, None]
+                    * X[:, istar].T)
+col_norms = jax.device_put(jnp.linalg.norm(jnp.asarray(X), axis=0),
+                           D.beta_sharding(mesh))
+beta0 = jax.device_put(jnp.zeros((B, p), jnp.float32),
+                       jax.sharding.NamedSharding(
+                           mesh, jax.sharding.PartitionSpec(
+                               None, D.feature_axes(mesh))))
+
+lam_prev = jnp.asarray(lmax, jnp.float32)
+lam_next = 0.5 * lam_prev
+mask, scores = D.dist_edpp_screen_batched(
+    mesh, Xd, Yd, lam_next, lam_prev, beta0, jnp.asarray(lmax), v1max,
+    col_norms)
+# per-query parity vs the single-query jnp oracle
+for b in range(B):
+    st = make_dual_state(jnp.asarray(X), jnp.asarray(Y[b]),
+                         jnp.zeros(p), float(lam_prev[b]), float(lmax[b]))
+    ref = edpp_mask(jnp.asarray(X), jnp.asarray(Y[b]), float(lam_next[b]), st)
+    np.testing.assert_array_equal(np.asarray(mask[b]), np.asarray(ref))
+
+# batched distributed FISTA vs per-query single-chip solves
+L = 1.05 * float(np.linalg.norm(X, 2) ** 2)
+lam = jnp.asarray(0.3 * lmax, jnp.float32)
+beta_b = D.dist_fista_batched(mesh, Xd, Yd, lam, beta0, L, iters=600)
+for b in range(B):
+    ref = fista(jnp.asarray(X), jnp.asarray(Y[b]), float(lam[b]),
+                max_iter=4000, tol=1e-10).beta
+    err = float(np.abs(np.asarray(beta_b[b]) - np.asarray(ref)).max())
+    assert err < 1e-4, (b, err)
+print("BATCH_DIST_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_batched_matches_per_query(subproc):
+    """Batched multi-query screen+solve on the mesh: one (B, N) psum per
+    step, per-query results identical to the single-query references."""
+    out = subproc(BATCHED_CODE, devices=8)
+    assert "BATCH_DIST_OK" in out

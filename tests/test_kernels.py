@@ -131,3 +131,103 @@ def test_kernel_screening_matches_rule():
     mask_k, _, _ = ops.edpp_screen(X, centre, rho, interpret=True)
     mask_ref = edpp_mask(X, y, lam, state)
     np.testing.assert_array_equal(np.asarray(mask_k), np.asarray(mask_ref))
+
+
+# ---------------------------------------------------------------------------
+# Batch axis: every query-side op accepts (B, ·) operands — kernels vs refs
+# vs per-row single-query calls (one fitted dictionary, B queries)
+# ---------------------------------------------------------------------------
+
+BATCHES = [1, 3, 8, 17]
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+def test_edpp_screen_kernel_batched(batch):
+    n, p = 60, 300
+    rng = np.random.default_rng(batch)
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+    rho = jnp.asarray(rng.uniform(0.1, 1.0, batch), jnp.float32)
+    s_ref, ss_ref = ref.edpp_screen_ref(X, C, rho)
+    s, ss = ops.edpp_screen_scores(X, C, rho, interpret=True)
+    assert s.shape == (batch, p) and ss.shape == (p,)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ss_ref), rtol=2e-5)
+    # per-row: batched row b == single-query call on query b (to fp tol)
+    for b in range(batch):
+        s1, _ = ops.edpp_screen_scores(X, C[b], float(rho[b]),
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(s[b]), np.asarray(s1),
+                                   rtol=2e-6, atol=2e-5)
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+def test_screen_matvec_kernel_batched(batch):
+    n, p = 45, 260
+    rng = np.random.default_rng(10 + batch)
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((batch, n)), jnp.float32)
+    dot = ops.screen_matvec(X, C, interpret=True)
+    assert dot.shape == (batch, p)
+    np.testing.assert_allclose(np.asarray(dot),
+                               np.asarray(ref.screen_matvec_ref(X, C)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fista_step_kernel_batched(batch, dtype):
+    n, p = 40, 200
+    rng = np.random.default_rng(20 + batch)
+    X = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    R = jnp.asarray(rng.standard_normal((batch, n)), dtype)
+    Z = jnp.asarray(rng.standard_normal((batch, p)), dtype)
+    Bo = jnp.asarray(rng.standard_normal((batch, p)), dtype)
+    lam = jnp.asarray(rng.uniform(0.5, 2.0, batch), jnp.float32)
+    bn_ref, zn_ref = ref.fista_step_ref(X, R, Z, Bo, 0.01, lam, 0.6)
+    bn, zn = ops.fista_step(X, R, Z, Bo, 0.01, lam, 0.6, interpret=True)
+    assert bn.shape == (batch, p)
+    np.testing.assert_allclose(np.asarray(bn, np.float32),
+                               np.asarray(bn_ref, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(zn, np.float32),
+                               np.asarray(zn_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("batch", BATCHES)
+def test_prox_step_kernel_batched(batch):
+    p = 333
+    rng = np.random.default_rng(30 + batch)
+    Z = jnp.asarray(rng.standard_normal((batch, p)), jnp.float32)
+    G = jnp.asarray(rng.standard_normal((batch, p)), jnp.float32)
+    Bo = jnp.asarray(rng.standard_normal((batch, p)), jnp.float32)
+    lam = jnp.asarray(rng.uniform(0.5, 2.0, batch), jnp.float32)
+    bn_ref, zn_ref = ref.prox_step_ref(Z, G, Bo, 0.01, lam, 0.6)
+    bn, zn = ops.prox_step(Z, G, Bo, 0.01, lam, 0.6, interpret=True)
+    np.testing.assert_allclose(np.asarray(bn), np.asarray(bn_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(zn), np.asarray(zn_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("batch", [2, 9])
+def test_cd_gram_sweep_kernel_batched_with_valid(batch):
+    b = 48
+    rng = np.random.default_rng(40 + batch)
+    A = rng.standard_normal((2 * b, b)).astype(np.float32)
+    A[:, -3:] = 0.0
+    G = jnp.asarray(A.T @ A)
+    C = jnp.asarray(rng.standard_normal((batch, b)), jnp.float32)
+    beta0 = jnp.asarray(rng.standard_normal((batch, b)) * 0.1, jnp.float32)
+    valid = jnp.asarray(rng.uniform(size=(batch, b)) > 0.3, jnp.float32)
+    lam = jnp.asarray(rng.uniform(0.5, 2.0, batch), jnp.float32)
+    out_ref = ref.cd_gram_sweep_ref(G, C, beta0 * valid, lam, sweeps=2,
+                                    valid=valid)
+    out = ops.cd_gram_sweep(G, C, beta0 * valid, lam, sweeps=2, valid=valid,
+                            interpret=True)
+    assert out.shape == (batch, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=2e-4, atol=2e-5)
+    # per-query screened-out columns are pinned at zero
+    assert np.all(np.asarray(out) * (1 - np.asarray(valid)) == 0)
+    assert np.all(np.asarray(out)[:, -3:] == 0)   # zero-Gram cols too

@@ -1,15 +1,21 @@
 #!/usr/bin/env python3
-"""Schema check for the BENCH_solver.json artifact (CI solver-bench smoke).
+"""Schema check for the BENCH_*.json artifacts (CI bench smoke jobs).
 
 The benchmarks (benchmarks/common.py:write_bench_section) merge one
-``{meta, rows}`` section per bench into ``BENCH_solver.json``. CI runs
-``benchmarks/bench_solver_swap.py --quick`` under ``INTERPRET=1`` and then
-this script, so a solver-bench regression (missing section, empty rows,
-dropped telemetry keys) fails in PR instead of rotting silently.
+``{meta, rows}`` section per bench into a BENCH json. CI runs
+``benchmarks/bench_solver_swap.py --quick`` (→ BENCH_solver.json) and
+``benchmarks/bench_batched.py --quick`` (→ BENCH_batch.json) under
+``INTERPRET=1`` and then this script, so a bench regression (missing
+section, empty rows, dropped telemetry keys) fails in PR instead of
+rotting silently.
+
+Required row keys are per-section (``SECTION_ROW_KEYS``); unknown sections
+use the solver-bench default set.
 
 Usage:
     python tools/check_bench_schema.py BENCH_solver.json
     python tools/check_bench_schema.py BENCH_solver.json --section bench_solver_swap
+    python tools/check_bench_schema.py BENCH_batch.json --section bench_batched
 """
 
 from __future__ import annotations
@@ -28,6 +34,26 @@ REQUIRED_ROW_KEYS = {
     "solver_iters",
     "speedup_vs_unscreened",
     "wall_time_s",
+}
+
+BATCH_ROW_KEYS = {
+    "dataset",
+    "rule",
+    "solver",
+    "backend",
+    "batch_size",
+    "num_lambdas",
+    "wall_time_s",
+    "seq_wall_time_s",
+    "speedup_vs_sequential",
+    "x_passes_per_query",
+    "masks_identical",
+    "max_beta_err",
+    "beta_err_tol",
+}
+
+SECTION_ROW_KEYS = {
+    "bench_batched": BATCH_ROW_KEYS,
 }
 
 
@@ -61,8 +87,9 @@ def check(path: str, sections: list[str]) -> int:
             print(f"{path}: section {name!r} has no rows")
             bad += 1
             continue
+        required = SECTION_ROW_KEYS.get(name, REQUIRED_ROW_KEYS)
         for i, row in enumerate(rows):
-            missing = REQUIRED_ROW_KEYS - set(row)
+            missing = required - set(row)
             if missing:
                 print(f"{path}: {name} row {i} missing keys "
                       f"{sorted(missing)}")
