@@ -6,12 +6,13 @@ step — 1/B HBM passes per query — and one union-bucketed batched solve,
 while a query loop pays the full per-step pass (and the per-step Python/
 dispatch overhead) B times over.
 
-Protocol, per B ∈ {1, 8, 64}:
+Protocol, per B ∈ {1, 8, 64} (both arms query ONE fitted LassoSession —
+the dictionary-fit pass over X runs once per process):
 
   * replay the same deterministic ``QueryStream`` slice into both arms,
-  * batched arm: ``lasso_path_batched`` (per-query grids over each query's
+  * batched arm: ``session.path(Y)`` (per-query grids over each query's
     own λ_max), warm-timed like every bench here,
-  * sequential arm: ``lasso_path`` per query on identical grids,
+  * sequential arm: ``session.path(Y[b])`` per query on identical grids,
   * exactness: per-query screening masks must be IDENTICAL bit-for-bit and
     β within ``common.beta_err_tol`` (both asserted),
   * amortisation (asserted on the jnp backend): screen HBM passes per query
@@ -30,9 +31,7 @@ import time
 
 import numpy as np
 
-from repro.core import (PathConfig, lambda_grid, lasso_path,
-                        lasso_path_batched)
-from repro.core.engine import DictionaryGeometry
+from repro.core import LassoSession, PathConfig, lambda_grid
 from repro.data import QueryStream
 
 from .common import beta_err_tol, write_bench_section
@@ -51,18 +50,19 @@ def gather_queries(stream: QueryStream, count: int) -> np.ndarray:
     return np.stack(ys[:count])
 
 
-def run_one(X, Y, grids, cfg, geometry):
-    """Warm-timed batched run + warm-timed sequential loop on one stream."""
+def run_one(sess: LassoSession, Y, grids):
+    """Warm-timed batched run + warm-timed sequential loop on one stream.
+    Both arms query the SAME fitted session (one dictionary fit per
+    process); the batched arm dispatches on Y's rank alone."""
     B = Y.shape[0]
-    lasso_path_batched(X, Y, grids, cfg, geometry=geometry)   # warm compile
+    sess.path(Y, grids)                                       # warm compile
     t0 = time.perf_counter()
-    res_b = lasso_path_batched(X, Y, grids, cfg, geometry=geometry)
+    res_b = sess.path(Y, grids)
     t_batch = time.perf_counter() - t0
 
-    lasso_path(X, Y[0], grids[0], cfg, geometry=geometry)     # warm compile
+    sess.path(Y[0], grids[0])                                 # warm compile
     t0 = time.perf_counter()
-    singles = [lasso_path(X, Y[b], grids[b], cfg, geometry=geometry)
-               for b in range(B)]
+    singles = [sess.path(Y[b], grids[b]).squeeze() for b in range(B)]
     t_seq = time.perf_counter() - t0
     return res_b, singles, t_batch, t_seq
 
@@ -89,7 +89,7 @@ def main(argv=None):
     cfg = PathConfig(rule=args.rule, solver=args.solver,
                      solver_tol=args.solver_tol, backend=args.backend,
                      solver_backend=args.backend)
-    geometry = DictionaryGeometry(X, backend=args.backend)
+    sess = LassoSession.fit(X, config=cfg)
 
     rows = []
     passes_per_query = {}
@@ -105,8 +105,7 @@ def main(argv=None):
             lambda_grid(float(np.max(np.abs(X.T @ Y[b]))), num=num_lambdas,
                         hi_frac=0.95)
             for b in range(B)])
-        res_b, singles, t_batch, t_seq = run_one(X, Y, eng_grids, cfg,
-                                                 geometry)
+        res_b, singles, t_batch, t_seq = run_one(sess, Y, eng_grids)
 
         # -- exactness: masks bit-for-bit, β within solver-precision drift
         tol = max(beta_err_tol(Y[b], args.solver_tol) for b in range(B))

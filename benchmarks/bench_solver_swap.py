@@ -27,9 +27,9 @@ import time
 
 import numpy as np
 
-from repro.core import PathConfig, default_solver_backend, lasso_path
+from repro.core import PathConfig, default_solver_backend
 
-from .common import (beta_err_tol, emit, grid_for, run_rule,
+from .common import (beta_err_tol, emit, grid_for, run_rule, session_for,
                      write_bench_section)
 
 DATASETS_QUICK = {
@@ -83,9 +83,10 @@ def run(full: bool = False, num_lambdas: int = 100):
             base = PathConfig(rule="none", solver="cd",
                               solver_tol=SOLVER_TOL, kkt_tol=1e-8,
                               solver_backend=backend)
-            lasso_path(X, y, grid, base)           # warm compile
+            sess = session_for(X)    # ONE dictionary fit per dataset
+            sess.path(y, grid, config=base)        # warm compile
             t0 = time.perf_counter()
-            ref = lasso_path(X, y, grid, base)
+            ref = sess.path(y, grid, config=base).squeeze()
             t_ref = time.perf_counter() - t0
             emit(f"solver_swap/{name}/cd@{backend}", t_ref * 1e6,
                  "speedup=1.00")

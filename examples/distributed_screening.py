@@ -1,14 +1,28 @@
 """Distributed EDPP screening + FISTA on a virtual 8-chip mesh.
 
-Demonstrates the production multi-chip layout (DESIGN §7): X column-sharded
-over every mesh axis, dual geometry replicated, screening with zero
-communication, solver with one N-vector psum per iteration (chunked-overlap
-schedule). The identical code lowers on the 256/512-chip production meshes
-in the dry-run (cells lasso-screen-16m / lasso-fista-16m).
+Demonstrates the production multi-chip layout (DESIGN §7) at two levels:
 
-    PYTHONPATH=src python examples/distributed_screening.py
+  1. **The session front door** — ``LassoSession.fit(X, mesh=mesh)``
+     places the dictionary column-sharded over every mesh axis (queries
+     replicated) and ``session.path`` runs the SAME screen→reduce→solve
+     driver as on one chip; GSPMD inserts the collectives. Dispatch to the
+     distributed layout is purely ``mesh`` presence — no dist-specific
+     entry point.
+  2. **The explicit shard_map suite** (`repro.core.distributed`) — the
+     hand-written collectives the session's GSPMD lowering is benchmarked
+     against: screening with zero communication, FISTA with one N-vector
+     psum per iteration (chunked-overlap schedule).
+
+The identical code lowers on the 256/512-chip production meshes in the
+dry-run (cells lasso-screen-16m / lasso-fista-16m).
+
+    PYTHONPATH=src python examples/distributed_screening.py [--quick]
+
+``--quick`` shrinks shapes for CI smoke runs (INTERPRET=1 friendly — the
+mesh path pins the GSPMD ``jnp`` backend either way).
 """
 
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -19,21 +33,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import LassoSession, PathConfig
 from repro.core import DualState, distributed as D, edpp_mask, lambda_max
 from repro.data import lasso_problem
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for CI smoke runs")
+    args = ap.parse_args(argv)
+
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
-    n, p = 256, 1 << 15
+    n, p = (128, 1 << 12) if args.quick else (256, 1 << 15)
+    fista_iters = 60 if args.quick else 300
     X, y, beta_true = lasso_problem(n, p, nnz=40, sigma=0.1,
                                     dtype=np.float32)
-    Xd, yd = D.shard_problem(mesh, X, y)
-    print(f"X: {n}x{p} sharded column-wise → "
-          f"{p // mesh.size} features/chip")
 
+    # ---- level 1: the session front door (mesh = placement, GSPMD) -----
+    # f32 serving precision: a 1e-8 relative gap is unreachable in f32 and
+    # would burn max_iter per step — demo at the f32-appropriate tolerance
+    sess = LassoSession.fit(X, mesh=mesh,
+                            config=PathConfig(solver_tol=2e-5, max_iter=600))
+    print(f"X: {n}x{p} sharded column-wise → "
+          f"{p // mesh.size} features/chip "
+          f"(session fused fit passes: {sess.fit_passes})")
+    t0 = time.perf_counter()
+    res = sess.path(y, num_lambdas=5, lo_frac=0.3)
+    t_path = time.perf_counter() - t0
+    for s in res.stats:
+        print(f"  session path λ={s.lam:7.2f}: discarded {s.n_discarded:6d}"
+              f"/{p} kept {s.n_kept:5d} iters {s.solver_iters}")
+    print(f"session 5-point path on the mesh: {t_path:.2f}s "
+          f"(one driver, GSPMD collectives)")
+
+    # ---- level 2: the explicit shard_map collectives ------------------
+    Xd, yd = D.shard_problem(mesh, X, y)
     lmax_d, matvec_d, screen_d, sup_d = D.make_dist_ops(mesh)
     lm = float(lmax_d(Xd, yd))
     print(f"λ_max = {lm:.3f}  (one scalar pmax)")
@@ -65,10 +102,10 @@ def main():
     lam = 0.3 * lm                       # solve deeper into the path
     L = D.dist_power_iteration(mesh, Xd) * 1.05
     t0 = time.perf_counter()
-    beta = D.dist_fista(mesh, Xd, yd, lam, beta0, L, iters=300,
+    beta = D.dist_fista(mesh, Xd, yd, lam, beta0, L, iters=fista_iters,
                         overlap="chunked")
     beta.block_until_ready()
-    print(f"distributed FISTA (300 iters, chunked-overlap psum): "
+    print(f"distributed FISTA ({fista_iters} iters, chunked-overlap psum): "
           f"{time.perf_counter()-t0:.2f}s")
     bh = np.asarray(beta)
     print(f"recovered support: {int((np.abs(bh) > 1e-4).sum())} features "

@@ -1,12 +1,17 @@
 """Quickstart: safe Lasso screening with EDPP (paper's headline workflow).
 
-Solves a 100-point λ-path on a synthetic problem (paper eq. 74) twice —
-without screening and with sequential EDPP — and prints per-λ rejection
-ratios and the end-to-end speedup. Runs in ~1 minute on CPU.
+Fits ONE :class:`repro.LassoSession` on a synthetic problem (paper
+eq. 74) — the fused dictionary-fit pass over X runs exactly once — then
+solves the same 100-point λ-path twice through ``session.path``: without
+screening and with sequential EDPP. Prints per-λ rejection ratios and the
+end-to-end speedup. Runs in ~1 minute on CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--quick]
+
+``--quick`` shrinks the problem for CI smoke runs (INTERPRET=1 friendly).
 """
 
+import argparse
 import time
 
 import jax
@@ -14,39 +19,54 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.core import PathConfig, lambda_grid, lambda_max, lasso_path
+from repro import LassoSession, PathConfig, ScreenSpec, SolveSpec
 from repro.data import lasso_problem
-import jax.numpy as jnp
 
 
-def main():
-    n, p, nnz = 150, 3000, 60
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for CI smoke runs")
+    args = ap.parse_args(argv)
+
+    n, p, nnz, K = (60, 400, 12, 12) if args.quick else (150, 3000, 60, 100)
     print(f"synthetic lasso: X is {n}x{p}, {nnz} true nonzeros (eq. 74)")
     X, y, beta_true = lasso_problem(n, p, nnz=nnz, corr=0.5, sigma=0.1)
 
-    lmax = float(lambda_max(jnp.asarray(X), jnp.asarray(y)))
-    grid = lambda_grid(lmax, num=100)
+    # ONE session: the dictionary side (‖x_j‖², column norms, Lipschitz
+    # cache) is fitted once and shared by both path runs below.
+    sess = LassoSession.fit(X, config=PathConfig(
+        screen=ScreenSpec(rule="edpp"), solve=SolveSpec(tol=1e-10)))
+    plain = PathConfig(screen=ScreenSpec(rule="none"),
+                       solve=SolveSpec(tol=1e-10))
 
     # warm compiles out of the timing (the paper's MATLAB has none either)
-    lasso_path(X, y, grid[:4], PathConfig(rule="none"))
-    lasso_path(X, y, grid[:4], PathConfig(rule="edpp"))
+    grid_kw = dict(num_lambdas=K)
+    sess.path(y, num_lambdas=4, config=plain)
+    sess.path(y, num_lambdas=4)
 
     t0 = time.perf_counter()
-    ref = lasso_path(X, y, grid, PathConfig(rule="none", solver_tol=1e-10))
+    ref = sess.path(y, config=plain, **grid_kw).squeeze()
     t_plain = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    res = lasso_path(X, y, grid, PathConfig(rule="edpp", solver_tol=1e-10))
+    res = sess.path(y, **grid_kw).squeeze()
     t_edpp = time.perf_counter() - t0
+
+    assert sess.fit_passes == 1, "dictionary must be fitted exactly once"
+    lmax = float(res.lambdas[0])
 
     err = np.abs(res.betas - ref.betas).max()
     print(f"\nmax |beta_screened - beta_plain| = {err:.2e}  (safe: exact)")
     print(f"unscreened path : {t_plain:6.2f}s")
     print(f"EDPP path       : {t_edpp:6.2f}s   speedup {t_plain/t_edpp:5.1f}x")
-    print(f"screening cost  : {res.total_screen_time:6.3f}s\n")
+    print(f"screening cost  : {res.total_screen_time:6.3f}s")
+    print(f"dictionary fit  : once per session "
+          f"(fused passes: {sess.fit_passes}, "
+          f"query attaches: {sess.query_passes})\n")
 
     print("  λ/λmax   discarded     kept  rejection-ratio")
-    for k in range(0, 100, 10):
+    for k in range(0, K, max(K // 10, 1)):
         s = res.stats[k]
         nz = int((np.abs(ref.betas[k]) <= 1e-9).sum())
         print(f"  {s.lam/lmax:6.2f}   {s.n_discarded:9d} {s.n_kept:8d}"

@@ -1,6 +1,17 @@
 """repro — Lasso Screening Rules via Dual Polytope Projection (NIPS 2013),
 as a production multi-pod JAX framework.
 
+The canonical top-level API is the fit-once / query-many session::
+
+    import repro
+    sess = repro.LassoSession.fit(X, config=repro.PathConfig(
+        screen=repro.ScreenSpec(rule="edpp"),
+        solve=repro.SolveSpec(strategy="fista")))
+    res = sess.path(Y)          # (n,) or (B, n); unified PathResult
+
+(see docs/api.md; the names resolve lazily so launch drivers can set
+``jax_enable_x64`` before any array is created).
+
 Subpackages:
   core       DPP/EDPP screening rules, (group-)Lasso solvers, λ-path driver
   kernels    Pallas TPU kernels for the screening hot loop
@@ -14,4 +25,33 @@ Subpackages:
   launch     mesh / dry-run / drivers
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+# Lazy re-export of the session API (PEP 562): `repro.LassoSession` etc.
+# import repro.core on first touch, NOT at package import — the launch
+# drivers flip jax_enable_x64 after `import repro` but before any repro
+# array exists, and an eager import here would create jax arrays first.
+_SESSION_API = (
+    "LassoSession",
+    "PathConfig",
+    "ScreenSpec",
+    "SolveSpec",
+    "PathResult",
+    "PathStepStats",
+    "lambda_grid",
+    "DictionaryGeometry",
+    "GroupDictionaryGeometry",
+)
+
+__all__ = list(_SESSION_API) + ["__version__"]
+
+
+def __getattr__(name):
+    if name in _SESSION_API:
+        from . import core
+        return getattr(core, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SESSION_API))

@@ -2,6 +2,14 @@
 
 Layering (see docs/screening-rules.md for the rule-by-rule map):
 
+    session.py          LassoSession — THE front door: fit(X) once (owns
+                        the DictionaryGeometry, resolved backends, the
+                        per-bucket Lipschitz cache, optional mesh
+                        placement), then path(y | Y) dispatches to the
+                        single / batched / group / distributed drivers
+                        from input rank + groups + mesh, returning ONE
+                        unified PathResult; PathConfig = ScreenSpec +
+                        SolveSpec, validated at construction (docs/api.md)
     screening.py        rule geometry — every ball rule as a SphereTest
                         (centre, ρ) constructor + its pure-jnp oracle mask
     engine.py           ScreeningEngine — the ONE entry point every screen
@@ -30,17 +38,21 @@ Layering (see docs/screening-rules.md for the rule-by-rule map):
                         batched multi-query variants psum (B, N) blocks
 
 Public API:
+    LassoSession, PathConfig, ScreenSpec, SolveSpec           (session — THE
+                                                               front door)
+    PathResult, PathStepStats, lambda_grid                    (results)
     lambda_max, DualState, screen, edpp_mask, dpp_mask, ...   (screening)
     SphereTest, edpp_sphere, gap_mask, make_sphere, ...       (geometry)
     ScreeningEngine, GroupScreeningEngine, PathWorkspace      (engine)
-    DictionaryGeometry                                        (fitted dict)
+    DictionaryGeometry, GroupDictionaryGeometry               (fitted dict)
     register_backend, available_backends, default_backend     (backends)
     SolverEngine, register_solver, available_solvers          (solver engine)
     fista, cd, group_fista, soft_threshold, SolveResult       (solvers)
     group_lambda_max, group_duality_gap                       (group solver)
     group_screen, group_edpp_mask, GroupDualState             (group screening)
-    lasso_path, group_lasso_path, PathConfig, lambda_grid     (path driver)
-    lasso_path_batched, BatchPathResult                       (batched paths)
+    lasso_path, lasso_path_batched, group_lasso_path,
+    GroupPathConfig                                           (deprecated
+                                                               session shims)
 """
 
 from .lasso import (  # noqa: F401
@@ -102,6 +114,7 @@ from .screening import (  # noqa: F401
 )
 from .engine import (  # noqa: F401
     DictionaryGeometry,
+    GroupDictionaryGeometry,
     GroupScreeningEngine,
     PathWorkspace,
     ScreeningEngine,
@@ -133,9 +146,6 @@ from .group_screening import (  # noqa: F401
     make_group_dual_state,
 )
 from .path import (  # noqa: F401
-    BatchPathResult,
-    GroupPathConfig,
-    PathConfig,
     PathResult,
     PathStepStats,
     group_lasso_path,
@@ -143,4 +153,11 @@ from .path import (  # noqa: F401
     lasso_path,
     lasso_path_batched,
     next_pow2,
+)
+from .session import (  # noqa: F401
+    GroupPathConfig,
+    LassoSession,
+    PathConfig,
+    ScreenSpec,
+    SolveSpec,
 )

@@ -65,6 +65,22 @@ def shard_problem(mesh: Mesh, X, y):
     return X, y
 
 
+def place_dictionary(mesh: Mesh, X):
+    """Column-shard a dictionary over every mesh axis.
+
+    The fit-time placement of ``LassoSession.fit(X, mesh=mesh)``: the
+    session's engines then run plain jnp on the placed arrays and GSPMD
+    inserts the collectives of this module's hand-written shard_map ops
+    (the explicit suite remains the §Perf baseline)."""
+    return jax.device_put(jnp.asarray(X), x_sharding(mesh))
+
+
+def place_queries(mesh: Mesh, Y):
+    """Replicate query-side vectors — y (n,) or a batch Y (B, n) — on the
+    mesh (the layout every op in this module assumes)."""
+    return jax.device_put(jnp.asarray(Y), replicated(mesh))
+
+
 # ---------------------------------------------------------------------------
 # shard_map building blocks
 # ---------------------------------------------------------------------------

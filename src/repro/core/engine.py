@@ -227,11 +227,37 @@ class DictionaryGeometry:
     def __init__(self, X, backend: str | None = None, *, _sumsq=None):
         self.backend = resolve_backend(backend)
         self.X = jnp.asarray(X)
+        self.fit_passes = 0       # fused workspace passes over X (fit-once)
+        self.query_passes = 0     # per-query |XᵀY| attach passes
         if _sumsq is None:
             _, _sumsq = self.backend.fused_scores(
                 self.X, jnp.zeros((self.X.shape[0],), self.X.dtype), 0.0)
+            self.fit_passes = 1
         self.sumsq = _sumsq                       # ‖x_j‖²
         self.col_norms = jnp.sqrt(_sumsq)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.X.shape
+
+
+class GroupDictionaryGeometry:
+    """Query-independent geometry of a fitted *group* dictionary.
+
+    The group twin of :class:`DictionaryGeometry`: caches X and the per-group
+    spectral norms ‖X_g‖₂ (Theorem 20 — an m×m eigh per group, the expensive
+    y-independent piece of group screening). A :class:`LassoSession` fitted
+    with ``groups=m`` builds this once; every query then only pays the cheap
+    per-query ``‖X_gᵀy‖`` pass in :class:`GroupScreeningEngine`.
+    """
+
+    def __init__(self, X, m: int, backend: str | None = None):
+        self.backend = resolve_backend(backend)
+        self.X = jnp.asarray(X)
+        self.m = m
+        self.spec_norms = _group_spec_norms(self.X, m)
+        self.fit_passes = 1
+        self.query_passes = 0
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -261,9 +287,11 @@ class PathWorkspace:
             backend_r = resolve_backend(backend)
             scores, sumsq = backend_r.fused_scores(jnp.asarray(X), y_arr, 0.0)
             geometry = DictionaryGeometry(X, backend_r, _sumsq=sumsq)
+            geometry.fit_passes = 1   # the fused pass above fitted it
         else:
             y_arr = jnp.asarray(y)
             scores = jnp.abs(geometry.backend.matvec(geometry.X, y_arr))
+        geometry.query_passes += 1
         self.geometry = geometry
         self.backend = geometry.backend
         self.y = y_arr
@@ -464,13 +492,21 @@ class GroupScreeningEngine:
 
     Caches ‖X_g‖₂ (spectral norms, Theorem 20), λ̄_max and the λ̄_max ray
     v̄₁ = X*X*ᵀy once per path; each screen is then one
-    ``group_screen_scores`` pass over X.
+    ``group_screen_scores`` pass over X. Pass ``geometry`` (a
+    :class:`GroupDictionaryGeometry`) to reuse a prefitted dictionary across
+    queries — the spectral norms are then served from cache and only the
+    per-query ``‖X_gᵀy‖`` pass runs here.
     """
 
     def __init__(self, X, y, m: int, backend: str | None = None,
-                 eps: float = gscr.EPS_DEFAULT):
-        self.backend = resolve_backend(backend)
-        self.X = jnp.asarray(X)
+                 eps: float = gscr.EPS_DEFAULT, *,
+                 geometry: GroupDictionaryGeometry | None = None):
+        if geometry is None:
+            geometry = GroupDictionaryGeometry(X, m, backend)
+        geometry.query_passes += 1
+        self.geometry = geometry
+        self.backend = geometry.backend
+        self.X = geometry.X
         self.y = jnp.asarray(y)
         self.m = m
         self.eps = eps
@@ -481,10 +517,18 @@ class GroupScreeningEngine:
         Xstar = jax.lax.dynamic_slice_in_dim(
             self.X, self.gstar * m, m, axis=1)                   # (N, m)
         self.v1_at_lmax = Xstar @ (Xstar.T @ self.y)             # eq. (59)
-        self.spec_norms = _group_spec_norms(self.X, m)
+        self.spec_norms = geometry.spec_norms
         self.n_screens = 0
         self.total_x_passes = 0
         self.last_x_passes = 0
+
+    @property
+    def batch(self) -> None:
+        return None               # group screens are single-query (for now)
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
 
     def state_at_lambda_max(self) -> gscr.GroupDualState:
         lmax = jnp.asarray(self.lam_max, self.X.dtype)

@@ -6,10 +6,13 @@ point θ*(λ_k) from each solution into the screen for λ_{k+1}.
 
 Engineering notes
 -----------------
-* ``lasso_path`` and ``group_lasso_path`` are thin wrappers over ONE generic
-  :func:`_path_driver` that owns bucketing, column gather, the warm-start
-  scatter/gather of β between buckets and the KKT re-check rounds — and
-  consumes BOTH engines:
+* Callers reach this module through the session front door
+  (:class:`repro.core.session.LassoSession`); the old ``lasso_path`` /
+  ``lasso_path_batched`` / ``group_lasso_path`` functions at the bottom of
+  this file are deprecation shims over it. Everything funnels into ONE
+  generic :func:`_path_driver` that owns bucketing, column gather, the
+  warm-start scatter/gather of β between buckets and the KKT re-check
+  rounds — and consumes BOTH engines:
 
   - every per-step screen goes through the :class:`repro.core.engine`
     ``ScreeningEngine`` (λ-independent geometry cached once, one streaming
@@ -52,15 +55,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import screening as scr
-from .engine import GroupScreeningEngine, ScreeningEngine
-from .solver import SolverEngine
 from . import group_screening as gscr
 
 
@@ -72,42 +73,6 @@ def next_pow2(n: int) -> int:
 _kkt_violations = jax.jit(scr.kkt_violations)
 _group_kkt_violations = jax.jit(gscr.group_kkt_violations,
                                 static_argnames="m")
-
-
-@dataclasses.dataclass(frozen=True)
-class PathConfig:
-    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|gap|safe|dome|strong|none
-    solver: str = "fista"         # fista|cd (any registered solver strategy)
-    sequential: bool = True       # False = "basic" variants (state pinned at λmax)
-    solver_tol: float = 1e-8
-    max_iter: int = 5000
-    gap_check_cadence: int = 10   # duality-gap check every k solver iterations
-    eps: float = scr.EPS_DEFAULT
-    bucket_min: int = 32
-    kkt_tol: float = 1e-4
-    max_kkt_rounds: int = 10
-    paranoid: bool = False        # run KKT loop even for safe rules
-    backend: str | None = None    # screening backend (None = auto-detect)
-    solver_backend: str | None = None  # solver backend (None = auto-detect)
-    checkpoint_fn: Callable | None = None  # called with (k, lam, beta) per step
-
-
-@dataclasses.dataclass(frozen=True)
-class GroupPathConfig:
-    rule: str = "edpp"            # edpp|strong|none
-    solver: str = "group_fista"
-    solver_tol: float = 1e-8
-    max_iter: int = 5000
-    gap_check_cadence: int = 10
-    eps: float = gscr.EPS_DEFAULT
-    bucket_min: int = 16          # in groups
-    kkt_tol: float = 1e-4
-    max_kkt_rounds: int = 10
-    sequential: bool = True
-    paranoid: bool = False
-    backend: str | None = None    # screening backend (None = auto-detect)
-    solver_backend: str | None = None
-    checkpoint_fn: Callable | None = None
 
 
 @dataclasses.dataclass
@@ -133,34 +98,39 @@ class PathStepStats:
 
 @dataclasses.dataclass
 class PathResult:
+    """The ONE path result type, single- and multi-query alike.
+
+    :meth:`LassoSession.path <repro.core.session.LassoSession.path>` always
+    returns the batched layout — a leading batch axis on every array, B = 1
+    for a single query — so callers never branch on a second result class:
+
+        lambdas  (B, K)        per-query λ grids
+        betas    (B, K, p)     per-query coefficient paths
+        masks    (B, K, units) per-query post-KKT discard masks
+        stats    [PathStepStats] per grid step (shared across the batch)
+
+    ``squeeze()`` drops the batch axis of a B = 1 result (what the
+    deprecated ``lasso_path`` / ``group_lasso_path`` shims return, with
+    ``betas`` (K, p));  ``query(b)`` views one query of a batched result in
+    that squeezed layout. ``betas[b]``/``masks[b]``/``lambdas[b]`` line up
+    with the squeezed single-query result of query b (same grid, same rule;
+    masks bit-identical for grid points strictly inside (0, λ_max) — see
+    docs/api.md#exactness-contract for the λ = λ_max endpoint caveat).
+    """
+
     lambdas: np.ndarray
-    betas: np.ndarray             # (K, p)
+    betas: np.ndarray
     stats: list[PathStepStats]
-    masks: np.ndarray | None = None   # (K, units) bool discard masks
+    masks: np.ndarray | None = None
 
     @property
-    def total_solve_time(self) -> float:
-        return sum(s.solve_time_s for s in self.stats)
-
-    @property
-    def total_screen_time(self) -> float:
-        return sum(s.screen_time_s for s in self.stats)
-
-
-@dataclasses.dataclass
-class BatchPathResult:
-    """Result of a batched multi-query path: B queries against one fitted
-    dictionary. ``betas[b]``/``masks[b]``/``lambdas[b]`` line up with the
-    single-query :class:`PathResult` of query b (same grid, same rule)."""
-
-    lambdas: np.ndarray           # (B, K) per-query λ grids
-    betas: np.ndarray             # (B, K, p)
-    stats: list[PathStepStats]    # per grid step (shared across the batch)
-    masks: np.ndarray             # (B, K, units) bool discard masks
+    def batched(self) -> bool:
+        """True while the leading batch axis is present (betas (B, K, p))."""
+        return self.betas.ndim == 3
 
     @property
     def batch(self) -> int:
-        return self.betas.shape[0]
+        return self.betas.shape[0] if self.batched else 1
 
     @property
     def total_solve_time(self) -> float:
@@ -170,8 +140,23 @@ class BatchPathResult:
     def total_screen_time(self) -> float:
         return sum(s.screen_time_s for s in self.stats)
 
-    def query(self, b: int) -> PathResult:
-        """View of query b as a single-query PathResult (stats stay shared)."""
+    def squeeze(self) -> "PathResult":
+        """Drop the batch axis of a B = 1 result: betas (K, p), masks
+        (K, units), lambdas (K,). Values are the same arrays viewed without
+        the leading axis — bit-identical, no copy."""
+        if not self.batched:
+            return self
+        if self.batch != 1:
+            raise ValueError(
+                f"squeeze() needs a single-query result, got B={self.batch};"
+                " use query(b) to select one query")
+        return PathResult(lambdas=self.lambdas[0], betas=self.betas[0],
+                          stats=self.stats, masks=self.masks[0])
+
+    def query(self, b: int) -> "PathResult":
+        """View of query b in the squeezed layout (stats stay shared)."""
+        if not self.batched:
+            raise ValueError("query(b) needs a batched result")
         return PathResult(lambdas=self.lambdas[b], betas=self.betas[b],
                           stats=self.stats, masks=self.masks[b])
 
@@ -223,6 +208,12 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
     units = p // m
     assert units * m == p
     B = 1 if batch is None else batch
+    bucket_min = cfg.bucket_min if cfg.bucket_min is not None \
+        else (32 if m == 1 else 16)
+    # hybrid safe+strong (Zeng et al. 2017): OR the heuristic strong-rule
+    # discards into the safe rule's, with the KKT loop as the backstop
+    hybrid = bool(getattr(cfg, "hybrid_strong", False)) \
+        and cfg.rule not in ("strong", "none")
     lambdas = np.asarray(lambdas, dtype=np.float64)
     if batch is None:
         assert np.all(np.diff(lambdas) <= 1e-12), "grid must be decreasing"
@@ -260,14 +251,17 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
 
         # ---- screen (one fused kernel pass over X for ALL queries) ------
         t0 = time.perf_counter()
+        lam_dev = (float(lam_vec[0]) if batch is None
+                   else jnp.asarray(lam_vec, X.dtype))
+        discard = screen_engine.screen(lam_dev, state, rule=cfg.rule)
+        screen_passes = screen_engine.last_x_passes
+        if hybrid:
+            discard = discard | screen_engine.screen(lam_dev, state,
+                                                     rule="strong")
+            screen_passes += screen_engine.last_x_passes
+        discard_np = np.asarray(discard)
         if batch is None:
-            discard = screen_engine.screen(float(lam_vec[0]), state,
-                                           rule=cfg.rule)
-            discard_np = np.asarray(discard)[None, :]
-        else:
-            discard = screen_engine.screen(jnp.asarray(lam_vec, X.dtype),
-                                           state, rule=cfg.rule)
-            discard_np = np.asarray(discard)
+            discard_np = discard_np[None, :]
         discard_np = discard_np | ~live[:, None]   # dead queries keep nothing
         screen_time = time.perf_counter() - t0
 
@@ -281,7 +275,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
         while True:
             # union of survivors across the batch: one shared buffer
             kept = np.flatnonzero((~discard_np).any(axis=0))
-            bucket = min(next_pow2(max(kept.size, cfg.bucket_min)), units)
+            bucket = min(next_pow2(max(kept.size, bucket_min)), units)
             if kept.size == 0:
                 beta_full = jnp.zeros((B, p), dtype=X.dtype)
                 res_iters, res_gap, q_conv = 0, 0.0, B
@@ -348,7 +342,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             n_kept=int(kept.size),
             solver_iters=res_iters, gap=res_gap, kkt_rounds=kkt_rounds,
             screen_time_s=screen_time, solve_time_s=solve_time,
-            x_passes=screen_engine.last_x_passes,
+            x_passes=screen_passes,
             gap_checks=gap_checks,
             gram_step_frac=gram_solves / solves if solves else 0.0,
             solver_backend=solver_engine.backend_name,
@@ -356,7 +350,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             solver_x_passes=solver_x_passes,
             batch_size=B,
             queries_converged=q_conv,
-            x_passes_per_query=screen_engine.last_x_passes / B,
+            x_passes_per_query=screen_passes / B,
         ))
         if cfg.checkpoint_fn:
             if batch is None:
@@ -373,111 +367,71 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                 state = screen_engine.make_state(
                     beta_full, jnp.asarray(lam_vec, X.dtype))
         # basic variants keep `state` pinned at λmax (paper §4.1.1)
+    # Unified result: the leading batch axis is ALWAYS present (B = 1 for a
+    # single query — the values are bit-identical to the squeezed layout).
     if batch is None:
-        return PathResult(lambdas=lambdas, betas=betas[0], stats=stats,
-                          masks=masks[0])
-    return BatchPathResult(lambdas=lambdas, betas=betas, stats=stats,
-                           masks=masks)
+        lambdas = lambdas[None, :]
+    return PathResult(lambdas=lambdas, betas=betas, stats=stats, masks=masks)
 
 
-def lasso_path(X, y, lambdas, cfg: PathConfig = PathConfig(), *,
-               geometry=None) -> PathResult:
-    """Solve the Lasso along a decreasing λ grid with screening.
+# ---------------------------------------------------------------------------
+# Deprecated entry points. Each is a thin shim over ONE front door —
+# repro.core.session.LassoSession — kept for source compatibility: a fresh
+# session per call reproduces the old behaviour exactly (screen masks
+# bit-identical on grid points strictly inside (0, λ_max) — tested in
+# tests/test_session.py). Fit-once / query-many callers should hold a
+# session instead: docs/api.md#migrating-from-the-old-entry-points.
+# ---------------------------------------------------------------------------
 
-    `lambdas` must be sorted decreasing and ≤ λmax for sequential rules to be
-    valid (the theorems require λ ≤ λ₀). Pass ``geometry`` (a
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.{old} is deprecated; use {new} (see docs/api.md)",
+        DeprecationWarning, stacklevel=3)
+
+
+def lasso_path(X, y, lambdas, cfg=None, *, geometry=None) -> PathResult:
+    """DEPRECATED shim over :class:`~repro.core.session.LassoSession`.
+
+    Solve the Lasso along a decreasing λ grid with screening. `lambdas`
+    must be sorted decreasing and ≤ λmax for sequential rules to be valid
+    (the theorems require λ ≤ λ₀). Pass ``geometry`` (a
     :class:`repro.core.engine.DictionaryGeometry`) to reuse a prefitted
-    dictionary across many calls (the serving loop does this).
+    dictionary across many calls — or better, hold a ``LassoSession``.
+    Returns the squeezed single-query layout (betas (K, p)).
     """
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    screen_engine = ScreeningEngine(X, y, backend=cfg.backend, eps=cfg.eps,
-                                    geometry=geometry)
-    solver_engine = SolverEngine(
-        y, solver=cfg.solver, backend=cfg.solver_backend,
-        tol=cfg.solver_tol, max_iter=cfg.max_iter,
-        gap_check_cadence=cfg.gap_check_cadence)
-
-    def kkt_fn(beta_full, lam, discard):
-        return _kkt_violations(X, y, beta_full, lam, discard, cfg.kkt_tol)
-
-    return _path_driver(
-        X, y, lambdas, cfg, m=1, screen_engine=screen_engine,
-        solver_engine=solver_engine,
-        need_kkt=cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid,
-        kkt_fn=kkt_fn)
+    from .session import LassoSession
+    _deprecated("lasso_path", "LassoSession.fit(X).path(y)")
+    sess = LassoSession.fit(X, config=cfg, geometry=geometry)
+    return sess.path(jnp.asarray(y), lambdas).squeeze()
 
 
-def lasso_path_batched(X, Y, lambdas=None, cfg: PathConfig = PathConfig(),
-                       *, num_lambdas: int = 100, lo_frac: float = 0.05,
-                       geometry=None) -> BatchPathResult:
-    """Solve B Lasso paths against ONE fitted dictionary, batched end-to-end.
+def lasso_path_batched(X, Y, lambdas=None, cfg=None, *,
+                       num_lambdas: int = 100, lo_frac: float = 0.05,
+                       geometry=None) -> PathResult:
+    """DEPRECATED shim over :class:`~repro.core.session.LassoSession`.
 
-    ``Y`` is (B, n); ``lambdas`` is either a (B, K) array of per-query
-    decreasing grids, a shared (K,) grid (broadcast to every query), or
-    None — then each query gets the paper's grid over its own λ_max
-    (``lambda_grid(lam_max_b, num_lambdas, lo_frac)``). Each grid step runs
-    ONE fused screen over X for the whole batch and one batched reduced
-    solve on the union of surviving features (per-query validity masks and
-    convergence freezing — see ``SolverEngine.solve_batched``), so the HBM
-    cost per query is amortised ~1/B (``PathStepStats.x_passes_per_query``).
-
-    Per-query screening masks are exactly the single-query masks: the
-    batched result's ``masks[b]``/``betas[b]`` reproduce
-    ``lasso_path(X, Y[b], lambdas[b], cfg)`` (masks bit-for-bit for safe
-    rules, β to solver tolerance — property-tested).
+    Solve B Lasso paths against ONE fitted dictionary, batched end-to-end.
+    ``Y`` is (B, n); ``lambdas`` is a (B, K) array of per-query decreasing
+    grids, a shared (K,) grid (broadcast), or None — then each query gets
+    the paper's grid over its own λ_max. Returns the unified (batched)
+    :class:`PathResult`. See ``LassoSession.path`` for the full contract.
     """
-    X = jnp.asarray(X)
+    from .session import LassoSession
+    _deprecated("lasso_path_batched", "LassoSession.fit(X).path(Y)")
     Y = jnp.asarray(Y)
     assert Y.ndim == 2, "lasso_path_batched needs Y of shape (B, n)"
-    B = Y.shape[0]
-    screen_engine = ScreeningEngine(X, Y, backend=cfg.backend, eps=cfg.eps,
-                                    geometry=geometry)
-    if lambdas is None:
-        lambdas = np.stack([
-            lambda_grid(float(lm), num=num_lambdas, lo_frac=lo_frac)
-            for lm in np.atleast_1d(screen_engine.lam_max)])
-    else:
-        lambdas = np.asarray(lambdas, dtype=np.float64)
-        if lambdas.ndim == 1:
-            lambdas = np.broadcast_to(lambdas, (B, lambdas.shape[0])).copy()
-    solver_engine = SolverEngine(
-        Y, solver=cfg.solver, backend=cfg.solver_backend,
-        tol=cfg.solver_tol, max_iter=cfg.max_iter,
-        gap_check_cadence=cfg.gap_check_cadence)
-
-    def kkt_fn(beta_full, lam, discard):
-        return _kkt_violations(X, Y, beta_full, lam, discard, cfg.kkt_tol)
-
-    return _path_driver(
-        X, Y, lambdas, cfg, m=1, screen_engine=screen_engine,
-        solver_engine=solver_engine,
-        need_kkt=cfg.rule in scr.HEURISTIC_RULES or cfg.paranoid,
-        kkt_fn=kkt_fn, batch=B)
+    sess = LassoSession.fit(X, config=cfg, geometry=geometry)
+    return sess.path(Y, lambdas, num_lambdas=num_lambdas, lo_frac=lo_frac)
 
 
-def group_lasso_path(X, y, m: int, lambdas,
-                     cfg: GroupPathConfig = GroupPathConfig()) -> PathResult:
-    """Group-Lasso along a decreasing grid with group-EDPP screening.
+def group_lasso_path(X, y, m: int, lambdas, cfg=None) -> PathResult:
+    """DEPRECATED shim over :class:`~repro.core.session.LassoSession`.
 
-    Groups are contiguous with equal size ``m``; reduction gathers whole
-    groups into power-of-two group buckets.
+    Group-Lasso along a decreasing grid with group-EDPP screening. Groups
+    are contiguous with equal size ``m``; reduction gathers whole groups
+    into power-of-two group buckets. Returns the squeezed layout.
     """
-    X = jnp.asarray(X)
-    y = jnp.asarray(y)
-    screen_engine = GroupScreeningEngine(X, y, m, backend=cfg.backend,
-                                         eps=cfg.eps)
-    solver_engine = SolverEngine(
-        y, solver=cfg.solver, backend=cfg.solver_backend,
-        tol=cfg.solver_tol, max_iter=cfg.max_iter,
-        gap_check_cadence=cfg.gap_check_cadence)
-
-    def kkt_fn(beta_full, lam, discard):
-        return _group_kkt_violations(X, y, beta_full, lam, discard, m,
-                                     cfg.kkt_tol)
-
-    return _path_driver(
-        X, y, lambdas, cfg, m=m, screen_engine=screen_engine,
-        solver_engine=solver_engine,
-        need_kkt=cfg.rule == "strong" or cfg.paranoid,
-        kkt_fn=kkt_fn)
+    from .session import LassoSession
+    _deprecated("group_lasso_path", "LassoSession.fit(X, groups=m).path(y)")
+    sess = LassoSession.fit(X, groups=m, config=cfg)
+    return sess.path(jnp.asarray(y), lambdas).squeeze()

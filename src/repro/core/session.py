@@ -1,0 +1,619 @@
+"""LassoSession: ONE front door for every Lasso path workload.
+
+The paper's geometry splits cleanly into a **fit-once** part (everything
+that depends on the dictionary X alone: ‖x_j‖², the column norms, the
+group spectral norms, the Lipschitz machinery) and a **query-many** part
+(|Xᵀy|, λ_max, the dual trajectory of one response vector). PR 3 built
+that split internally (:class:`~repro.core.engine.DictionaryGeometry` +
+batched workspaces) but the public API still exposed five parallel entry
+points (``lasso_path``, ``lasso_path_batched``, ``group_lasso_path``, the
+``dist_*`` suite, serve's hand-wiring) with twin configs that each re-fit
+and re-plumb that state. This module is the redesign:
+
+    sess = LassoSession.fit(X, config=PathConfig(
+        screen=ScreenSpec(rule="edpp"),
+        solve=SolveSpec(strategy="fista", tol=1e-8)))
+    res  = sess.path(y)         # (n,)   -> single-query path, B = 1
+    res  = sess.path(Y)         # (B, n) -> batched multi-query path
+    one  = res.squeeze()        # drop the batch axis of a B = 1 result
+
+Dispatch is purely structural — input rank picks single vs batched,
+``fit(..., groups=m)`` picks the group drivers, ``fit(..., mesh=mesh)``
+places the dictionary column-sharded on the mesh (GSPMD inserts the
+collectives; backends are pinned to ``jnp``). Every call returns the same
+unified :class:`~repro.core.path.PathResult` with a leading batch axis.
+
+The session owns, across every ``path`` call:
+
+  * the fitted dictionary geometry per backend (the fused workspace pass
+    over X runs EXACTLY once per session — ``session.fit_passes``;
+    per-query attach is one matvec pass, ``geometry.query_passes``);
+  * the resolved screen/solver backends;
+  * the per-bucket Lipschitz eigenpair cache shared by every
+    :class:`~repro.core.solver.SolverEngine` the session builds (the kept
+    sets drift slowly between queries of one dictionary, so cached
+    eigenvectors stay excellent warm starts);
+  * the optional mesh placement.
+
+Configs are declarative specs on the problem object (the hybrid
+safe-strong framing of Zeng et al. 2017; the GAP-safe rules of Fercoq et
+al. 2015 are one ``ScreenSpec(rule="gap")`` away): :class:`ScreenSpec`
+(rule + backend + the hybrid strong-rule toggle) and :class:`SolveSpec`
+(strategy + backend + tol/cadence) compose into ONE :class:`PathConfig`,
+validated at construction. The old flat keyword form
+(``PathConfig(rule="edpp", solver_tol=1e-9)``) keeps working — legacy
+names route into the specs — and ``GroupPathConfig`` is a deprecated
+factory for group defaults. The old entry points live on as deprecation
+shims in :mod:`repro.core.path` that build a session internally and
+reproduce the old masks bit-for-bit. See docs/api.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from . import screening as scr
+from .engine import (
+    DictionaryGeometry,
+    GroupDictionaryGeometry,
+    GroupScreeningEngine,
+    ScreeningEngine,
+    resolve_backend,
+)
+from .path import (
+    PathResult,
+    PathStepStats,
+    _group_kkt_violations,
+    _kkt_violations,
+    _path_driver,
+    lambda_grid,
+)
+from .solver import SOLVERS, SolverEngine
+
+# Every rule the engines dispatch (core/screening.py RULES + the non-sphere
+# tests). The group engine supports the {edpp, strong, none} subset.
+KNOWN_RULES = tuple(scr.RULES) + ("safe", "dome", "none")
+GROUP_RULES = ("edpp", "strong", "none")
+
+
+def _check_group_rule(cfg: "PathConfig") -> None:
+    """The group engine implements only the GROUP_RULES subset; anything
+    else would silently run group-EDPP under the wrong name."""
+    if cfg.screen.rule not in GROUP_RULES:
+        raise ValueError(
+            f"group sessions support rules {GROUP_RULES}, got "
+            f"{cfg.screen.rule!r}")
+
+
+def _check_backend(name, what: str) -> None:
+    if name is None or isinstance(name, ops.ScreenBackend):
+        return
+    if name not in ops.BACKENDS:
+        raise ValueError(
+            f"unknown {what} backend {name!r}; available: "
+            f"{tuple(ops.BACKENDS)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScreenSpec:
+    """Declarative screening choice: which rule, where it runs, how it is
+    backstopped. Validated at construction.
+
+    ``strong=True`` turns on the **hybrid safe+strong** screen (Zeng et
+    al. 2017): the heuristic strong-rule discards are OR-ed into the safe
+    rule's each step (one extra streaming pass over X) and the KKT
+    violation loop is forced on as the exactness backstop — tighter
+    screening deep in the path without giving up the safe contract.
+    """
+
+    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|gap|safe|dome|strong|none
+    backend: str | ops.ScreenBackend | None = None  # None = auto-detect
+    sequential: bool = True       # False = "basic" variants (state at λmax)
+    strong: bool = False          # hybrid safe+strong toggle (see above)
+    eps: float = scr.EPS_DEFAULT
+    paranoid: bool = False        # run the KKT loop even for safe rules
+    kkt_tol: float = 1e-4
+    max_kkt_rounds: int = 10
+
+    def __post_init__(self):
+        if self.rule not in KNOWN_RULES:
+            raise ValueError(f"unknown screening rule {self.rule!r}; "
+                             f"available: {KNOWN_RULES}")
+        _check_backend(self.backend, "screening")
+        if self.eps < 0:
+            raise ValueError(f"eps must be ≥ 0, got {self.eps}")
+        if self.kkt_tol <= 0:
+            raise ValueError(f"kkt_tol must be > 0, got {self.kkt_tol}")
+        if self.max_kkt_rounds < 0:
+            raise ValueError("max_kkt_rounds must be ≥ 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """Declarative solver choice for the reduced problems. Validated at
+    construction against the live ``SOLVERS`` registry.
+
+    ``strategy=None`` resolves per problem: ``fista`` for the Lasso,
+    ``group_fista`` when the session is fitted with ``groups=m``.
+    ``bucket_min=None`` resolves to 32 features / 16 groups.
+    """
+
+    strategy: str | None = None
+    backend: str | ops.ScreenBackend | None = None  # None = auto-detect
+    tol: float = 1e-8             # relative duality-gap stop
+    max_iter: int = 5000
+    gap_check_cadence: int = 10   # duality-gap check every k iterations
+    bucket_min: int | None = None
+
+    def __post_init__(self):
+        if self.strategy is not None and self.strategy not in SOLVERS:
+            raise ValueError(f"unknown solver strategy {self.strategy!r}; "
+                             f"available: {tuple(SOLVERS)}")
+        _check_backend(self.backend, "solver")
+        if not self.tol > 0:
+            raise ValueError(f"tol must be > 0, got {self.tol}")
+        if self.max_iter < 1:
+            raise ValueError("max_iter must be ≥ 1")
+        if self.gap_check_cadence < 1:
+            raise ValueError("gap_check_cadence must be ≥ 1")
+        if self.bucket_min is not None and self.bucket_min < 1:
+            raise ValueError("bucket_min must be ≥ 1")
+
+    def resolved_strategy(self, m: int = 1) -> str:
+        return self.strategy or ("group_fista" if m > 1 else "fista")
+
+
+# Legacy flat keyword → (spec field) routing. The old PathConfig and
+# GroupPathConfig fields all keep working as keyword arguments.
+_SCREEN_KW = {
+    "rule": "rule", "backend": "backend", "sequential": "sequential",
+    "eps": "eps", "paranoid": "paranoid", "kkt_tol": "kkt_tol",
+    "max_kkt_rounds": "max_kkt_rounds", "hybrid_strong": "strong",
+}
+_SOLVE_KW = {
+    "solver": "strategy", "solver_backend": "backend", "solver_tol": "tol",
+    "max_iter": "max_iter", "gap_check_cadence": "gap_check_cadence",
+    "bucket_min": "bucket_min",
+}
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class PathConfig:
+    """THE path configuration: a :class:`ScreenSpec` + a :class:`SolveSpec`
+    (+ an optional per-step checkpoint hook), validated at construction.
+
+    Two equivalent spellings::
+
+        PathConfig(screen=ScreenSpec(rule="edpp", backend="pallas"),
+                   solve=SolveSpec(strategy="cd", tol=1e-9))
+        PathConfig(rule="edpp", backend="pallas", solver="cd",
+                   solver_tol=1e-9)                  # legacy flat keywords
+
+    The flat keywords are the old ``PathConfig``/``GroupPathConfig``
+    fields; they route into the specs (``solver``→``solve.strategy``,
+    ``solver_tol``→``solve.tol``, ``hybrid_strong``→``screen.strong``, …)
+    and read back through properties, so existing call sites keep working
+    unchanged. Group paths need no twin config any more — group defaults
+    (``group_fista``, group buckets) resolve from the session's
+    ``groups=m`` at fit time.
+    """
+
+    screen: ScreenSpec
+    solve: SolveSpec
+    checkpoint_fn: Callable | None  # called with (k, lam, beta) per step
+
+    def __init__(self, screen: ScreenSpec | None = None,
+                 solve: SolveSpec | None = None,
+                 checkpoint_fn: Callable | None = None, **legacy):
+        screen = screen if screen is not None else ScreenSpec()
+        solve = solve if solve is not None else SolveSpec()
+        if not isinstance(screen, ScreenSpec):
+            raise TypeError(f"screen must be a ScreenSpec, got {screen!r}")
+        if not isinstance(solve, SolveSpec):
+            raise TypeError(f"solve must be a SolveSpec, got {solve!r}")
+        s_kw = {}
+        v_kw = {}
+        for k, v in legacy.items():
+            if k in _SCREEN_KW:
+                s_kw[_SCREEN_KW[k]] = v
+            elif k in _SOLVE_KW:
+                v_kw[_SOLVE_KW[k]] = v
+            else:
+                raise TypeError(f"PathConfig got an unknown field {k!r}")
+        if s_kw:
+            screen = dataclasses.replace(screen, **s_kw)
+        if v_kw:
+            solve = dataclasses.replace(solve, **v_kw)
+        object.__setattr__(self, "screen", screen)
+        object.__setattr__(self, "solve", solve)
+        object.__setattr__(self, "checkpoint_fn", checkpoint_fn)
+
+    # ---- legacy flat accessors (the path driver and old call sites) -----
+    @property
+    def rule(self) -> str:
+        return self.screen.rule
+
+    @property
+    def backend(self):
+        return self.screen.backend
+
+    @property
+    def sequential(self) -> bool:
+        return self.screen.sequential
+
+    @property
+    def hybrid_strong(self) -> bool:
+        return self.screen.strong
+
+    @property
+    def eps(self) -> float:
+        return self.screen.eps
+
+    @property
+    def paranoid(self) -> bool:
+        return self.screen.paranoid
+
+    @property
+    def kkt_tol(self) -> float:
+        return self.screen.kkt_tol
+
+    @property
+    def max_kkt_rounds(self) -> int:
+        return self.screen.max_kkt_rounds
+
+    @property
+    def solver(self) -> str:
+        return self.solve.strategy or "fista"
+
+    @property
+    def solver_backend(self):
+        return self.solve.backend
+
+    @property
+    def solver_tol(self) -> float:
+        return self.solve.tol
+
+    @property
+    def max_iter(self) -> int:
+        return self.solve.max_iter
+
+    @property
+    def gap_check_cadence(self) -> int:
+        return self.solve.gap_check_cadence
+
+    @property
+    def bucket_min(self) -> int | None:
+        return self.solve.bucket_min
+
+
+def GroupPathConfig(**kw) -> PathConfig:
+    """DEPRECATED: the group twin config folded into :class:`PathConfig`.
+
+    Returns a PathConfig with the old group defaults
+    (``solver="group_fista"``, ``bucket_min=16`` groups). New code should
+    pass a plain PathConfig to ``LassoSession.fit(X, groups=m)`` — group
+    defaults resolve from ``groups`` automatically.
+    """
+    warnings.warn(
+        "repro.core.GroupPathConfig is deprecated; use PathConfig with "
+        "LassoSession.fit(X, groups=m) (see docs/api.md)",
+        DeprecationWarning, stacklevel=2)
+    kw.setdefault("solver", "group_fista")
+    kw.setdefault("bucket_min", 16)
+    return PathConfig(**kw)
+
+
+class LassoSession:
+    """A fitted dictionary + resolved engine choices; query it many times.
+
+    Construct with :meth:`fit` (the ``__init__`` is not public API)::
+
+        sess = LassoSession.fit(X)                  # fused fit pass, ONCE
+        res  = sess.path(y, lambdas)                # single query
+        res  = sess.path(Y)                         # (B, n): batched
+        grp  = LassoSession.fit(X, groups=m)        # group Lasso
+        dist = LassoSession.fit(X, mesh=mesh)       # column-sharded X
+
+    Every result is the unified :class:`~repro.core.path.PathResult` with
+    a leading batch axis (``squeeze()`` for B = 1). ``path`` accepts a
+    per-call ``config=`` override — geometry and the Lipschitz cache stay
+    shared, so A/B-ing rules or solvers against one fitted dictionary is
+    free of re-fits (what benchmarks/common.py does).
+    """
+
+    def __init__(self, *a, **k):
+        raise TypeError("LassoSession is constructed with "
+                        "LassoSession.fit(X, ...)")
+
+    # ------------------------------------------------------------------ fit
+    @classmethod
+    def fit(cls, X, *, groups: int | None = None, mesh=None,
+            config: PathConfig | None = None,
+            geometry=None) -> "LassoSession":
+        """Fit the dictionary side of the problem, once.
+
+        ``groups=m`` switches every subsequent ``path`` call to the group
+        drivers (contiguous groups of size m). ``mesh`` places X
+        column-sharded over every mesh axis (queries replicated); the
+        engines are pinned to the GSPMD-friendly ``jnp`` backend. Pass
+        ``geometry`` (a prefitted :class:`DictionaryGeometry`) to adopt an
+        existing fit instead of running one.
+        """
+        cfg = config if config is not None else PathConfig()
+        if not isinstance(cfg, PathConfig):
+            raise TypeError(
+                f"config must be a PathConfig, got {type(cfg).__name__} "
+                "(the old GroupPathConfig is now a PathConfig factory)")
+        m = 1 if groups is None else int(groups)
+        if m < 1:
+            raise ValueError(f"groups must be ≥ 1, got {groups}")
+        if m > 1:
+            _check_group_rule(cfg)
+        if mesh is not None and geometry is not None:
+            raise ValueError(
+                "mesh= and geometry= cannot be combined: an adopted "
+                "geometry was fitted off-mesh, so its X would silently "
+                "bypass the column-sharded placement")
+
+        self = object.__new__(cls)
+        self.config = cfg
+        self.groups = m
+        self.mesh = mesh
+        if mesh is not None:
+            for what, b in (("screening", cfg.screen.backend),
+                            ("solver", cfg.solve.backend)):
+                if isinstance(b, str) and b != "jnp":
+                    raise ValueError(
+                        f"mesh sessions run GSPMD with the jnp backend; "
+                        f"got {what} backend {b!r}")
+            from . import distributed as dist
+            X = dist.place_dictionary(mesh, X)
+        self.X = jnp.asarray(X)
+        if self.X.ndim != 2:
+            raise ValueError(f"X must be (n, p), got shape {self.X.shape}")
+        if self.X.shape[1] % m:
+            raise ValueError(f"p={self.X.shape[1]} is not divisible by "
+                             f"groups={m}")
+        self._geometries: dict[str, object] = {}
+        self._eig_cache: dict[int, object] = {}
+        if geometry is not None:
+            if m > 1:
+                raise ValueError("geometry= adoption is for the plain "
+                                 "Lasso (groups=None)")
+            self.X = geometry.X
+            self._geometries[geometry.backend.name] = geometry
+            self._default_backend = geometry.backend.name
+        else:
+            self._default_backend = self._backend_name(cfg.screen.backend)
+            self._geometry(self._default_backend)   # the one fused fit pass
+        return self
+
+    def _backend_name(self, backend) -> str:
+        if isinstance(backend, ops.ScreenBackend):
+            return backend.name
+        if self.mesh is not None and backend is None:
+            return "jnp"
+        return resolve_backend(backend).name
+
+    def _geometry(self, backend=None):
+        """The fitted geometry for a backend (built on first use, cached)."""
+        b = backend if backend is not None else self._default_backend
+        name = self._backend_name(b)
+        geom = self._geometries.get(name)
+        if geom is None:
+            if self.groups > 1:
+                geom = GroupDictionaryGeometry(self.X, self.groups, name)
+            else:
+                geom = DictionaryGeometry(self.X, name)
+            self._geometries[name] = geom
+        return geom
+
+    # ---------------------------------------------------------- properties
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.X.shape
+
+    @property
+    def geometry(self):
+        """The default-backend fitted geometry (Dictionary- or
+        GroupDictionaryGeometry)."""
+        return self._geometries[self._default_backend]
+
+    @property
+    def backend_name(self) -> str:
+        return self._default_backend
+
+    @property
+    def fit_passes(self) -> int:
+        """Fused workspace passes over X this session has run — exactly one
+        per (backend, session), however many ``path`` calls were made."""
+        return sum(g.fit_passes for g in self._geometries.values())
+
+    @property
+    def query_passes(self) -> int:
+        """Cheap per-query |XᵀY| attach passes (one per ``path`` call)."""
+        return sum(g.query_passes for g in self._geometries.values())
+
+    # ----------------------------------------------------------------- path
+    def path(self, Y, lambdas=None, *, num_lambdas: int = 100,
+             lo_frac: float = 0.05, hi_frac: float = 1.0,
+             config: PathConfig | None = None) -> PathResult:
+        """Solve the λ-path(s) for one query or a batch, with screening.
+
+        Dispatch is structural: ``Y`` of shape (n,) runs the single-query
+        driver, (B, n) the batched driver (one fused screen over X per
+        grid step for the whole batch); a session fitted with ``groups=m``
+        uses the group drivers; a session fitted with ``mesh`` runs on the
+        placed (column-sharded) dictionary.
+
+        ``lambdas`` is a decreasing grid — (K,) shared, (B, K) per-query —
+        or None for the paper's grid over each query's own λ_max
+        (``lambda_grid(λ_max, num_lambdas, lo_frac, hi_frac)``). Returns
+        the unified :class:`PathResult`, leading batch axis always present
+        (B = 1 for a single query; ``squeeze()`` drops it).
+        """
+        cfg = config if config is not None else self.config
+        if not isinstance(cfg, PathConfig):
+            raise TypeError(f"config must be a PathConfig, got "
+                            f"{type(cfg).__name__}")
+        Y = jnp.asarray(Y)
+        if self.mesh is not None:
+            from . import distributed as dist
+            Y = dist.place_queries(self.mesh, Y)
+        if Y.ndim not in (1, 2):
+            raise ValueError(
+                f"queries must be (n,) or (B, n), got shape {Y.shape}")
+        if Y.shape[-1] != self.X.shape[0]:
+            raise ValueError(
+                f"query length {Y.shape[-1]} != dictionary rows "
+                f"{self.X.shape[0]}")
+        grid_kw = dict(num=num_lambdas, lo_frac=lo_frac, hi_frac=hi_frac)
+        if self.groups > 1:
+            _check_group_rule(cfg)     # per-call overrides validate too
+            if Y.ndim == 1:
+                return self._group_path(Y, lambdas, cfg, grid_kw)
+            return self._group_path_batched(Y, lambdas, cfg, grid_kw)
+        if Y.ndim == 1:
+            return self._lasso_path(Y, lambdas, cfg, grid_kw)
+        return self._lasso_path_batched(Y, lambdas, cfg, grid_kw)
+
+    # ------------------------------------------------------------- drivers
+    def _solver_engine(self, y, cfg: PathConfig) -> SolverEngine:
+        backend = cfg.solve.backend
+        if self.mesh is not None and backend is None:
+            backend = "jnp"
+        return SolverEngine(
+            y, solver=cfg.solve.resolved_strategy(self.groups),
+            backend=backend, tol=cfg.solve.tol, max_iter=cfg.solve.max_iter,
+            gap_check_cadence=cfg.solve.gap_check_cadence,
+            eig_cache=self._eig_cache)
+
+    def _need_kkt(self, cfg: PathConfig) -> bool:
+        rule = cfg.screen.rule
+        heuristic = (rule in scr.HEURISTIC_RULES if self.groups == 1
+                     else rule == "strong")
+        hybrid = cfg.screen.strong and rule not in ("strong", "none")
+        return heuristic or hybrid or cfg.screen.paranoid
+
+    def _lasso_path(self, y, lambdas, cfg, grid_kw) -> PathResult:
+        eng = ScreeningEngine(self.X, y, eps=cfg.screen.eps,
+                              geometry=self._geometry(cfg.screen.backend))
+        if lambdas is None:
+            lambdas = lambda_grid(float(eng.lam_max), **grid_kw)
+        solver = self._solver_engine(y, cfg)
+        X = self.X
+
+        def kkt_fn(beta_full, lam, discard):
+            return _kkt_violations(X, y, beta_full, lam, discard,
+                                   cfg.screen.kkt_tol)
+
+        return _path_driver(
+            X, y, lambdas, cfg, m=1, screen_engine=eng,
+            solver_engine=solver, need_kkt=self._need_kkt(cfg),
+            kkt_fn=kkt_fn)
+
+    def _lasso_path_batched(self, Y, lambdas, cfg, grid_kw) -> PathResult:
+        B = Y.shape[0]
+        eng = ScreeningEngine(self.X, Y, eps=cfg.screen.eps,
+                              geometry=self._geometry(cfg.screen.backend))
+        if lambdas is None:
+            lambdas = np.stack([
+                lambda_grid(float(lm), **grid_kw)
+                for lm in np.atleast_1d(eng.lam_max)])
+        else:
+            lambdas = np.asarray(lambdas, dtype=np.float64)
+            if lambdas.ndim == 1:
+                lambdas = np.broadcast_to(
+                    lambdas, (B, lambdas.shape[0])).copy()
+        solver = self._solver_engine(Y, cfg)
+        X = self.X
+
+        def kkt_fn(beta_full, lam, discard):
+            return _kkt_violations(X, Y, beta_full, lam, discard,
+                                   cfg.screen.kkt_tol)
+
+        return _path_driver(
+            X, Y, lambdas, cfg, m=1, screen_engine=eng,
+            solver_engine=solver, need_kkt=self._need_kkt(cfg),
+            kkt_fn=kkt_fn, batch=B)
+
+    def _group_path(self, y, lambdas, cfg, grid_kw) -> PathResult:
+        m = self.groups
+        eng = GroupScreeningEngine(self.X, y, m, eps=cfg.screen.eps,
+                                   geometry=self._geometry(cfg.screen.backend))
+        if lambdas is None:
+            lambdas = lambda_grid(float(eng.lam_max), **grid_kw)
+        solver = self._solver_engine(y, cfg)
+        X = self.X
+
+        def kkt_fn(beta_full, lam, discard):
+            return _group_kkt_violations(X, y, beta_full, lam, discard, m,
+                                         cfg.screen.kkt_tol)
+
+        return _path_driver(
+            X, y, lambdas, cfg, m=m, screen_engine=eng,
+            solver_engine=solver, need_kkt=self._need_kkt(cfg),
+            kkt_fn=kkt_fn)
+
+    def _group_path_batched(self, Y, lambdas, cfg, grid_kw) -> PathResult:
+        """B group paths against one fitted dictionary.
+
+        There is no fused batched group kernel (yet), so this loops the
+        single-query group driver — but the expensive fit (spectral norms)
+        is shared through the session geometry, and the result comes back
+        in the same unified batched layout as the Lasso drivers, with
+        per-step stats merged across the batch (additive telemetry summed,
+        ``batch_size=B``).
+        """
+        B = Y.shape[0]
+        if lambdas is not None:
+            lam_arr = np.asarray(lambdas, dtype=np.float64)
+            if lam_arr.ndim == 1:
+                lam_arr = np.broadcast_to(
+                    lam_arr, (B, lam_arr.shape[0])).copy()
+            per_query = [lam_arr[b] for b in range(B)]
+        else:
+            per_query = [None] * B
+        results = [self._group_path(Y[b], per_query[b], cfg, grid_kw)
+                   for b in range(B)]
+        K = results[0].betas.shape[1]
+        stats = [_merge_step_stats([r.stats[k] for r in results])
+                 for k in range(K)]
+        return PathResult(
+            lambdas=np.stack([r.lambdas[0] for r in results]),
+            betas=np.stack([r.betas[0] for r in results]),
+            stats=stats,
+            masks=np.stack([r.masks[0] for r in results]))
+
+
+def _merge_step_stats(steps: list[PathStepStats]) -> PathStepStats:
+    """Merge one grid step's per-query stats into a batch-shaped entry:
+    additive telemetry (times, passes, checks) sums, worst-case fields
+    (iters, gap, kkt rounds, bucket) max, ``batch_size`` = B."""
+    B = len(steps)
+    x_passes = sum(s.x_passes for s in steps)
+    return PathStepStats(
+        lam=max(s.lam for s in steps),
+        n_discarded=min(s.n_discarded for s in steps),
+        n_kept=max(s.n_kept for s in steps),
+        solver_iters=max(s.solver_iters for s in steps),
+        gap=max(s.gap for s in steps),
+        kkt_rounds=max(s.kkt_rounds for s in steps),
+        screen_time_s=sum(s.screen_time_s for s in steps),
+        solve_time_s=sum(s.solve_time_s for s in steps),
+        x_passes=x_passes,
+        gap_checks=sum(s.gap_checks for s in steps),
+        gram_step_frac=float(np.mean([s.gram_step_frac for s in steps])),
+        solver_backend=steps[0].solver_backend,
+        bucket=max(s.bucket for s in steps),
+        solver_x_passes=sum(s.solver_x_passes for s in steps),
+        batch_size=B,
+        queries_converged=sum(s.queries_converged for s in steps),
+        x_passes_per_query=x_passes / B,
+    )

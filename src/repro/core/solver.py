@@ -560,7 +560,7 @@ class SolverEngine:
                  tol: float = 1e-8, max_iter: int = 5000,
                  gap_check_cadence: int = 10,
                  power_iters: int = 50, warm_power_iters: int = 16,
-                 seed: int = 0):
+                 seed: int = 0, eig_cache: dict | None = None):
         if solver not in SOLVERS:
             raise ValueError(f"unknown solver {solver!r}; "
                              f"available: {available_solvers()}")
@@ -573,7 +573,12 @@ class SolverEngine:
         self.power_iters = power_iters
         self.warm_power_iters = warm_power_iters
         self.seed = seed
-        self._eig_cache: dict[int, jax.Array] = {}
+        # ``eig_cache`` lets a LassoSession share the per-bucket Lipschitz
+        # warm starts across many engines (one per query batch): the kept
+        # sets drift slowly between queries of the same dictionary, so the
+        # cached eigenvector stays an excellent start.
+        self._eig_cache: dict[int, jax.Array] = (
+            eig_cache if eig_cache is not None else {})
         self.n_solves = 0
         self.gram_solves = 0
         self.total_gap_checks = 0

@@ -1,0 +1,78 @@
+"""Shared CLI wiring for the launch drivers (solve.py, serve.py).
+
+The two drivers used to copy-paste the same flag blocks (problem shape,
+engine/backend selection, precision, seed). This module is the one place
+they are defined:
+
+  * :func:`add_problem_args`   — ``--n --p --nnz --corr --seed``
+  * :func:`add_engine_args`    — ``--rule --solver --backend
+                                 --solver-backend``
+  * :func:`add_x64_arg`        — ``--x64 / --no-x64`` (per-driver default:
+                                 solve.py defaults ON for repro-grade
+                                 float64 paths, serve.py OFF for f32
+                                 serving)
+  * :func:`setup_jax`          — applies the x64 choice BEFORE any jax
+                                 import touches arrays (call it first in
+                                 ``main``)
+  * :func:`path_config`        — a :class:`repro.core.PathConfig` from the
+                                 parsed flags (imports repro.core, so only
+                                 call it after :func:`setup_jax`)
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def add_problem_args(ap: argparse.ArgumentParser, *, n: int, p: int,
+                     nnz: int, corr: float = 0.0, seed: int = 0) -> None:
+    """Synthetic problem shape flags (paper §4.1.2 recipe, eq. 74)."""
+    ap.add_argument("--n", type=int, default=n)
+    ap.add_argument("--p", type=int, default=p)
+    ap.add_argument("--nnz", type=int, default=nnz)
+    ap.add_argument("--corr", type=float, default=corr)
+    ap.add_argument("--seed", type=int, default=seed)
+
+
+def add_engine_args(ap: argparse.ArgumentParser, *, rule: str = "edpp",
+                    solver: str = "fista") -> None:
+    """Screen/solve spec flags, shared verbatim by solve and serve."""
+    ap.add_argument("--rule", default=rule,
+                    help="screening rule (edpp|dpp|gap|strong|none|...)")
+    ap.add_argument("--solver", default=solver,
+                    help="any registered solver strategy (fista|cd|...)")
+    ap.add_argument("--backend", default=None,
+                    help="screening backend: pallas|interpret|jnp "
+                         "(default: auto / REPRO_SCREEN_BACKEND)")
+    ap.add_argument("--solver-backend", default=None,
+                    help="pallas|interpret|jnp (default: auto / "
+                         "REPRO_SOLVER_BACKEND)")
+
+
+def add_x64_arg(ap: argparse.ArgumentParser, *, default: bool) -> None:
+    ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
+                    default=default,
+                    help="float64 solves (solve.py defaults on for repro; "
+                         "serve.py defaults off — the f32 serving config)")
+
+
+def setup_jax(args) -> None:
+    """Apply ``--x64`` before any jax array exists. Call first in main()."""
+    import jax
+    jax.config.update("jax_enable_x64", bool(args.x64))
+
+
+def path_config(args, *, solver_tol: float | None = None, **extra):
+    """Build the session PathConfig from the shared flags.
+
+    Imports repro.core — only call after :func:`setup_jax`. ``extra`` is
+    merged as legacy flat keywords (e.g. ``checkpoint_fn=...``).
+    """
+    from repro.core import PathConfig, ScreenSpec, SolveSpec
+    solve_kw = {"strategy": args.solver, "backend": args.solver_backend}
+    if solver_tol is not None:
+        solve_kw["tol"] = solver_tol
+    return PathConfig(
+        screen=ScreenSpec(rule=args.rule,
+                          backend=getattr(args, "backend", None)),
+        solve=SolveSpec(**solve_kw), **extra)

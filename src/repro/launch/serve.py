@@ -1,16 +1,16 @@
 """Micro-batched Lasso query serving: one fitted dictionary, a stream of y's.
 
 The north-star workload (ROADMAP): the dictionary X is fixed — fitted once
-into a device-resident :class:`~repro.core.engine.DictionaryGeometry` — and
-response vectors arrive as a request stream (millions of users, each their
-own y). This driver:
+into a device-resident :class:`repro.core.LassoSession` — and response
+vectors arrive as a request stream (millions of users, each their own y).
+This driver:
 
   1. pulls deterministic queries from ``data.pipeline.QueryStream``
      (keyed by (seed, step, shard) — replayable, shardable),
   2. accumulates them in a request queue and dispatches fixed-size
-     micro-batches through the batched λ-path
-     (:func:`repro.core.lasso_path_batched`): per grid step ONE fused
-     screen over X for the whole batch + one union-bucketed batched solve,
+     micro-batches through ``session.path`` (the batched λ-path driver:
+     per grid step ONE fused screen over X for the whole batch + one
+     union-bucketed batched solve),
   3. pads the final partial batch by repeating its last query (padded
      results are dropped), so every dispatch reuses the same compiled
      programs — at most O(log p · log B) variants (pow-2 feature buckets ×
@@ -18,9 +18,14 @@ own y). This driver:
   4. reports throughput (queries/sec) and amortised data movement
      (screen HBM passes over X per query = 1/B per grid step).
 
+The session owns the dictionary geometry and the per-bucket Lipschitz
+cache, so the fused fit pass over X runs exactly once per process —
+``session.fit_passes`` is printed with the final report.
+
 Precision: serving defaults to f32 (``--x64`` opts into float64 — the
 repro-grade configuration of launch/solve.py, which defaults the other
-way). See docs/serving.md.
+way). Flag wiring shared with solve.py lives in launch/cli.py. See
+docs/serving.md.
 
     PYTHONPATH=src python -m repro.launch.serve --n 150 --p 1000 \
         --batch-size 8 --num-queries 128 --num-lambdas 16
@@ -32,13 +37,14 @@ import argparse
 import collections
 import time
 
+from . import cli
+
 
 def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=150)
-    ap.add_argument("--p", type=int, default=1000)
-    ap.add_argument("--nnz", type=int, default=20)
-    ap.add_argument("--corr", type=float, default=0.0)
+    cli.add_problem_args(ap, n=150, p=1000, nnz=20)
+    cli.add_engine_args(ap)
+    cli.add_x64_arg(ap, default=False)
     ap.add_argument("--batch-size", type=int, default=8,
                     help="micro-batch size B (fixed → no per-query "
                          "recompiles)")
@@ -47,34 +53,22 @@ def _parse_args(argv=None):
                     help="per-query λ-grid points (each query gets the "
                          "paper grid over its own λ_max)")
     ap.add_argument("--lo-frac", type=float, default=0.1)
-    ap.add_argument("--rule", default="edpp")
-    ap.add_argument("--solver", default="fista")
-    ap.add_argument("--backend", default=None,
-                    help="screening backend: pallas|interpret|jnp")
-    ap.add_argument("--solver-backend", default=None)
     ap.add_argument("--solver-tol", type=float, default=1e-6)
     ap.add_argument("--stream-batch", type=int, default=0,
                     help="queries per stream step (default: micro-batch "
                          "size; decoupled to exercise the queue)")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--report-every", type=int, default=4,
                     help="print a progress line every k micro-batches")
-    ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
-                    default=False,
-                    help="float64 solves (serving default: f32)")
     return ap.parse_args(argv)
 
 
 def main(argv=None):
     args = _parse_args(argv)
-
-    import jax
-    jax.config.update("jax_enable_x64", bool(args.x64))
+    cli.setup_jax(args)
 
     import numpy as np  # noqa: E402
 
-    from repro.core import PathConfig, lasso_path_batched  # noqa: E402
-    from repro.core.engine import DictionaryGeometry  # noqa: E402
+    from repro.core import LassoSession  # noqa: E402
     from repro.data import QueryStream  # noqa: E402
 
     B = args.batch_size
@@ -87,20 +81,16 @@ def main(argv=None):
     # ---- fit the dictionary ONCE (device-resident, shared by every batch)
     t0 = time.perf_counter()
     X = stream.dictionary(dtype=dtype)
-    geometry = DictionaryGeometry(X, backend=args.backend)
-    geometry.col_norms.block_until_ready()
+    cfg = cli.path_config(args, solver_tol=args.solver_tol)
+    sess = LassoSession.fit(X, config=cfg)
+    sess.geometry.col_norms.block_until_ready()
     fit_time = time.perf_counter() - t0
 
-    cfg = PathConfig(rule=args.rule, solver=args.solver,
-                     solver_tol=args.solver_tol, backend=args.backend,
-                     solver_backend=args.solver_backend)
-
     def dispatch(queries):
-        """One micro-batch through the batched path; returns (result, B)."""
+        """One micro-batch through the session's batched path driver."""
         Y = np.stack(queries).astype(dtype)
-        return lasso_path_batched(
-            X, Y, None, cfg, num_lambdas=args.num_lambdas,
-            lo_frac=args.lo_frac, geometry=geometry)
+        return sess.path(Y, num_lambdas=args.num_lambdas,
+                         lo_frac=args.lo_frac)
 
     # ---- warm the compile cache with one throwaway batch (a service pays
     # this once at startup, not per request; shapes are fixed after this)
@@ -145,7 +135,8 @@ def main(argv=None):
     qps = done / dt
     per_query = screen_passes / max(done, 1)
     print(f"served {done} queries in {dt:.2f}s  ({qps:.2f} queries/sec)")
-    print(f"dictionary fit {fit_time:.3f}s (once); micro-batch B={B}, "
+    print(f"dictionary fit {fit_time:.3f}s (once; fused passes: "
+          f"{sess.fit_passes}); micro-batch B={B}, "
           f"{batches} dispatches, {args.num_lambdas} λ/query")
     print(f"screen HBM passes over X: {screen_passes} total "
           f"→ {per_query:.3f}/query (B=1 would pay "

@@ -3,11 +3,15 @@
     PYTHONPATH=src python -m repro.launch.solve --n 150 --p 3000 \
         --rule edpp --num-lambdas 100 [--group-size 5] [--ckpt-dir DIR]
 
+One :class:`repro.core.LassoSession` is fitted per run (the fused
+workspace pass over X happens exactly once) and the path is solved
+through ``session.path`` — group mode is just ``fit(..., groups=m)``.
 Checkpoints (λ_k, β_k) per grid point; a killed run resumes mid-path.
 
-Precision: ``--x64`` (the default here — reproduction-grade paths) enables
-jax_enable_x64 BEFORE any jax import touches arrays; ``--no-x64`` runs the
-f32 serving configuration (what launch/serve.py uses by default).
+Precision: ``--x64`` (the default here — reproduction-grade paths)
+enables jax_enable_x64 BEFORE any jax import touches arrays; ``--no-x64``
+runs the f32 serving configuration (what launch/serve.py uses by
+default). Flag wiring shared with serve.py lives in launch/cli.py.
 """
 
 from __future__ import annotations
@@ -15,74 +19,69 @@ from __future__ import annotations
 import argparse
 import time
 
+from . import cli
+
 
 def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=150)
-    ap.add_argument("--p", type=int, default=3000)
-    ap.add_argument("--nnz", type=int, default=60)
-    ap.add_argument("--corr", type=float, default=0.0)
-    ap.add_argument("--rule", default="edpp")
-    ap.add_argument("--solver", default="fista",
-                    help="any registered solver strategy (fista|cd|...)")
-    ap.add_argument("--solver-backend", default=None,
-                    help="pallas|interpret|jnp (default: auto / "
-                         "REPRO_SOLVER_BACKEND)")
+    cli.add_problem_args(ap, n=150, p=3000, nnz=60)
+    cli.add_engine_args(ap)
+    cli.add_x64_arg(ap, default=True)
     ap.add_argument("--num-lambdas", type=int, default=100)
     ap.add_argument("--group-size", type=int, default=0,
                     help=">0 switches to group Lasso with this group size")
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="float64 path solves (default on for repro; "
-                         "--no-x64 = the f32 serving configuration)")
     return ap.parse_args(argv)
 
 
 def main(argv=None):
     args = _parse_args(argv)
-
-    import jax
-    jax.config.update("jax_enable_x64", bool(args.x64))
+    cli.setup_jax(args)
 
     import jax.numpy as jnp  # noqa: E402
-    import numpy as np  # noqa: E402,F401
 
     from repro.checkpoint import save  # noqa: E402
-    from repro.core import (GroupPathConfig, PathConfig,  # noqa: E402
-                            group_lambda_max, group_lasso_path, lambda_grid,
-                            lambda_max, lasso_path)
+    from repro.core import LassoSession  # noqa: E402
     from repro.data import group_lasso_problem, lasso_problem  # noqa: E402
 
-    if args.group_size > 0:
+    groups = args.group_size if args.group_size > 0 else None
+    ckpt_fn = None
+    if args.ckpt_dir:                  # group and plain paths both resume
+        def ckpt_fn(k, lam, beta):
+            save(args.ckpt_dir, k,
+                 {"beta": jnp.asarray(beta)}, extra={"lam": lam})
+    if groups:
         m = args.group_size
         X, y, _ = group_lasso_problem(args.n, args.p, m,
                                       active_groups=args.nnz // m + 1)
-        lmax = float(group_lambda_max(jnp.asarray(X), jnp.asarray(y), m))
-        grid = lambda_grid(lmax, num=args.num_lambdas)
-        t0 = time.perf_counter()
-        res = group_lasso_path(X, y, m, grid, GroupPathConfig(
-            rule=args.rule, solver_backend=args.solver_backend))
+        if args.solver == "fista":     # the plain-Lasso default
+            args.solver = "group_fista"
+        elif not args.solver.startswith("group"):
+            # a plain-l1 strategy would minimise the wrong objective under
+            # the group penalty (and group-EDPP's safety assumes the l2,1
+            # solution) — refuse rather than silently mis-solve
+            raise SystemExit(
+                f"--group-size needs a group solver strategy "
+                f"(got {args.solver!r}); use group_fista or a registered "
+                f"group_* strategy")
     else:
         X, y, _ = lasso_problem(args.n, args.p, nnz=args.nnz,
                                 corr=args.corr)
-        lmax = float(lambda_max(jnp.asarray(X), jnp.asarray(y)))
-        grid = lambda_grid(lmax, num=args.num_lambdas)
-        ckpt_fn = None
-        if args.ckpt_dir:
-            def ckpt_fn(k, lam, beta):
-                save(args.ckpt_dir, k,
-                     {"beta": jnp.asarray(beta)}, extra={"lam": lam})
-        t0 = time.perf_counter()
-        res = lasso_path(X, y, grid, PathConfig(
-            rule=args.rule, solver=args.solver,
-            solver_backend=args.solver_backend, checkpoint_fn=ckpt_fn))
-    dt = time.perf_counter() - t0
 
-    print(f"rule={args.rule} solver={args.solver} "
+    cfg = cli.path_config(args, checkpoint_fn=ckpt_fn)
+    sess = LassoSession.fit(X, groups=groups, config=cfg)
+
+    t0 = time.perf_counter()
+    res = sess.path(y, num_lambdas=args.num_lambdas).squeeze()
+    dt = time.perf_counter() - t0
+    lmax = float(res.lambdas[0])      # grid starts at λ_max (hi_frac=1)
+
+    print(f"rule={args.rule} solver={cfg.solve.resolved_strategy(sess.groups)} "
           f"grid={args.num_lambdas} λmax={lmax:.3f}")
-    print(f"path time {dt:.2f}s (screen {res.total_screen_time:.3f}s)")
-    for k in range(0, len(grid), max(len(grid) // 10, 1)):
+    print(f"path time {dt:.2f}s (screen {res.total_screen_time:.3f}s); "
+          f"dictionary fitted once (fused passes: {sess.fit_passes})")
+    K = len(res.lambdas)
+    for k in range(0, K, max(K // 10, 1)):
         s = res.stats[k]
         print(f"  λ/λmax={s.lam/lmax:5.2f} discarded={s.n_discarded:7d} "
               f"kept={s.n_kept:6d} iters={s.solver_iters}")

@@ -1,7 +1,10 @@
 #!/usr/bin/env python3
-"""Markdown link checker for CI: every relative link/anchor target in the
-given files/directories must exist in the repo. External (http/https/mailto)
-links are not fetched — CI must not depend on network flakiness.
+"""Markdown link checker for CI: every relative link in the given
+files/directories must point at a file that exists in the repo, and every
+anchor fragment (`file.md#section` or in-page `#section`) must match a
+heading in the target file (GitHub heading slugs, duplicate-suffix aware).
+External (http/https/mailto) links are not fetched — CI must not depend on
+network flakiness.
 
 Usage: python tools/check_links.py README.md docs
 """
@@ -13,7 +16,9 @@ import sys
 from pathlib import Path
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
+CODE_FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
 
 
 def md_files(args: list[str]) -> list[Path]:
@@ -27,25 +32,52 @@ def md_files(args: list[str]) -> list[Path]:
     return out
 
 
+def github_slug(heading: str) -> str:
+    """GitHub's heading → anchor id: strip markdown emphasis/code marks,
+    lowercase, drop punctuation (unicode letters survive), spaces and
+    hyphens become hyphens."""
+    h = re.sub(r"[`*_]|\[([^\]]*)\]\([^)]*\)", r"\1", heading).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path, cache: dict[Path, set[str]]) -> set[str]:
+    if path not in cache:
+        text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+        slugs: set[str] = set()
+        counts: dict[str, int] = {}
+        for heading in HEADING_RE.findall(text):
+            slug = github_slug(heading)
+            k = counts.get(slug, 0)
+            counts[slug] = k + 1
+            slugs.add(slug if k == 0 else f"{slug}-{k}")
+        cache[path] = slugs
+    return cache[path]
+
+
 def main(argv: list[str]) -> int:
-    repo = Path(__file__).resolve().parent.parent
     bad = 0
+    anchor_cache: dict[Path, set[str]] = {}
     for md in md_files(argv or ["README.md", "docs"]):
         text = md.read_text(encoding="utf-8")
         for target in LINK_RE.findall(text):
             if target.startswith(SKIP_PREFIXES):
                 continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            resolved = (md.parent / path).resolve()
+            path, _, fragment = target.partition("#")
+            resolved = (md.parent / path).resolve() if path else md.resolve()
             if not resolved.exists():
                 print(f"{md}: broken link -> {target}")
                 bad += 1
+                continue
+            if fragment and resolved.suffix == ".md":
+                if fragment not in anchors_of(resolved, anchor_cache):
+                    print(f"{md}: broken anchor -> {target} "
+                          f"(no heading slug {fragment!r} in {resolved.name})")
+                    bad += 1
     if bad:
         print(f"{bad} broken link(s)")
         return 1
-    print("all relative links resolve")
+    print("all relative links and anchors resolve")
     return 0
 
 
