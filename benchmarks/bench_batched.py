@@ -55,12 +55,18 @@ def run_one(sess: LassoSession, Y, grids):
     Both arms query the SAME fitted session (one dictionary fit per
     process); the batched arm dispatches on Y's rank alone."""
     B = Y.shape[0]
-    sess.path(Y, grids)                                       # warm compile
+    # warm TWICE: the first call populates the session's Lipschitz
+    # eig-cache, and the warm-started power iteration of the second call
+    # can nudge β across a pow-2 kept-bucket boundary — i.e. a fresh
+    # compile that must land in the warmup, not the timed run
+    sess.path(Y, grids)
+    sess.path(Y, grids)
     t0 = time.perf_counter()
     res_b = sess.path(Y, grids)
     t_batch = time.perf_counter() - t0
 
     sess.path(Y[0], grids[0])                                 # warm compile
+    sess.path(Y[0], grids[0])
     t0 = time.perf_counter()
     singles = [sess.path(Y[b], grids[b]).squeeze() for b in range(B)]
     t_seq = time.perf_counter() - t0
@@ -148,6 +154,11 @@ def main(argv=None):
     assert passes_per_query[64] <= passes_per_query[1] / 8.0, passes_per_query
     big = next(r for r in rows if r["batch_size"] == max(B_LIST))
     assert big["speedup_vs_sequential"] > 1.0, big
+    # -- ISSUE 6 regression pin: a degenerate B=1 "batch" reroutes through
+    # the session's single-query fast path, so it must stay within noise of
+    # the 1-query loop (the seed's union-bucketed B=1 ran at 0.2×)
+    one = next(r for r in rows if r["batch_size"] == 1)
+    assert one["speedup_vs_sequential"] >= 0.9, one
 
     write_bench_section(
         "bench_batched",

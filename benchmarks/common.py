@@ -32,6 +32,9 @@ import numpy as np
 
 from repro.core import (LassoSession, PathConfig, lambda_grid, lambda_max,
                         oracle_x_passes)
+# the ONE percentile definition (numpy's linear-interpolation convention),
+# shared by the serve loop, the benches and the tests
+from repro.launch.serve_loop import percentile  # noqa: F401
 import jax.numpy as jnp
 
 ZERO_TOL = 1e-8

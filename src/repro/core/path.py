@@ -108,6 +108,12 @@ class PathResult:
         betas    (B, K, p)     per-query coefficient paths
         masks    (B, K, units) per-query post-KKT discard masks
         stats    [PathStepStats] per grid step (shared across the batch)
+        query_converged (B,)   per-query completion flag: True iff every
+                               non-trivial reduced solve for that query hit
+                               its duality-gap stop within max_iter (a
+                               query "forced past max iters" reports False
+                               here — what the serve loop surfaces per
+                               ticket)
 
     ``squeeze()`` drops the batch axis of a B = 1 result (what the
     deprecated ``lasso_path`` / ``group_lasso_path`` shims return, with
@@ -122,6 +128,7 @@ class PathResult:
     betas: np.ndarray
     stats: list[PathStepStats]
     masks: np.ndarray | None = None
+    query_converged: np.ndarray | None = None
 
     @property
     def batched(self) -> bool:
@@ -151,14 +158,18 @@ class PathResult:
                 f"squeeze() needs a single-query result, got B={self.batch};"
                 " use query(b) to select one query")
         return PathResult(lambdas=self.lambdas[0], betas=self.betas[0],
-                          stats=self.stats, masks=self.masks[0])
+                          stats=self.stats, masks=self.masks[0],
+                          query_converged=self.query_converged)
 
     def query(self, b: int) -> "PathResult":
-        """View of query b in the squeezed layout (stats stay shared)."""
+        """View of query b in the squeezed layout (stats stay shared;
+        ``query_converged`` narrows to query b's flag)."""
         if not self.batched:
             raise ValueError("query(b) needs a batched result")
+        qc = self.query_converged
         return PathResult(lambdas=self.lambdas[b], betas=self.betas[b],
-                          stats=self.stats, masks=self.masks[b])
+                          stats=self.stats, masks=self.masks[b],
+                          query_converged=None if qc is None else qc[b:b + 1])
 
 
 @functools.partial(jax.jit, static_argnames=("bucket",))
@@ -234,6 +245,9 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
     masks = np.ones((B, K, units), dtype=bool)
     stats: list[PathStepStats] = []
     beta_prev = jnp.zeros((B, p), dtype=X.dtype)
+    # per-query completion: a query stays True iff every non-trivial
+    # reduced solve it took part in converged (PathResult.query_converged)
+    q_converged = np.ones((B,), dtype=bool)
 
     for k in range(K):
         lam_vec = lambdas[None, k] if batch is None else lambdas[:, k]
@@ -272,6 +286,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
         solver_x_passes = 0.0
         bucket = 0
         res_iters, res_gap, q_conv = 0, 0.0, B
+        conv_vec = np.ones((B,), dtype=bool)
         while True:
             # union of survivors across the batch: one shared buffer
             kept = np.flatnonzero((~discard_np).any(axis=0))
@@ -279,6 +294,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             if kept.size == 0:
                 beta_full = jnp.zeros((B, p), dtype=X.dtype)
                 res_iters, res_gap, q_conv = 0, 0.0, B
+                conv_vec = np.ones((B,), dtype=bool)
             else:
                 col_idx = (kept[:, None] * m + arange_m).reshape(-1)
                 idx, valid = _pad_indices(col_idx, bucket * m)
@@ -294,6 +310,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                     )[None, :]
                     res_iters, res_gap = int(res.iters), float(res.gap)
                     q_conv = int(bool(res.converged))
+                    conv_vec = np.array([bool(res.converged)])
                 else:
                     # per-query validity on the union buffer: each query
                     # solves exactly its own reduced problem
@@ -313,6 +330,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                     res_iters = int(jnp.max(res.iters))
                     res_gap = float(jnp.max(res.gap))
                     q_conv = int(jnp.sum(res.converged))
+                    conv_vec = np.asarray(res.converged).astype(bool)
                 solves += 1
                 gram_solves += int(solver_engine.last_used_gram)
                 gap_checks += solver_engine.last_gap_checks
@@ -336,6 +354,8 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
 
         betas[:, k] = np.asarray(beta_full, dtype=np.float64)
         masks[:, k] = discard_np
+        # a dead (trivial-region) query's lane is vacuously converged
+        q_converged &= conv_vec | ~live
         stats.append(PathStepStats(
             lam=float(lam_vec[0]) if batch is None else float(lam_vec.max()),
             n_discarded=int(discard_np.all(axis=0).sum()),
@@ -371,7 +391,8 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
     # single query — the values are bit-identical to the squeezed layout).
     if batch is None:
         lambdas = lambdas[None, :]
-    return PathResult(lambdas=lambdas, betas=betas, stats=stats, masks=masks)
+    return PathResult(lambdas=lambdas, betas=betas, stats=stats, masks=masks,
+                      query_converged=q_converged)
 
 
 # ---------------------------------------------------------------------------

@@ -520,6 +520,17 @@ class LassoSession:
 
     def _lasso_path_batched(self, Y, lambdas, cfg, grid_kw) -> PathResult:
         B = Y.shape[0]
+        if B == 1:
+            # Degenerate-batch fast path (ISSUE 6 / BENCH_batch.json's 0.2×
+            # at B = 1): with one live query the union-bucketed batched
+            # driver only adds overhead — per-query validity masks, the
+            # batched solver state, the (B, ·) kernel variants — so route
+            # through the single-query driver. The unified PathResult
+            # already carries the B = 1 leading batch axis, and masks are
+            # bit-identical by the batched==single contract
+            # (tests/test_batched_path.py).
+            return self._lasso_path(Y[0], _squeeze_grid(lambdas), cfg,
+                                    grid_kw)
         eng = ScreeningEngine(self.X, Y, eps=cfg.screen.eps,
                               geometry=self._geometry(cfg.screen.backend))
         if lambdas is None:
@@ -572,6 +583,9 @@ class LassoSession:
         ``batch_size=B``).
         """
         B = Y.shape[0]
+        if B == 1:   # degenerate batch: same fast path as the Lasso driver
+            return self._group_path(Y[0], _squeeze_grid(lambdas), cfg,
+                                    grid_kw)
         if lambdas is not None:
             lam_arr = np.asarray(lambdas, dtype=np.float64)
             if lam_arr.ndim == 1:
@@ -589,7 +603,18 @@ class LassoSession:
             lambdas=np.stack([r.lambdas[0] for r in results]),
             betas=np.stack([r.betas[0] for r in results]),
             stats=stats,
-            masks=np.stack([r.masks[0] for r in results]))
+            masks=np.stack([r.masks[0] for r in results]),
+            query_converged=np.concatenate(
+                [r.query_converged for r in results]))
+
+
+def _squeeze_grid(lambdas):
+    """A (1, K) per-query grid viewed as the single-query (K,) grid the
+    fast-path drivers take ((K,) and None pass through)."""
+    if lambdas is None:
+        return None
+    lam = np.asarray(lambdas, dtype=np.float64)
+    return lam[0] if lam.ndim == 2 else lam
 
 
 def _merge_step_stats(steps: list[PathStepStats]) -> PathStepStats:

@@ -158,6 +158,21 @@ class QueryStream:
             ys[q] = X @ betas[q] + self.sigma * rng.standard_normal(self.n)
         return {"y": ys.astype(dtype), "beta": betas.astype(dtype)}
 
+    def queries(self, count: int, shard: int = 0, n_shards: int = 1,
+                dtype=np.float64):
+        """The first ``count`` queries in admission order — the flattened
+        (step, query) view the continuous-batching serve loop consumes
+        (:func:`repro.launch.serve_loop.stream_arrivals`). Same draws as
+        :meth:`host_batch`, so a replay of any prefix is bit-identical."""
+        served, step = 0, 0
+        while served < count:
+            for y in self.host_batch(step, shard, n_shards, dtype)["y"]:
+                if served >= count:
+                    return
+                yield y
+                served += 1
+            step += 1
+
 
 def group_lasso_problem(n: int, p: int, m: int, *, active_groups: int,
                         sigma: float = 0.1, seed: int = 0, dtype=np.float64):

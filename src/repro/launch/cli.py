@@ -49,6 +49,36 @@ def add_engine_args(ap: argparse.ArgumentParser, *, rule: str = "edpp",
                          "REPRO_SOLVER_BACKEND)")
 
 
+def add_serve_args(ap: argparse.ArgumentParser, *, b_max: int = 8,
+                   deadline_ms: float = 20.0, queue_cap: int = 64) -> None:
+    """Continuous-batching policy flags (launch/serve_loop.ServePolicy).
+
+    ``--batch-size`` is kept as an alias of ``--b-max``: the old fixed
+    micro-batch size is exactly the fill target of the new loop.
+    """
+    ap.add_argument("--b-max", "--batch-size", dest="b_max", type=int,
+                    default=b_max,
+                    help="fill target B_max: dispatch as soon as this many "
+                         "queries are queued (alias --batch-size)")
+    ap.add_argument("--deadline-ms", type=float, default=deadline_ms,
+                    help="admission deadline: a partial batch dispatches "
+                         "once its oldest query has waited this long")
+    ap.add_argument("--queue-cap", type=int, default=queue_cap,
+                    help="bounded admission queue; a full queue pushes "
+                         "back on the arrival source")
+    ap.add_argument("--max-in-flight", type=int, default=2,
+                    help="pipelined dispatch window (batch k+1 forms while "
+                         "batch k computes)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="offered load in queries/sec (0 = every query "
+                         "arrives at t=0, the steady-state bench shape)")
+    ap.add_argument("--mode", choices=("continuous", "fixed", "compare"),
+                    default="continuous",
+                    help="continuous batching, the legacy fixed-B server, "
+                         "or a timed compare of both (--quick implies "
+                         "compare)")
+
+
 def add_x64_arg(ap: argparse.ArgumentParser, *, default: bool) -> None:
     ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
                     default=default,

@@ -243,6 +243,63 @@ def test_fallback_solver_through_strong_rule_path():
 
 
 # ---------------------------------------------------------------------------
+# degenerate B = 1 batch: fast path + parity (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def test_b1_batch_routes_through_single_query_fast_path(monkeypatch):
+    """A (1, n) batch must take the single-query driver (the union-bucketed
+    batched machinery is pure overhead at B = 1 — BENCH_batch.json showed
+    0.2×) while keeping the unified batched result layout."""
+    from repro.core import LassoSession
+    X, Y = _stream_problem(b=1, seed=17)
+    sess = LassoSession.fit(jnp.asarray(X, jnp.float32))
+    grids = _inside_grids(X, Y, 5)
+
+    calls = []
+    orig = LassoSession._lasso_path
+
+    def spy(self, y, lambdas, cfg, grid_kw):
+        calls.append(np.asarray(y).shape)
+        return orig(self, y, lambdas, cfg, grid_kw)
+
+    monkeypatch.setattr(LassoSession, "_lasso_path", spy)
+    res_b = sess.path(jnp.asarray(Y), grids)        # (1, n) batch
+    assert calls == [(N,)], "B=1 batch must reroute to the single driver"
+    assert res_b.batched and res_b.batch == 1
+    assert res_b.query_converged.shape == (1,)
+
+    # reference from a FRESH session: the Lipschitz eig-cache is warm after
+    # the first call, which shifts the power iteration's start — a fresh
+    # session replays the exact first-use computation
+    sess2 = LassoSession.fit(jnp.asarray(X, jnp.float32))
+    res_1 = sess2.path(jnp.asarray(Y[0]), grids[0])  # direct single query
+    # same driver, same inputs → bitwise identical (β included, not just
+    # the masks-only contract of the true batched driver)
+    np.testing.assert_array_equal(res_b.masks, res_1.masks)
+    np.testing.assert_array_equal(res_b.betas, res_1.betas)
+
+
+def test_query_converged_reports_per_query():
+    """PathResult.query_converged: per-query completion flag the serve loop
+    surfaces on tickets (True iff every non-trivial reduced solve hit its
+    duality-gap stop)."""
+    X, Y = _stream_problem(b=3, seed=19)
+    grids = _inside_grids(X, Y, 5)
+    res = lasso_path_batched(X, Y, grids,
+                             PathConfig(rule="edpp", solver_tol=1e-6))
+    assert res.query_converged.shape == (3,)
+    assert res.query_converged.all()
+    assert res.query(1).query_converged.shape == (1,)   # narrows per query
+    # a solver capped far below convergence still returns β (best-effort)
+    # but reports every query unconverged
+    res2 = lasso_path_batched(X, Y, grids,
+                              PathConfig(rule="edpp", solver_tol=1e-12,
+                                         max_iter=2))
+    assert not res2.query_converged.any()
+    assert np.isfinite(res2.betas).all()
+
+
+# ---------------------------------------------------------------------------
 # QueryStream determinism (the serving/bench data contract)
 # ---------------------------------------------------------------------------
 

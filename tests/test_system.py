@@ -90,24 +90,24 @@ def test_group_edpp_prunes_ffn_neurons():
     assert np.all(gnorm[important] > 1e-6)
 
 
-def test_serve_streams_100_queries_microbatched(subproc):
-    """launch/serve.py end-to-end (ISSUE 4 acceptance): ≥100 synthetic
-    queries from the deterministic QueryStream through micro-batched
-    paths, reporting queries/sec, with a bounded set of compiled program
-    shapes (pow-2 buckets at ONE batch shape — no per-query recompiles)."""
+def test_serve_streams_100_queries_continuous(subproc):
+    """launch/serve.py end-to-end (ISSUE 4 → ISSUE 6): ≥100 synthetic
+    queries from the deterministic QueryStream through the continuous-
+    batching serve loop, reporting p50/p99 latency and queries/sec, with a
+    bounded set of padded batch shapes (pow-2 capped at b_max — no
+    per-fill-level recompiles)."""
     out = subproc(
         "from repro.launch.serve import main\n"
-        "main(['--n', '30', '--p', '64', '--batch-size', '8',\n"
+        "main(['--n', '30', '--p', '64', '--b-max', '8',\n"
         "      '--num-queries', '104', '--num-lambdas', '4',\n"
-        "      '--solver-tol', '1e-5', '--report-every', '0'])\n",
+        "      '--solver-tol', '1e-5', '--mode', 'continuous'])\n",
         devices=1, timeout=560)
-    assert "served 104 queries" in out
+    assert "served 104/104 queries" in out
     assert "queries/sec" in out
-    # bounded program variants: pow-2 buckets of p=64 at one batch shape
+    assert "latency p50" in out and "p99" in out
+    # bounded program variants: 104 = 13×8 eager queries form full fill
+    # batches only → exactly one padded batch shape
     import re
-    m = re.search(r"program variants: (\d+) solver bucket shapes", out)
-    assert m and int(m.group(1)) <= 3, out
-    # amortisation is visible in the report: ≤ 1/B passes per query + the
-    # padded tail batch
-    m = re.search(r"→ (\d+\.\d+)/query", out)
-    assert m and float(m.group(1)) <= 1.0, out
+    m = re.search(r"padded batch shapes \[([0-9, ]+)\]", out)
+    assert m and len(m.group(1).split(",")) <= 2, out
+    assert "errors 0" in out

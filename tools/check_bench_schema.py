@@ -16,6 +16,7 @@ Usage:
     python tools/check_bench_schema.py BENCH_solver.json
     python tools/check_bench_schema.py BENCH_solver.json --section bench_solver_swap
     python tools/check_bench_schema.py BENCH_batch.json --section bench_batched
+    python tools/check_bench_schema.py BENCH_serve.json --section bench_serve
 """
 
 from __future__ import annotations
@@ -52,8 +53,28 @@ BATCH_ROW_KEYS = {
     "beta_err_tol",
 }
 
+SERVE_ROW_KEYS = {
+    "dataset",
+    "rule",
+    "solver",
+    "backend",
+    "mode",
+    "b_max",
+    "num_queries",
+    "num_lambdas",
+    "queries_per_sec",
+    "p50_latency_s",
+    "p99_latency_s",
+    "wall_time_s",
+    "n_dispatches",
+    "mean_batch_fill",
+    "deadline_dispatch_frac",
+    "masks_identical",
+}
+
 SECTION_ROW_KEYS = {
     "bench_batched": BATCH_ROW_KEYS,
+    "bench_serve": SERVE_ROW_KEYS,
 }
 
 
