@@ -1,21 +1,51 @@
-"""Roofline term reader — one CSV row per completed dry-run cell.
+"""Roofline term reader + the sharded screening A/B bench.
 
-Reads results/dryrun/*.json (produced by repro.launch.dryrun) and emits
-the three roofline terms + dominant bottleneck per (arch, shape, mesh).
-The full analysis with MODEL_FLOPS ratios is assembled into EXPERIMENTS.md
-by tools/make_experiments.py.
+Two entry points:
+
+* :func:`run` (benchmarks/run.py) — one CSV row per completed dry-run
+  cell: reads results/dryrun/*.json (produced by repro.launch.dryrun) and
+  emits the three roofline terms + dominant bottleneck per (arch, shape,
+  mesh). The full analysis with MODEL_FLOPS ratios is assembled into
+  EXPERIMENTS.md by tools/make_experiments.py.
+
+* :func:`main` (``python -m benchmarks.bench_roofline --quick``, CI job
+  dist-bench-smoke) — the distributed screening A/B on a live device
+  mesh:
+
+    - **sharded-jnp**: the open-coded two-pass screen
+      (``dist_edpp_screen``: residual psum + a fused-scores pass that
+      recomputes ‖x_j‖² every λ step),
+    - **sharded-fused**: the backend-routed cached screen
+      (``dist_edpp_screen_cached``: residual psum + ONE per-shard
+      ``screen_matvec`` pass against cached column norms — the same
+      dispatch ``LassoSession.fit(X, mesh=...)`` resolves to).
+
+  Both arms run the explicit ``jnp`` tile so INTERPRET=1 smoke runs stay
+  honest about wall-clock (the bench_batched convention), masks are
+  asserted bit-identical between the arms AND against the local
+  single-device reference, and the fused arm must not lose to the
+  open-coded one (the ISSUE 7 acceptance gate). Writes a schema-checked
+  ``bench_dist`` section into ``BENCH_dist.json``
+  (tools/check_bench_schema.py).
+
+  On CPU fake the mesh devices first:
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import time
 
 from .common import emit
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "dryrun")
+DIST_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_dist.json")
 
 
 def run(full: bool = False):
@@ -46,5 +76,125 @@ def run(full: bool = False):
              f" peak_gb={rec['memory']['peak_per_device_gb']:.2f}")
 
 
+# ---------------------------------------------------------------------------
+# The sharded screening A/B (CI: dist-bench-smoke)
+# ---------------------------------------------------------------------------
+
+def _time_arm(screen, grid, repeats: int):
+    """Best-of-R wall-clock for one full λ sweep (warm-twice first)."""
+    for lam in grid:                      # warm: compile + caches
+        screen(lam)[0].block_until_ready()
+    for lam in grid:
+        screen(lam)[0].block_until_ready()
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        for lam in grid:
+            screen(lam)[0].block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (seconds, interpret-safe)")
+    ap.add_argument("--mesh", default=None, metavar="QxF",
+                    help="2D device mesh 'QxF' (default: 1 x all visible "
+                         "devices)")
+    ap.add_argument("--backend", default="jnp",
+                    help="tile backend for BOTH timed arms (explicit jnp "
+                         "by default so INTERPRET=1 smoke runs stay "
+                         "honest about wall-clock)")
+    ap.add_argument("--num-lambdas", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-R timing per arm")
+    ap.add_argument("--bench-json", default=DIST_JSON)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import distributed as D
+
+    if args.mesh is not None:
+        q, f = (int(t) for t in args.mesh.lower().split("x"))
+    else:
+        q, f = 1, len(jax.devices())
+    mesh = jax.make_mesh((q, f), ("query", "feature"))
+
+    n, p = (64, 4096) if args.quick else (256, 1 << 14)
+    K = args.num_lambdas or (8 if args.quick else 16)
+    rng = np.random.default_rng(5)
+    X = rng.standard_normal((n, p)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    print(f"bench_dist: n={n} p={p} K={K} mesh={q}x{f} "
+          f"tile={args.backend}")
+
+    Xd, yd = D.shard_problem(mesh, X, y)
+    corr = X.T @ y
+    istar = int(np.argmax(np.abs(corr)))
+    lm = float(np.abs(corr[istar]))
+    v1max = jnp.asarray(np.sign(corr[istar]) * X[:, istar])
+    beta0 = jax.device_put(jnp.zeros(p, jnp.float32), D.beta_sharding(mesh))
+    norms = jax.device_put(jnp.linalg.norm(jnp.asarray(X), axis=0),
+                           D.beta_sharding(mesh))
+    grid = np.linspace(0.95, 0.1, K) * lm
+
+    # both arms jitted once (λ is a traced scalar — one compile per arm),
+    # basic screens from the λ_max state: identical geometry either way
+    open_coded = jax.jit(lambda lam: D.dist_edpp_screen(
+        mesh, Xd, yd, lam, lm, beta0, lm, v1max,
+        backend=args.backend))                          # → (mask, scores)
+    fused = jax.jit(lambda lam: D.dist_edpp_screen_cached(
+        mesh, Xd, yd, lam, lm, beta0, lm, v1max, norms,
+        backend=args.backend))                          # → (scores, mask)
+
+    # -- exactness first: arms agree with each other AND the local oracle
+    from repro.core import DualState, edpp_mask
+    st = DualState.at_lambda_max(jnp.asarray(X), jnp.asarray(y))
+    masks_ok = True
+    for lam in grid:
+        m_open = np.asarray(open_coded(float(lam))[0])
+        m_fused = np.asarray(fused(float(lam))[1])
+        ref = np.asarray(edpp_mask(jnp.asarray(X), jnp.asarray(y),
+                                   float(lam), st))
+        masks_ok &= np.array_equal(m_open, ref)
+        masks_ok &= np.array_equal(m_fused, ref)
+    assert masks_ok, "sharded masks diverged from the local reference"
+
+    t_open = _time_arm(lambda lam: open_coded(float(lam)), grid,
+                       args.repeats)
+    t_fused = _time_arm(lambda lam: (fused(float(lam))[1],), grid,
+                        args.repeats)
+    speedup = t_open / max(t_fused, 1e-12)
+    n_disc = int(np.asarray(fused(float(grid[-1]))[1]).sum())
+    print(f"  sharded-jnp (open-coded 2-pass) {t_open * 1e3:8.1f} ms")
+    print(f"  sharded-fused (routed, cached)  {t_fused * 1e3:8.1f} ms  "
+          f"speedup {speedup:.2f}x  masks identical: {masks_ok}")
+
+    # ISSUE 7 acceptance: the backend-routed cached screen must not lose
+    # to the open-coded two-pass screen (it strictly skips one X pass)
+    assert t_fused <= t_open, (t_fused, t_open)
+
+    from .common import write_bench_section
+    meta = {"n": n, "p": p, "num_lambdas": K, "mesh": f"{q}x{f}",
+            "backend": args.backend, "repeats": args.repeats,
+            "quick": bool(args.quick)}
+    row_common = {"dataset": f"synthetic n={n} p={p}",
+                  "mesh": f"{q}x{f}", "backend": args.backend,
+                  "num_lambdas": K, "masks_identical": bool(masks_ok),
+                  "n_discarded_last": n_disc}
+    write_bench_section(
+        "bench_dist", meta=meta,
+        rows=[dict(row_common, arm="sharded_jnp", wall_time_s=t_open,
+                   speedup_vs_open_coded=1.0),
+              dict(row_common, arm="sharded_fused", wall_time_s=t_fused,
+                   speedup_vs_open_coded=speedup)],
+        path=args.bench_json)
+    print(f"wrote {args.bench_json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,25 +1,28 @@
 """Distributed EDPP screening + FISTA on a virtual 8-chip mesh.
 
-Demonstrates the production multi-chip layout (DESIGN §7) at two levels:
+Demonstrates the production multi-chip layout (docs/distributed.md) at
+two levels:
 
-  1. **The session front door** — ``LassoSession.fit(X, mesh=mesh)``
-     places the dictionary column-sharded over every mesh axis (queries
-     replicated) and ``session.path`` runs the SAME screen→reduce→solve
-     driver as on one chip; GSPMD inserts the collectives. Dispatch to the
-     distributed layout is purely ``mesh`` presence — no dist-specific
-     entry point.
+  1. **The session front door** — ``LassoSession.fit(X, mesh=mesh)`` on a
+     2D ``--mesh QxF`` (axes ``('query', 'feature')``) places the
+     dictionary column-sharded over the feature axis, shards query
+     batches over the query axis, and resolves the screen backend to the
+     per-shard tile dispatcher (``session.backend_name ==
+     "shard:<tile>"``): each device runs the SAME Pallas/jnp kernels as
+     the single-chip engines on its local block, and masks come out
+     bit-identical to the unsharded session.
   2. **The explicit shard_map suite** (`repro.core.distributed`) — the
-     hand-written collectives the session's GSPMD lowering is benchmarked
-     against: screening with zero communication, FISTA with one N-vector
+     hand-written collectives the session path is built from: per-shard
+     tile screening with zero communication, FISTA with one N-vector
      psum per iteration (chunked-overlap schedule).
 
 The identical code lowers on the 256/512-chip production meshes in the
 dry-run (cells lasso-screen-16m / lasso-fista-16m).
 
-    PYTHONPATH=src python examples/distributed_screening.py [--quick]
+    PYTHONPATH=src python examples/distributed_screening.py \
+        [--quick] [--mesh 2x4]
 
-``--quick`` shrinks shapes for CI smoke runs (INTERPRET=1 friendly — the
-mesh path pins the GSPMD ``jnp`` backend either way).
+``--quick`` shrinks shapes for CI smoke runs (INTERPRET=1 friendly).
 """
 
 import argparse
@@ -42,9 +45,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small shapes for CI smoke runs")
+    ap.add_argument("--mesh", default="2x4", metavar="QxF",
+                    help="2D device mesh 'QxF': Q query shards × F "
+                         "feature shards (default 2x4 on the 8 virtual "
+                         "devices)")
     args = ap.parse_args(argv)
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    q, f = (int(t) for t in args.mesh.lower().split("x"))
+    mesh = jax.make_mesh((q, f), ("query", "feature"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     n, p = (128, 1 << 12) if args.quick else (256, 1 << 15)
@@ -52,14 +60,15 @@ def main(argv=None):
     X, y, beta_true = lasso_problem(n, p, nnz=40, sigma=0.1,
                                     dtype=np.float32)
 
-    # ---- level 1: the session front door (mesh = placement, GSPMD) -----
+    # ---- level 1: the session front door (per-shard tile kernels) ------
     # f32 serving precision: a 1e-8 relative gap is unreachable in f32 and
     # would burn max_iter per step — demo at the f32-appropriate tolerance
     sess = LassoSession.fit(X, mesh=mesh,
                             config=PathConfig(solver_tol=2e-5, max_iter=600))
     print(f"X: {n}x{p} sharded column-wise → "
-          f"{p // mesh.size} features/chip "
-          f"(session fused fit passes: {sess.fit_passes})")
+          f"{p // f} features/shard; screen backend "
+          f"{sess.backend_name} (session fused fit passes: "
+          f"{sess.fit_passes})")
     t0 = time.perf_counter()
     res = sess.path(y, num_lambdas=5, lo_frac=0.3)
     t_path = time.perf_counter() - t0
@@ -67,7 +76,13 @@ def main(argv=None):
         print(f"  session path λ={s.lam:7.2f}: discarded {s.n_discarded:6d}"
               f"/{p} kept {s.n_kept:5d} iters {s.solver_iters}")
     print(f"session 5-point path on the mesh: {t_path:.2f}s "
-          f"(one driver, GSPMD collectives)")
+          f"(per-shard tile screens, replicated reduced solves)")
+
+    # the batched front door shards queries over the mesh's query axis
+    Yb = np.stack([y] * (2 * q)).astype(np.float32)
+    res_b = sess.path(Yb, num_lambdas=3, lo_frac=0.3)
+    print(f"batched path B={Yb.shape[0]} (query-sharded over {q} shard"
+          f"{'s' if q > 1 else ''}): masks {res_b.masks.shape}")
 
     # ---- level 2: the explicit shard_map collectives ------------------
     Xd, yd = D.shard_problem(mesh, X, y)

@@ -1,25 +1,38 @@
 """Distributed (multi-chip / multi-pod) EDPP screening + Lasso solving.
 
 The paper's motivating regime (§1) is "we may not even be able to load the
-data matrix into main memory". On a TPU pod the natural layout is
-**feature-sharded**: X ∈ R^{N×p} with columns split over every mesh axis,
-y and all dual-geometry N-vectors replicated. Then:
+data matrix into main memory". On a TPU pod the natural layout is a 2D
+``Mesh(('query', 'feature'))``: X ∈ R^{N×p} with columns split over the
+feature axes, query batches split over the ``query`` axis, y and all
+dual-geometry N-vectors replicated along the feature axes. Then:
 
   * screening scores  |x_jᵀo| + ρ‖x_j‖   — fully local, zero communication;
   * λ_max / ‖Xᵀr‖_∞                        — one scalar `pmax`;
   * residual  r = y − Xβ                   — one N-vector `psum` per solver
-    iteration (the only recurring collective, overlappable — see
-    `dist_fista(..., overlap=True)`).
+    iteration over the FEATURE axes only (the only recurring collective,
+    overlappable — see `dist_fista(..., overlap=True)`).
 
-Multi-query batching maps the batch onto a *data* axis of the same layout:
-features stay column-sharded, the B queries ride as an unsharded leading
-axis, and the recurring collective becomes ONE (B, N)-block `psum` instead
-of B separate N-vector psums (`dist_edpp_screen_batched`,
-`dist_fista_batched`) — collective launch overhead amortised 1/B.
+Multi-query batching shards the batch over the ``query`` axis (when B
+divides it; replicated otherwise): features stay column-sharded, and the
+recurring collective becomes ONE (B_local, N)-block `psum` per query shard
+instead of B separate N-vector psums (`dist_edpp_screen_batched`,
+`dist_fista_batched`) — collective launch overhead amortised 1/B. A 1D
+mesh without a ``query`` axis keeps the old layout exactly (all axes are
+feature axes, queries replicated).
+
+Per-shard tile work dispatches through the SAME ``kernels.ops.BACKENDS``
+registry as the single-chip engines: every op takes ``backend=`` ("pallas"
+| "interpret" | "jnp" | a ScreenBackend | None = auto) and calls the
+resolved backend's ``screen_matvec`` / ``edpp_screen_scores`` /
+``fista_step`` on its LOCAL (N, p/shards) block, reducing with the single
+psum noted above. ``sharded_backend`` packages that dispatch as a
+ScreenBackend (name ``"shard:<tile>"``) that
+``LassoSession.fit(X, mesh=...)`` drops into the unsharded engines.
 
 Everything here is written with `shard_map` for explicit collective control
 (the hillclimb in EXPERIMENTS.md §Perf compares against the GSPMD/pjit
-auto-sharded version, `pjit_screen`).
+auto-sharded version, `pjit_screen`). ``check_rep=False`` throughout: a
+``pallas_call`` has no replication rule under shard_map.
 
 The same code paths lower on the production meshes of launch/mesh.py —
 `launch/dryrun.py` compiles them at (16,16) and (2,16,16).
@@ -28,7 +41,6 @@ The same code paths lower on the production meshes of launch/mesh.py —
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,22 +48,60 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .engine import block_scores
+from ..kernels import ops
+from .engine import resolve_backend
 from .screening import EPS_DEFAULT
 from .solver import resolve_solver_backend
 
+#: Mesh axis carrying data-parallel query batches. Every OTHER axis is a
+#: feature (model-parallel) axis — a mesh without this axis is pure
+#: feature sharding (the pre-2D layout, still fully supported).
+QUERY_AXIS = "query"
+
+
+def query_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh's query (data-parallel) axes: () or (``QUERY_AXIS``,)."""
+    return tuple(a for a in mesh.axis_names if a == QUERY_AXIS)
+
 
 def feature_axes(mesh: Mesh) -> tuple[str, ...]:
-    """All mesh axes, flattened into one logical feature-sharding axis."""
-    return tuple(mesh.axis_names)
+    """All non-query mesh axes, flattened into one logical feature axis."""
+    return tuple(a for a in mesh.axis_names if a != QUERY_AXIS)
+
+
+def query_size(mesh: Mesh) -> int:
+    """Number of devices along the query axis (1 if the mesh has none)."""
+    return int(np.prod([mesh.shape[a] for a in query_axes(mesh)], initial=1))
+
+
+def _fspec(mesh: Mesh):
+    """Feature axes as a PartitionSpec entry (None = replicate when a
+    degenerate mesh has only a query axis)."""
+    f = feature_axes(mesh)
+    return f if f else None
+
+
+def _qspec(mesh: Mesh, b: int):
+    """Query axes as a spec entry for a batch of ``b`` — None (replicate)
+    unless the mesh has a query axis that divides b."""
+    q = query_axes(mesh)
+    return q if q and b % query_size(mesh) == 0 else None
+
+
+def _psum(x, axes):
+    return jax.lax.psum(x, axes) if axes else x
+
+
+def _pmax(x, axes):
+    return jax.lax.pmax(x, axes) if axes else x
 
 
 def x_sharding(mesh: Mesh) -> NamedSharding:
-    return NamedSharding(mesh, P(None, feature_axes(mesh)))
+    return NamedSharding(mesh, P(None, _fspec(mesh)))
 
 
 def beta_sharding(mesh: Mesh) -> NamedSharding:
-    return NamedSharding(mesh, P(feature_axes(mesh)))
+    return NamedSharding(mesh, P(_fspec(mesh)))
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
@@ -66,78 +116,167 @@ def shard_problem(mesh: Mesh, X, y):
 
 
 def place_dictionary(mesh: Mesh, X):
-    """Column-shard a dictionary over every mesh axis.
+    """Column-shard a dictionary over the mesh's feature axes.
 
     The fit-time placement of ``LassoSession.fit(X, mesh=mesh)``: the
-    session's engines then run plain jnp on the placed arrays and GSPMD
-    inserts the collectives of this module's hand-written shard_map ops
-    (the explicit suite remains the §Perf baseline)."""
+    session's engines then dispatch per-shard tile kernels through
+    ``sharded_backend`` (screens) and run reduced solves on replicated
+    gathered buckets."""
     return jax.device_put(jnp.asarray(X), x_sharding(mesh))
 
 
 def place_queries(mesh: Mesh, Y):
-    """Replicate query-side vectors — y (n,) or a batch Y (B, n) — on the
-    mesh (the layout every op in this module assumes)."""
-    return jax.device_put(jnp.asarray(Y), replicated(mesh))
+    """Place query-side vectors on the mesh's 2D layout: a batch Y (B, n)
+    shards its leading axis over the ``query`` axis (when B divides it);
+    a single y (n,) — or a non-dividing batch — replicates."""
+    Y = jnp.asarray(Y)
+    spec = P(_qspec(mesh, Y.shape[0]), None) if Y.ndim == 2 else P()
+    return jax.device_put(Y, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Per-shard backend dispatch: the ops.BACKENDS registry under shard_map
+# ---------------------------------------------------------------------------
+
+def sharded_backend(mesh: Mesh, tile=None) -> ops.ScreenBackend:
+    """A :class:`~repro.kernels.ops.ScreenBackend` that runs ``tile``'s
+    kernels per feature shard under ``shard_map``.
+
+    The screening ops (``matvec``, ``fused_scores``) call the tile
+    backend's kernel on the LOCAL (N, p/shards) block — zero communication;
+    per-column scores are feature-local, and :func:`kernels.ops.
+    resolve_tiles` shrinks the kernel tiles to the local block so a narrow
+    shard doesn't pay full-tile padding. Outputs stay feature-sharded
+    (batched centres additionally shard over the query axis when B divides
+    it). The solver ops pass through to the tile unchanged: the path
+    driver's reduced buckets are gathered REPLICATED, so the fused solver
+    kernels run on whole (replicated) arrays without remapping.
+
+    ``tile`` is a backend name, a ScreenBackend, or None (auto-detect:
+    ``REPRO_SCREEN_BACKEND`` → ``INTERPRET=1`` → platform default). The
+    result is what ``LassoSession.fit(X, mesh=...)`` resolves its engines
+    to — ``session.backend_name == "shard:<tile>"``.
+    """
+    tile = resolve_backend(tile)
+    f = _fspec(mesh)
+    wrapped: dict = {}
+
+    def _shmap(key, fn, in_specs, out_specs):
+        w = wrapped.get(key)
+        if w is None:
+            w = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+            wrapped[key] = w
+        return w
+
+    def matvec(X, centre):
+        centre = jnp.asarray(centre)
+        if centre.ndim == 1:
+            w = _shmap(("mv", 1), tile.matvec, (P(None, f), P()), P(f))
+            return w(X, centre)
+        q = _qspec(mesh, centre.shape[0])
+        w = _shmap(("mv", 2, q), tile.matvec,
+                   (P(None, f), P(q, None)), P(q, f))
+        return w(X, centre)
+
+    def fused_scores(X, centre, rho):
+        centre = jnp.asarray(centre)
+        rho = jnp.asarray(rho)
+        if centre.ndim == 1:
+            w = _shmap(("fs", 1), tile.fused_scores,
+                       (P(None, f), P(), P()), (P(f), P(f)))
+            return w(X, centre, rho)
+        q = _qspec(mesh, centre.shape[0])
+        rho_b = jnp.broadcast_to(rho, centre.shape[:1])
+        # sumsq is query-independent — identical on every query shard, so
+        # its out_spec mentions only the feature axes (check_rep=False
+        # takes the local copy)
+        w = _shmap(("fs", 2, q), tile.fused_scores,
+                   (P(None, f), P(q, None), P(q)), (P(q, f), P(f)))
+        return w(X, centre, rho_b)
+
+    return ops.ScreenBackend(
+        name=f"shard:{tile.name}",
+        matvec=matvec,
+        fused_scores=fused_scores,
+        # group shards would have to respect group boundaries — group mesh
+        # sessions stay on the GSPMD jnp path (see LassoSession.fit)
+        group_scores=tile.group_scores,
+        fista_step=tile.fista_step,
+        cd_gram_sweep=tile.cd_gram_sweep,
+        prox_step=tile.prox_step,
+    )
 
 
 # ---------------------------------------------------------------------------
 # shard_map building blocks
 # ---------------------------------------------------------------------------
 
-def make_dist_ops(mesh: Mesh):
+def make_dist_ops(mesh: Mesh, backend=None):
     """Build the distributed op suite for a mesh. Every op is jit-compatible
-    and lowers to SPMD with the collectives noted in its docstring."""
+    and lowers to SPMD with the collectives noted in its docstring.
+
+    ``backend`` routes the per-shard tile work ("pallas" | "interpret" |
+    "jnp" | ScreenBackend | None = auto): the local matvec of every
+    reduction runs the resolved backend's ``screen_matvec`` kernel on the
+    shard's (N, p/shards) block."""
     axes = feature_axes(mesh)
-    xspec = P(None, axes)
-    bspec = P(axes)
+    tile = resolve_backend(backend)
+    xspec = P(None, _fspec(mesh))
+    bspec = P(_fspec(mesh))
     rspec = P()
 
     @functools.partial(
-        shard_map, mesh=mesh, in_specs=(xspec, rspec), out_specs=rspec
+        shard_map, mesh=mesh, in_specs=(xspec, rspec), out_specs=rspec,
+        check_rep=False,
     )
     def lambda_max_d(Xb, y):
         """λ_max = max_j |x_jᵀy|. Collectives: one scalar pmax."""
-        return jax.lax.pmax(jnp.max(jnp.abs(Xb.T @ y)), axes)
+        return _pmax(jnp.max(jnp.abs(tile.matvec(Xb, y))), axes)
 
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(xspec, bspec, rspec), out_specs=rspec
     )
     def matvec_d(Xb, bb, y):
         """r = y − Xβ. Collectives: one N-vector psum."""
-        return y - jax.lax.psum(Xb @ bb, axes)
+        return y - _psum(Xb @ bb, axes)
 
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(xspec, rspec, rspec, rspec), out_specs=(bspec, bspec),
+        check_rep=False,
     )
     def screen_scores_d(Xb, centre, rho, eps):
         """EDPP scores + discard mask per local feature block. Zero comms.
-        Same arithmetic as the engine's fused kernel (engine.block_scores)."""
-        scores = block_scores(Xb, centre, rho)
+        One fused backend pass over the block (edpp_screen_scores) — same
+        arithmetic as the engine's single-chip screen."""
+        scores, _ = tile.fused_scores(Xb, centre, rho)
         return scores, scores < 1.0 - eps
 
     @functools.partial(
-        shard_map, mesh=mesh, in_specs=(xspec, rspec), out_specs=rspec
+        shard_map, mesh=mesh, in_specs=(xspec, rspec), out_specs=rspec,
+        check_rep=False,
     )
     def sup_corr_d(Xb, r):
         """‖Xᵀr‖_∞ (for λ_max-style reductions and dual scaling)."""
-        return jax.lax.pmax(jnp.max(jnp.abs(Xb.T @ r)), axes)
+        return _pmax(jnp.max(jnp.abs(tile.matvec(Xb, r))), axes)
 
     return lambda_max_d, matvec_d, screen_scores_d, sup_corr_d
 
 
 def dist_edpp_screen(mesh: Mesh, X, y, lam_next, lam_prev, beta_prev,
-                     lam_max_val, v1_at_lmax, eps: float = EPS_DEFAULT):
+                     lam_max_val, v1_at_lmax, eps: float = EPS_DEFAULT,
+                     backend=None):
     """Full sequential-EDPP screen on the mesh (Corollary 17).
 
     All the dual geometry (θ, v₁, v₂⊥ — N-vectors) is computed replicated;
-    the per-feature test is local. `v1_at_lmax` is sign(x*ᵀy)x* (eq. 17),
-    computed once at path start.
+    the per-feature test is one local fused ``edpp_screen_scores`` pass of
+    the resolved ``backend`` per shard. `v1_at_lmax` is sign(x*ᵀy)x*
+    (eq. 17), computed once at path start.
 
     Returns (discard_mask [p, sharded], scores [p, sharded]).
     """
-    _, matvec_d, screen_scores_d, _ = make_dist_ops(mesh)
+    _, matvec_d, screen_scores_d, _ = make_dist_ops(mesh, backend)
     r = matvec_d(X, beta_prev, y)                    # psum
     theta = r / lam_prev
     at_max = lam_prev >= lam_max_val * (1.0 - 1e-12)
@@ -153,11 +292,13 @@ def dist_edpp_screen(mesh: Mesh, X, y, lam_next, lam_prev, beta_prev,
 
 def dist_edpp_screen_cached(mesh: Mesh, X, y, lam_next, lam_prev,
                             beta_prev, lam_max_val, v1_at_lmax, col_norms,
-                            eps: float = EPS_DEFAULT):
+                            eps: float = EPS_DEFAULT, backend=None):
     """Sequential EDPP with cached column norms (they are λ-independent):
-    one X pass for the residual + one for the scores (§Perf cached_norms)."""
-    axes = feature_axes(mesh)
-    _, matvec_d, _, _ = make_dist_ops(mesh)
+    one X pass for the residual + one backend ``screen_matvec`` pass per
+    shard for the scores (§Perf cached_norms)."""
+    f = _fspec(mesh)
+    tile = resolve_backend(backend)
+    _, matvec_d, _, _ = make_dist_ops(mesh, backend)
     r = matvec_d(X, beta_prev, y)
     theta = r / lam_prev
     at_max = lam_prev >= lam_max_val * (1.0 - 1e-12)
@@ -169,11 +310,12 @@ def dist_edpp_screen_cached(mesh: Mesh, X, y, lam_next, lam_prev,
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(P(None, axes), P(), P(), P(axes), P()),
-        out_specs=(P(axes), P(axes)),
+        in_specs=(P(None, f), P(), P(), P(f), P()),
+        out_specs=(P(f), P(f)),
+        check_rep=False,
     )
     def score_d(Xb, centre, rho, norms_b, eps_):
-        scores = block_scores(Xb, centre, rho, col_norms=norms_b)
+        scores = jnp.abs(tile.matvec(Xb, centre)) + rho * norms_b
         return scores, scores < 1.0 - eps_
 
     return score_d(X, centre, jnp.asarray(rho),
@@ -182,20 +324,23 @@ def dist_edpp_screen_cached(mesh: Mesh, X, y, lam_next, lam_prev,
 
 def dist_edpp_screen_sparse(mesh: Mesh, X, X_active, y, lam_next, lam_prev,
                             beta_active, lam_max_val, v1_at_lmax, col_norms,
-                            eps: float = EPS_DEFAULT):
+                            eps: float = EPS_DEFAULT, backend=None):
     """Beyond-paper screening: the residual r = y − Xβ only needs the ACTIVE
     columns (β is sparse after the previous screen+solve), so the residual
     matvec runs over the gathered active block X_active (n, p_active ≪ p)
-    while the score pass streams the full X once. Total ≈ 1 + p_a/p passes
-    (§Perf sparse_residual; also the fused-Pallas-kernel data movement)."""
+    while the score pass streams the full X once through the backend's
+    ``screen_matvec``. Total ≈ 1 + p_a/p passes (§Perf sparse_residual;
+    also the fused-Pallas-kernel data movement)."""
     axes = feature_axes(mesh)
+    f = _fspec(mesh)
+    tile = resolve_backend(backend)
 
     @functools.partial(
-        shard_map, mesh=mesh, in_specs=(P(None, axes), P(axes), P()),
+        shard_map, mesh=mesh, in_specs=(P(None, f), P(f), P()),
         out_specs=P(),
     )
     def sparse_matvec(Xa_b, ba_b, y):
-        return y - jax.lax.psum(Xa_b @ ba_b, axes)
+        return y - _psum(Xa_b @ ba_b, axes)
 
     r = sparse_matvec(X_active, beta_active, y)
     theta = r / lam_prev
@@ -208,11 +353,12 @@ def dist_edpp_screen_sparse(mesh: Mesh, X, X_active, y, lam_next, lam_prev,
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(P(None, axes), P(), P(), P(axes), P()),
-        out_specs=(P(axes), P(axes)),
+        in_specs=(P(None, f), P(), P(), P(f), P()),
+        out_specs=(P(f), P(f)),
+        check_rep=False,
     )
     def score_d(Xb, centre, rho, norms_b, eps_):
-        scores = block_scores(Xb, centre, rho, col_norms=norms_b)
+        scores = jnp.abs(tile.matvec(Xb, centre)) + rho * norms_b
         return scores, scores < 1.0 - eps_
 
     return score_d(X, centre, jnp.asarray(rho),
@@ -221,36 +367,42 @@ def dist_edpp_screen_sparse(mesh: Mesh, X, X_active, y, lam_next, lam_prev,
 
 # ---------------------------------------------------------------------------
 # Batched multi-query variants: one fitted dictionary, B response vectors.
-# Features stay column-sharded over every mesh axis; the batch rides along
-# as an unsharded leading axis on the query-side tensors, so the recurring
-# collective becomes ONE psum of a (B, N) block instead of B per-query
-# N-vector psums — same bytes, 1/B the collective launches (latency
-# amortised across the batch).
+# Features stay column-sharded over the feature axes; the batch shards over
+# the mesh's `query` axis when B divides it (replicated otherwise), so the
+# recurring collective becomes ONE psum of a (B_local, N) block per query
+# shard instead of B per-query N-vector psums — same bytes, 1/B the
+# collective launches (latency amortised across the batch), and the 2D
+# mesh adds data parallelism on top.
 # ---------------------------------------------------------------------------
 
 def dist_edpp_screen_batched(mesh: Mesh, X, Y, lam_next, lam_prev,
                              beta_prev, lam_max_val, v1_at_lmax, col_norms,
-                             eps: float = EPS_DEFAULT):
+                             eps: float = EPS_DEFAULT, backend=None):
     """Sequential EDPP for B queries on the mesh, cached column norms.
 
-    Y (B, N) replicated, beta_prev (B, p) column-sharded on its feature
-    axis, lam_next/lam_prev/lam_max_val (B,), v1_at_lmax (B, N). Exactly
-    two X passes for the WHOLE batch: one batched residual psum + one
-    batched local score pass (mirror of the fused batched kernel).
+    Y (B, N) query-sharded (or replicated), beta_prev (B, p) column-sharded
+    on its feature axis, lam_next/lam_prev/lam_max_val (B,), v1_at_lmax
+    (B, N). Exactly two X passes for the WHOLE batch: one batched residual
+    psum + one batched backend ``screen_matvec`` pass per shard (mirror of
+    the fused batched kernel).
 
     Returns (discard_mask (B, p) sharded, scores (B, p) sharded).
     """
     axes = feature_axes(mesh)
+    f = _fspec(mesh)
+    q = _qspec(mesh, Y.shape[0])
+    tile = resolve_backend(backend)
 
     @functools.partial(
-        shard_map, mesh=mesh, in_specs=(P(None, axes), P(None, axes), P()),
-        out_specs=P(),
+        shard_map, mesh=mesh,
+        in_specs=(P(None, f), P(q, f), P(q, None)), out_specs=P(q, None),
     )
     def matvec_b(Xb, bb, Y):
-        """R = Y − βXᵀ for the batch: ONE psum of a (B, N) block."""
-        return Y - jax.lax.psum(bb @ Xb.T, axes)
+        """R = Y − βXᵀ for the batch: ONE (B_local, N) psum over the
+        feature axes per query shard."""
+        return Y - _psum(bb @ Xb.T, axes)
 
-    R = matvec_b(X, beta_prev, Y)                    # (B, N) replicated
+    R = matvec_b(X, beta_prev, Y)              # (B, N) query-sharded
     lam_prev = jnp.asarray(lam_prev)[:, None]
     lam_next = jnp.asarray(lam_next)[:, None]
     theta = R / lam_prev
@@ -265,13 +417,15 @@ def dist_edpp_screen_batched(mesh: Mesh, X, Y, lam_next, lam_prev,
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(P(None, axes), P(), P(), P(axes), P()),
-        out_specs=(P(None, axes), P(None, axes)),
+        in_specs=(P(None, f), P(q, None), P(q), P(f), P()),
+        out_specs=(P(q, f), P(q, f)),
+        check_rep=False,
     )
     def score_b(Xb, centre, rho, norms_b, eps_):
-        """Batched local scores: zero comms, same arithmetic as the fused
-        batched kernel (centre @ X_block + ρ‖x_j‖ per query)."""
-        scores = jnp.abs(centre @ Xb) + rho[:, None] * norms_b[None, :]
+        """Batched local scores: zero comms, the backend's batched matvec
+        kernel on the (B_local, N)×(N, p_local) block + ρ‖x_j‖ per query."""
+        scores = jnp.abs(tile.matvec(Xb, centre)) \
+            + rho[:, None] * norms_b[None, :]
         return scores, scores < 1.0 - eps_
 
     scores, mask = score_b(X, centre, rho, col_norms,
@@ -281,31 +435,37 @@ def dist_edpp_screen_batched(mesh: Mesh, X, Y, lam_next, lam_prev,
 
 def dist_fista_batched(mesh: Mesh, X, Y, lam, beta0, lipschitz, *,
                        iters: int = 200, solver_backend=None):
-    """Feature-sharded FISTA over B queries, fixed iteration count.
+    """Feature- (and query-) sharded FISTA over B queries, fixed iteration
+    count.
 
-    Per iteration ONE psum of the (B, N) fitted block replaces the B
-    per-query N-vector psums of a query loop; the per-shard batched
-    soft-threshold + momentum dispatches through the same backend
-    ``prox_step`` op (batch-polymorphic) with per-query λ (B,).
+    Per iteration ONE psum of the (B_local, N) fitted block per query
+    shard replaces the B per-query N-vector psums of a query loop; the
+    per-shard gradient + soft-threshold + momentum runs the backend's
+    fused ``fista_step`` kernel (batch-polymorphic) on the local
+    (N, p/shards) block with per-query λ (B,).
     """
     axes = feature_axes(mesh)
+    f = _fspec(mesh)
+    q = _qspec(mesh, Y.shape[0])
     backend = resolve_solver_backend(solver_backend)
-    prox_op = backend.prox_step or resolve_solver_backend("jnp").prox_step
+    jnp_b = resolve_solver_backend("jnp")
+    fista_op = backend.fista_step or jnp_b.fista_step
     step = 1.0 / jnp.maximum(lipschitz, 1e-12)
+    lam = jnp.broadcast_to(jnp.asarray(lam, X.dtype), Y.shape[:1])
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(P(None, axes), P(), P(None, axes), P(None, axes), P(),
-                  P()),
-        out_specs=(P(None, axes), P(None, axes), P()),
+        in_specs=(P(None, f), P(q, None), P(q, f), P(q, f), P(), P(q)),
+        out_specs=(P(q, f), P(q, f), P()),
         check_rep=False,
     )
     def one_iter(Xb, Y, beta_b, z_b, t, lam):
-        XZ = jax.lax.psum(z_b @ Xb.T, axes)          # (B, N): one collective
-        g = (XZ - Y) @ Xb                            # (B, p_local)
+        XZ = _psum(z_b @ Xb.T, axes)      # (B_local, N): one collective
         t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
         mom = (t - 1.0) / t_new
-        beta_new, z_new = prox_op(z_b, g, beta_b, step, lam, mom)
+        # fused backend kernel: gradient matvec over the local block +
+        # prox + momentum in one pass (r = Xz − y)
+        beta_new, z_new = fista_op(Xb, XZ - Y, z_b, beta_b, step, lam, mom)
         return beta_new, z_new, t_new
 
     def scan_body(carry, _):
@@ -319,18 +479,23 @@ def dist_fista_batched(mesh: Mesh, X, Y, lam, beta0, lipschitz, *,
     return beta
 
 
-def dist_power_iteration(mesh: Mesh, X, iters: int = 30):
-    """‖X‖₂² via distributed power iteration (one psum per iter)."""
+def dist_power_iteration(mesh: Mesh, X, iters: int = 30, backend=None):
+    """‖X‖₂² via distributed power iteration (one psum per iter); the
+    w = Xᵀu half-step runs the resolved backend's ``screen_matvec`` kernel
+    on the local feature block."""
     axes = feature_axes(mesh)
+    f = _fspec(mesh)
+    tile = resolve_backend(backend)
 
     @functools.partial(
-        shard_map, mesh=mesh, in_specs=(P(None, axes), P(axes)),
-        out_specs=(P(axes), P()),
+        shard_map, mesh=mesh, in_specs=(P(None, f), P(f)),
+        out_specs=(P(f), P()),
+        check_rep=False,
     )
     def body_sm(Xb, vb):
-        u = jax.lax.psum(Xb @ vb, axes)              # (N,) replicated
-        w = Xb.T @ u                                 # local block of XᵀXv
-        nrm = jnp.sqrt(jax.lax.psum(jnp.sum(jnp.square(w)), axes))
+        u = _psum(Xb @ vb, axes)                     # (N,) replicated
+        w = tile.matvec(Xb, u).astype(X.dtype)       # local block of XᵀXv
+        nrm = jnp.sqrt(_psum(jnp.sum(jnp.square(w)), axes))
         return w / (nrm + 1e-30), nrm
 
     p = X.shape[1]
@@ -347,10 +512,10 @@ def dist_power_iteration(mesh: Mesh, X, iters: int = 30):
     v, _ = jax.lax.fori_loop(0, iters, body, (v, jnp.asarray(0.0, X.dtype)))
 
     @functools.partial(
-        shard_map, mesh=mesh, in_specs=(P(None, axes), P(axes)), out_specs=P()
+        shard_map, mesh=mesh, in_specs=(P(None, f), P(f)), out_specs=P()
     )
     def rayleigh(Xb, vb):
-        u = jax.lax.psum(Xb @ vb, axes)
+        u = _psum(Xb @ vb, axes)
         return jnp.sum(jnp.square(u))
 
     return rayleigh(X, v)
@@ -371,7 +536,9 @@ def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
 
     Collective-overlap modes (§Perf hillclimb):
 
-    * ``"none"``    — synchronous reference: one full-N psum per iteration.
+    * ``"none"``    — synchronous reference: one full-N psum per iteration;
+      the whole local tail (gradient matvec + prox + momentum) is the
+      backend's fused ``fista_step`` kernel on the local block.
     * ``"chunked"`` — **exact** overlap: split the sample axis into
       ``n_chunks``; issue one psum per chunk and compute each chunk's
       gradient partial ``X_cᵀ(Xz_c − y_c)`` as soon as its psum lands, so
@@ -384,8 +551,11 @@ def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
       Kept for the record; do not use in production.
     """
     axes = feature_axes(mesh)
+    f = _fspec(mesh)
     backend = resolve_solver_backend(solver_backend)
-    prox_op = backend.prox_step or resolve_solver_backend("jnp").prox_step
+    jnp_b = resolve_solver_backend("jnp")
+    prox_op = backend.prox_step or jnp_b.prox_step
+    fista_op = backend.fista_step or jnp_b.fista_step
     step = 1.0 / jnp.maximum(lipschitz, 1e-12)
     n = X.shape[0]
     assert overlap in ("none", "chunked", "stale")
@@ -393,14 +563,16 @@ def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
 
     @functools.partial(
         shard_map, mesh=mesh,
-        in_specs=(P(None, axes), P(), P(axes), P(axes), P(), P(None)),
-        out_specs=(P(axes), P(axes), P(), P(None)),
+        in_specs=(P(None, f), P(), P(f), P(f), P(), P(None)),
+        out_specs=(P(f), P(f), P(), P(None)),
         check_rep=False,
     )
     def one_iter(Xb, y, beta_b, z_b, t, Xz_prev):
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        mom = (t - 1.0) / t_new
         if overlap == "stale":
             Xz = Xz_prev
-            Xz_next = jax.lax.psum(Xb @ z_b, axes)
+            Xz_next = _psum(Xb @ z_b, axes)
             g = Xb.T @ (Xz - y)
         elif overlap == "chunked":
             # Per-chunk psum; gradient partials consume each chunk as it
@@ -411,16 +583,17 @@ def dist_fista(mesh: Mesh, X, y, lam, beta0, lipschitz, *,
                 hi = min(n, lo + chunk)
                 Xc = jax.lax.slice_in_dim(Xb, lo, hi, axis=0)
                 yc = jax.lax.slice_in_dim(y, lo, hi, axis=0)
-                fit_c = jax.lax.psum(Xc @ z_b, axes)
+                fit_c = _psum(Xc @ z_b, axes)
                 parts.append(Xc.T @ (fit_c - yc))
             g = functools.reduce(jnp.add, parts)
             Xz_next = Xz_prev
         else:
-            Xz = jax.lax.psum(Xb @ z_b, axes)
-            Xz_next = Xz
-            g = Xb.T @ (Xz - y)
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        mom = (t - 1.0) / t_new
+            # synchronous: one psum, then the backend's fused fista_step
+            # kernel does gradient + prox + momentum on the local block
+            Xz = _psum(Xb @ z_b, axes)
+            beta_new, z_new = fista_op(Xb, Xz - y, z_b, beta_b,
+                                       step, lam, mom)
+            return beta_new, z_new, t_new, Xz
         beta_new, z_new = prox_op(z_b, g, beta_b, step, lam, mom)
         return beta_new, z_new, t_new, Xz_next
 

@@ -189,12 +189,64 @@ def _make_state_batched(X, y, beta, lam, lmax, v1max):
 
 
 @jax.jit
+def _make_state_fit(y, fitted, beta, lam, lmax, v1max):
+    """`_make_state` with the fitted values Xβ supplied by the caller.
+
+    The path driver computes them from the *reduced bucket* (Xr·β_r — the
+    bucket is gathered replicated), so the dual point costs no full-X pass
+    AND its float arithmetic is identical between sharded and unsharded
+    runs: a column-sharded X·β would psum partial fits in a shard-count-
+    dependent order, flipping last-bit mask decisions (docs/distributed.md
+    exactness contract)."""
+    theta_seq = (y - fitted) / lam
+    at_max = lam >= lmax * (1.0 - 1e-12)
+    theta = jnp.where(at_max, y / lmax, theta_seq)
+    v1 = jnp.where(at_max, v1max, y / lam - theta_seq)
+    return scr.DualState(
+        theta=theta,
+        lam=jnp.where(at_max, lmax, jnp.asarray(lam, y.dtype)),
+        v1=v1,
+        at_lmax=jnp.asarray(at_max),
+        beta_l1=jnp.where(at_max, 0.0, jnp.sum(jnp.abs(beta))),
+    )
+
+
+@jax.jit
+def _make_state_batched_fit(y, fitted, beta, lam, lmax, v1max):
+    """Batched `_make_state_fit`: y/fitted (B, n), beta (B, p), lam (B,)."""
+    theta_seq = (y - fitted) / scr._col(lam)
+    at_max = lam >= lmax * (1.0 - 1e-12)                 # (B,)
+    at_col = scr._col(at_max)
+    theta = jnp.where(at_col, y / scr._col(lmax), theta_seq)
+    v1 = jnp.where(at_col, v1max, y / scr._col(lam) - theta_seq)
+    return scr.DualState(
+        theta=theta,
+        lam=jnp.where(at_max, lmax, lam).astype(y.dtype),
+        v1=v1,
+        at_lmax=at_max,
+        beta_l1=jnp.where(at_max, 0.0, jnp.sum(jnp.abs(beta), axis=-1)),
+    )
+
+
+@jax.jit
 def _make_group_state(X, y, beta, lam, lmax, theta_max, v1max):
     theta_seq = (y - X @ beta) / lam
     at_max = lam >= lmax * (1.0 - 1e-12)
     return gscr.GroupDualState(
         theta=jnp.where(at_max, theta_max, theta_seq),
         lam=jnp.where(at_max, lmax, jnp.asarray(lam, X.dtype)),
+        v1=jnp.where(at_max, v1max, y / lam - theta_seq),
+    )
+
+
+@jax.jit
+def _make_group_state_fit(y, fitted, beta, lam, lmax, theta_max, v1max):
+    """`_make_group_state` from caller-supplied fitted values Xβ."""
+    theta_seq = (y - fitted) / lam
+    at_max = lam >= lmax * (1.0 - 1e-12)
+    return gscr.GroupDualState(
+        theta=jnp.where(at_max, theta_max, theta_seq),
+        lam=jnp.where(at_max, lmax, jnp.asarray(lam, y.dtype)),
         v1=jnp.where(at_max, v1max, y / lam - theta_seq),
     )
 
@@ -405,14 +457,23 @@ class ScreeningEngine:
     def state_at_lambda_max(self) -> scr.DualState:
         return self.ws.state_at_lambda_max()
 
-    def make_state(self, beta, lam) -> scr.DualState:
+    def make_state(self, beta, lam, *, fitted=None) -> scr.DualState:
         """Sequential DualState from the solution at λ (KKT eq. 3).
-        Batched: beta (B, p), lam (B,) → batched state, still no X pass."""
+        Batched: beta (B, p), lam (B,) → batched state, still no X pass.
+        ``fitted`` (= Xβ, shaped like y) skips even the X·β matvec and
+        keeps θ's arithmetic shard-invariant (see `_make_state_fit`)."""
         if self.ws.batch is not None:
+            lam_b = jnp.asarray(lam, self.ws.X.dtype)
+            if fitted is not None:
+                return _make_state_batched_fit(
+                    self.ws.y, fitted, beta, lam_b,
+                    self.ws.lam_max_array(), self.ws.v1_at_lmax)
             return _make_state_batched(
-                self.ws.X, self.ws.y, beta,
-                jnp.asarray(lam, self.ws.X.dtype),
+                self.ws.X, self.ws.y, beta, lam_b,
                 self.ws.lam_max_array(), self.ws.v1_at_lmax)
+        if fitted is not None:
+            return _make_state_fit(self.ws.y, fitted, beta, lam,
+                                   self.ws.lam_max, self.ws.v1_at_lmax)
         return _make_state(self.ws.X, self.ws.y, beta, lam,
                            self.ws.lam_max, self.ws.v1_at_lmax)
 
@@ -535,7 +596,11 @@ class GroupScreeningEngine:
         return gscr.GroupDualState(theta=self.y / lmax, lam=lmax,
                                    v1=self.v1_at_lmax)
 
-    def make_state(self, beta, lam) -> gscr.GroupDualState:
+    def make_state(self, beta, lam, *, fitted=None) -> gscr.GroupDualState:
+        if fitted is not None:
+            return _make_group_state_fit(
+                self.y, fitted, beta, lam, self.lam_max,
+                self.y / self.lam_max, self.v1_at_lmax)
         return _make_group_state(
             self.X, self.y, beta, lam, self.lam_max,
             self.y / self.lam_max, self.v1_at_lmax)

@@ -110,9 +110,10 @@ def group_strong_mask(X, y, lam_next, state: GroupDualState, m: int,
 
 
 def group_kkt_violations(X, y, beta, lam, discarded_groups, m: int,
-                         tol: float = 1e-4):
-    """Discarded groups violating ‖X_gᵀr‖ ≤ λ√n_g (KKT eq. 53)."""
-    r = y - X @ beta
+                         tol: float = 1e-4, fitted=None):
+    """Discarded groups violating ‖X_gᵀr‖ ≤ λ√n_g (KKT eq. 53).
+    ``fitted`` (= Xβ) skips the full X·β pass — see kkt_violations."""
+    r = y - (X @ beta if fitted is None else fitted)
     scores = jnp.linalg.norm((X.T @ r).reshape(-1, m), axis=1)
     viol = scores > lam * jnp.sqrt(float(m)) * (1.0 + tol)
     return jnp.logical_and(viol, discarded_groups)

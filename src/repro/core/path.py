@@ -89,6 +89,8 @@ class PathStepStats:
     gap_checks: int = 0           # duality-gap evals this step's solves ran
     gram_step_frac: float = 0.0   # fraction of this step's solves on Gram CD
     solver_backend: str = ""      # kernel backend the solves dispatched to
+    screen_backend: str = ""      # backend the screens dispatched to
+    #                               ("shard:<tile>" on a mesh session)
     bucket: int = 0               # padded bucket size (columns) solved at
     solver_x_passes: float = 0.0  # solver HBM passes in full-X equivalents
     batch_size: int = 1           # queries screened/solved together this step
@@ -195,12 +197,20 @@ def lambda_grid(lam_max: float, num: int = 100, lo_frac: float = 0.05,
 
 def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                  solver_engine: SolverEngine, need_kkt: bool,
-                 kkt_fn, batch: int | None = None):
+                 kkt_fn, batch: int | None = None, reshard=None):
     """The shared screen → reduce → solve → KKT loop over a decreasing grid.
 
     ``m`` is the unit size: 1 for the Lasso (units = features), the group
     size for the group Lasso (units = groups; whole groups are gathered).
-    ``kkt_fn(beta_full, lam, discard)`` flags violations per unit.
+    ``kkt_fn(beta_full, lam, discard, fitted)`` flags violations per unit.
+
+    ``reshard`` (mesh sessions) is applied to the gathered reduced bucket:
+    `jnp.take` from a column-sharded X already yields a replicated block,
+    but the hook pins that down so every reduced solve — whatever kernel
+    backend — runs on replicated arrays. Together with the bucket-computed
+    fitted values (``fitted = Xr·β_r``, threaded into KKT and the next
+    dual state instead of a full, psum-ordered X·β), this is what makes
+    sharded and unsharded masks bit-identical (docs/distributed.md).
 
     ``batch``: None runs the classic single-query path (Y (n,), lambdas
     (K,), engine called with scalar λ). batch=B runs B queries against one
@@ -293,12 +303,15 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             bucket = min(next_pow2(max(kept.size, bucket_min)), units)
             if kept.size == 0:
                 beta_full = jnp.zeros((B, p), dtype=X.dtype)
+                fitted = jnp.zeros((B, X.shape[0]), dtype=X.dtype)
                 res_iters, res_gap, q_conv = 0, 0.0, B
                 conv_vec = np.ones((B,), dtype=bool)
             else:
                 col_idx = (kept[:, None] * m + arange_m).reshape(-1)
                 idx, valid = _pad_indices(col_idx, bucket * m)
                 Xr = _gather_cols(X, idx, valid, bucket * m)
+                if reshard is not None:
+                    Xr = reshard(Xr)
                 if batch is None:
                     beta0 = jnp.take(beta_prev[0], idx) * valid
                     res = solver_engine.solve(Xr, float(lam_vec[0]), beta0,
@@ -311,6 +324,9 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                     res_iters, res_gap = int(res.iters), float(res.gap)
                     q_conv = int(bool(res.converged))
                     conv_vec = np.array([bool(res.converged)])
+                    # fitted values from the reduced bucket (replicated,
+                    # shard-invariant) — feeds KKT and the next dual state
+                    fitted = (Xr @ res.beta)[None, :]
                 else:
                     # per-query validity on the union buffer: each query
                     # solves exactly its own reduced problem
@@ -331,6 +347,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                     res_gap = float(jnp.max(res.gap))
                     q_conv = int(jnp.sum(res.converged))
                     conv_vec = np.asarray(res.converged).astype(bool)
+                    fitted = res.beta @ Xr.T               # (B, n)
                 solves += 1
                 gram_solves += int(solver_engine.last_used_gram)
                 gap_checks += solver_engine.last_gap_checks
@@ -340,11 +357,12 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                 break
             if batch is None:
                 viol = np.asarray(kkt_fn(beta_full[0], float(lam_vec[0]),
-                                         jnp.asarray(discard_np[0])))[None, :]
+                                         jnp.asarray(discard_np[0]),
+                                         fitted[0]))[None, :]
             else:
                 viol = np.asarray(kkt_fn(beta_full,
                                          jnp.asarray(lam_vec, X.dtype),
-                                         jnp.asarray(discard_np)))
+                                         jnp.asarray(discard_np), fitted))
             viol = viol & live[:, None]
             if not viol.any() or kkt_rounds >= cfg.max_kkt_rounds:
                 break
@@ -366,6 +384,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             gap_checks=gap_checks,
             gram_step_frac=gram_solves / solves if solves else 0.0,
             solver_backend=solver_engine.backend_name,
+            screen_backend=screen_engine.backend_name,
             bucket=bucket * m,
             solver_x_passes=solver_x_passes,
             batch_size=B,
@@ -382,10 +401,11 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
         if cfg.sequential:
             if batch is None:
                 state = screen_engine.make_state(beta_full[0],
-                                                 float(lam_vec[0]))
+                                                 float(lam_vec[0]),
+                                                 fitted=fitted[0])
             else:
                 state = screen_engine.make_state(
-                    beta_full, jnp.asarray(lam_vec, X.dtype))
+                    beta_full, jnp.asarray(lam_vec, X.dtype), fitted=fitted)
         # basic variants keep `state` pinned at λmax (paper §4.1.1)
     # Unified result: the leading batch axis is ALWAYS present (B = 1 for a
     # single query — the values are bit-identical to the squeezed layout).

@@ -448,15 +448,21 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
 # KKT post-check (needed by the strong rule; free safety telemetry otherwise)
 # ---------------------------------------------------------------------------
 
-def kkt_violations(X, y, beta, lam, discarded, tol: float = 1e-4):
+def kkt_violations(X, y, beta, lam, discarded, tol: float = 1e-4,
+                   fitted=None):
     """Features whose KKT condition |x_iᵀr| ≤ λ is violated among the
     discarded set — the strong rule's correctness loop (paper §1).
-    Batched: y/beta (B, ·), lam (B,) → (B, p) violation flags."""
+    Batched: y/beta (B, ·), lam (B,) → (B, p) violation flags.
+
+    ``fitted`` (the values Xβ, same shape as y) skips the full X·β pass:
+    the path driver supplies them from the reduced bucket, which also keeps
+    the residual arithmetic identical between sharded and unsharded runs
+    (a column-sharded X·β would psum in shard-count-dependent order)."""
     if _is_batched(y):
-        r = y - beta @ X.T
+        r = y - (beta @ X.T if fitted is None else fitted)
         viol = jnp.abs(r @ X) > _col(lam) * (1.0 + tol)
         return jnp.logical_and(viol, discarded)
-    r = y - X @ beta
+    r = y - (X @ beta if fitted is None else fitted)
     viol = jnp.abs(X.T @ r) > lam * (1.0 + tol)
     return jnp.logical_and(viol, discarded)
 

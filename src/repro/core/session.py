@@ -19,9 +19,17 @@ and re-plumb that state. This module is the redesign:
 
 Dispatch is purely structural — input rank picks single vs batched,
 ``fit(..., groups=m)`` picks the group drivers, ``fit(..., mesh=mesh)``
-places the dictionary column-sharded on the mesh (GSPMD inserts the
-collectives; backends are pinned to ``jnp``). Every call returns the same
-unified :class:`~repro.core.path.PathResult` with a leading batch axis.
+places the dictionary column-sharded over the mesh's feature axes (a 2D
+``Mesh(('query', 'feature'))`` additionally shards query batches) and
+resolves the screen backend to the PER-SHARD dispatcher
+:func:`repro.core.distributed.sharded_backend` — the same Pallas/jnp tile
+kernels as the single-chip engines, run on each local block under
+``shard_map`` (``session.backend_name == "shard:<tile>"``). Reduced solves
+run the tile backend directly on replicated gathered buckets, so mesh
+masks are bit-identical to the unsharded engine's (docs/distributed.md).
+Group mesh sessions remain GSPMD + ``jnp`` (partial support: any other
+backend raises). Every call returns the same unified
+:class:`~repro.core.path.PathResult` with a leading batch axis.
 
 The session owns, across every ``path`` call:
 
@@ -54,6 +62,7 @@ import dataclasses
 import warnings
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -340,10 +349,14 @@ class LassoSession:
 
         ``groups=m`` switches every subsequent ``path`` call to the group
         drivers (contiguous groups of size m). ``mesh`` places X
-        column-sharded over every mesh axis (queries replicated); the
-        engines are pinned to the GSPMD-friendly ``jnp`` backend. Pass
-        ``geometry`` (a prefitted :class:`DictionaryGeometry`) to adopt an
-        existing fit instead of running one.
+        column-sharded over the mesh's feature axes (batched queries shard
+        over a ``query`` axis when present) and resolves the configured
+        screen backend per-shard (``sharded_backend``; explicit
+        ``backend="pallas"`` etc. is honoured, not silently downgraded).
+        Group mesh sessions are the remaining partial-support case: they
+        run GSPMD with ``jnp`` and raise on any other explicit backend.
+        Pass ``geometry`` (a prefitted :class:`DictionaryGeometry`) to
+        adopt an existing fit instead of running one.
         """
         cfg = config if config is not None else PathConfig()
         if not isinstance(cfg, PathConfig):
@@ -365,13 +378,20 @@ class LassoSession:
         self.config = cfg
         self.groups = m
         self.mesh = mesh
+        self._shard_backends: dict[str, ops.ScreenBackend] = {}
         if mesh is not None:
-            for what, b in (("screening", cfg.screen.backend),
-                            ("solver", cfg.solve.backend)):
-                if isinstance(b, str) and b != "jnp":
-                    raise ValueError(
-                        f"mesh sessions run GSPMD with the jnp backend; "
-                        f"got {what} backend {b!r}")
+            if m > 1:
+                # partial support: no sharded group kernel yet — the group
+                # path stays GSPMD+jnp, and anything else must fail loudly
+                # rather than silently downgrade
+                for what, b in (("screening", cfg.screen.backend),
+                                ("solver", cfg.solve.backend)):
+                    name = b.name if isinstance(b, ops.ScreenBackend) else b
+                    if name is not None and name != "jnp":
+                        raise ValueError(
+                            f"group mesh sessions run GSPMD with the jnp "
+                            f"backend (sharded group kernels are not "
+                            f"supported yet); got {what} backend {name!r}")
             from . import distributed as dist
             X = dist.place_dictionary(mesh, X)
         self.X = jnp.asarray(X)
@@ -394,24 +414,52 @@ class LassoSession:
             self._geometry(self._default_backend)   # the one fused fit pass
         return self
 
+    def _resolve_for_session(self, backend) -> ops.ScreenBackend:
+        """Resolve a configured backend to the instance this session runs.
+
+        Off-mesh this is plain :func:`resolve_backend`. On a Lasso mesh the
+        configured tile backend — including an explicit ``"pallas"`` — is
+        wrapped in the per-shard dispatcher
+        :func:`repro.core.distributed.sharded_backend` (cached per tile),
+        so an explicit choice is honoured rather than silently downgraded.
+        Group mesh sessions stay GSPMD + ``jnp`` and raise on anything
+        else (per-call overrides included).
+        """
+        if self.mesh is None or (isinstance(backend, ops.ScreenBackend)
+                                 and backend.name.startswith("shard:")):
+            return resolve_backend(backend)
+        if self.groups > 1:
+            inst = resolve_backend(backend or "jnp")
+            if inst.name != "jnp":
+                raise ValueError(
+                    f"group mesh sessions run GSPMD with the jnp backend "
+                    f"(sharded group kernels are not supported yet); got "
+                    f"backend {inst.name!r}")
+            return inst
+        from . import distributed as dist
+        if isinstance(backend, str) and backend.startswith("shard:"):
+            backend = backend[len("shard:"):]
+        tile = resolve_backend(backend)
+        cached = self._shard_backends.get(tile.name)
+        if cached is None:
+            cached = dist.sharded_backend(self.mesh, tile)
+            self._shard_backends[tile.name] = cached
+        return cached
+
     def _backend_name(self, backend) -> str:
-        if isinstance(backend, ops.ScreenBackend):
-            return backend.name
-        if self.mesh is not None and backend is None:
-            return "jnp"
-        return resolve_backend(backend).name
+        return self._resolve_for_session(backend).name
 
     def _geometry(self, backend=None):
         """The fitted geometry for a backend (built on first use, cached)."""
         b = backend if backend is not None else self._default_backend
-        name = self._backend_name(b)
-        geom = self._geometries.get(name)
+        inst = self._resolve_for_session(b)
+        geom = self._geometries.get(inst.name)
         if geom is None:
             if self.groups > 1:
-                geom = GroupDictionaryGeometry(self.X, self.groups, name)
+                geom = GroupDictionaryGeometry(self.X, self.groups, inst)
             else:
-                geom = DictionaryGeometry(self.X, name)
-            self._geometries[name] = geom
+                geom = DictionaryGeometry(self.X, inst)
+            self._geometries[inst.name] = geom
         return geom
 
     # ---------------------------------------------------------- properties
@@ -486,13 +534,30 @@ class LassoSession:
     # ------------------------------------------------------------- drivers
     def _solver_engine(self, y, cfg: PathConfig) -> SolverEngine:
         backend = cfg.solve.backend
-        if self.mesh is not None and backend is None:
-            backend = "jnp"
+        if self.mesh is not None:
+            from . import distributed as dist
+            if self.groups > 1 and backend is None:
+                backend = "jnp"
+            # Reduced solves run the tile backend directly on replicated
+            # gathered buckets; keep y off the query sharding so Pallas
+            # tiles only ever see plain replicated arrays.
+            y = jax.device_put(y, dist.replicated(self.mesh))
         return SolverEngine(
             y, solver=cfg.solve.resolved_strategy(self.groups),
             backend=backend, tol=cfg.solve.tol, max_iter=cfg.solve.max_iter,
             gap_check_cadence=cfg.solve.gap_check_cadence,
             eig_cache=self._eig_cache)
+
+    def _reshard(self):
+        """The bucket placement hook for ``_path_driver``: on a mesh, pin
+        every gathered reduced bucket Xr replicated so the per-step fitted
+        values Xr·β (and the solver kernels) are mesh-shape independent —
+        the root of the bit-identical mask contract. Off-mesh: None."""
+        if self.mesh is None:
+            return None
+        from . import distributed as dist
+        rep = dist.replicated(self.mesh)
+        return lambda a: jax.device_put(a, rep)
 
     def _need_kkt(self, cfg: PathConfig) -> bool:
         rule = cfg.screen.rule
@@ -509,14 +574,14 @@ class LassoSession:
         solver = self._solver_engine(y, cfg)
         X = self.X
 
-        def kkt_fn(beta_full, lam, discard):
+        def kkt_fn(beta_full, lam, discard, fitted=None):
             return _kkt_violations(X, y, beta_full, lam, discard,
-                                   cfg.screen.kkt_tol)
+                                   cfg.screen.kkt_tol, fitted)
 
         return _path_driver(
             X, y, lambdas, cfg, m=1, screen_engine=eng,
             solver_engine=solver, need_kkt=self._need_kkt(cfg),
-            kkt_fn=kkt_fn)
+            kkt_fn=kkt_fn, reshard=self._reshard())
 
     def _lasso_path_batched(self, Y, lambdas, cfg, grid_kw) -> PathResult:
         B = Y.shape[0]
@@ -545,14 +610,14 @@ class LassoSession:
         solver = self._solver_engine(Y, cfg)
         X = self.X
 
-        def kkt_fn(beta_full, lam, discard):
+        def kkt_fn(beta_full, lam, discard, fitted=None):
             return _kkt_violations(X, Y, beta_full, lam, discard,
-                                   cfg.screen.kkt_tol)
+                                   cfg.screen.kkt_tol, fitted)
 
         return _path_driver(
             X, Y, lambdas, cfg, m=1, screen_engine=eng,
             solver_engine=solver, need_kkt=self._need_kkt(cfg),
-            kkt_fn=kkt_fn, batch=B)
+            kkt_fn=kkt_fn, batch=B, reshard=self._reshard())
 
     def _group_path(self, y, lambdas, cfg, grid_kw) -> PathResult:
         m = self.groups
@@ -563,14 +628,14 @@ class LassoSession:
         solver = self._solver_engine(y, cfg)
         X = self.X
 
-        def kkt_fn(beta_full, lam, discard):
+        def kkt_fn(beta_full, lam, discard, fitted=None):
             return _group_kkt_violations(X, y, beta_full, lam, discard, m,
-                                         cfg.screen.kkt_tol)
+                                         cfg.screen.kkt_tol, fitted)
 
         return _path_driver(
             X, y, lambdas, cfg, m=m, screen_engine=eng,
             solver_engine=solver, need_kkt=self._need_kkt(cfg),
-            kkt_fn=kkt_fn)
+            kkt_fn=kkt_fn, reshard=self._reshard())
 
     def _group_path_batched(self, Y, lambdas, cfg, grid_kw) -> PathResult:
         """B group paths against one fitted dictionary.
@@ -636,6 +701,7 @@ def _merge_step_stats(steps: list[PathStepStats]) -> PathStepStats:
         gap_checks=sum(s.gap_checks for s in steps),
         gram_step_frac=float(np.mean([s.gram_step_frac for s in steps])),
         solver_backend=steps[0].solver_backend,
+        screen_backend=steps[0].screen_backend,
         bucket=max(s.bucket for s in steps),
         solver_x_passes=sum(s.solver_x_passes for s in steps),
         batch_size=B,

@@ -43,6 +43,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def resolve_tiles(n: int, p: int, bn: int | None = None,
+                  bp: int | None = None) -> tuple[int, int]:
+    """Default kernel tiles, shrunk to the (local) problem and capped at 512.
+
+    ``bn`` rounds up to a sublane multiple (16 covers f32 and bf16), ``bp``
+    to the 128-lane dim. The shrink matters under ``shard_map``: a feature
+    shard sees only its local (n, p/shards) block, and padding a 64-column
+    shard to a 512-wide tile would multiply the kernel's flops 8×. Explicit
+    ``bn``/``bp`` pass through unchanged (perf experiments).
+    """
+    if bn is None:
+        bn = min(512, -(-n // 16) * 16)
+    if bp is None:
+        bp = min(512, -(-p // 128) * 128)
+    return bn, bp
+
+
 def _centre_block(centre: jax.Array, n_pad: int):
     """Lift a (n,)|(B, n) centre to a sublane-padded (Bp, n+n_pad) block.
 
@@ -89,8 +106,8 @@ def edpp_screen_scores(
     centre: jax.Array,
     rho,
     *,
-    bn: int = 512,
-    bp: int = 512,
+    bn: int | None = None,
+    bp: int | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused scores[j] = |x_jᵀ·centre| + rho·‖x_j‖ and sumsq[j] = ‖x_j‖².
@@ -99,8 +116,11 @@ def edpp_screen_scores(
     and columns are exact no-ops for both accumulators). ``centre`` may be
     (n,) or (B, n) — the batched call still reads X exactly once; ``rho`` is
     then scalar-or-(B,). ``sumsq`` is always (p,) (dictionary geometry).
+    Tiles default to :func:`resolve_tiles` (shrink-to-problem, 512 cap) so
+    shard-local blocks under ``shard_map`` don't pay full-tile padding.
     """
     n, p = X.shape
+    bn, bp = resolve_tiles(n, p, bn, bp)
     n_pad = -n % bn
     p_pad = -p % bp
     Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))
@@ -156,14 +176,16 @@ def screen_matvec(
     X: jax.Array,
     centre: jax.Array,
     *,
-    bn: int = 512,
-    bp: int = 512,
+    bn: int | None = None,
+    bp: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """dot[j] = x_jᵀ·centre — the per-step screening matvec when column norms
     are cached across the λ-path (X is fixed along the path). ``centre`` may
-    be (B, n): one pass over X yields all B correlation rows (B, p)."""
+    be (B, n): one pass over X yields all B correlation rows (B, p). Tiles
+    default to :func:`resolve_tiles` (shard-local blocks stay unpadded)."""
     n, p = X.shape
+    bn, bp = resolve_tiles(n, p, bn, bp)
     n_pad = -n % bn
     p_pad = -p % bp
     Xp = jnp.pad(X, ((0, n_pad), (0, p_pad)))

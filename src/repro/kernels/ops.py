@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .edpp_screen import edpp_screen_scores, screen_matvec
+from .edpp_screen import edpp_screen_scores, resolve_tiles, screen_matvec
 from .group_screen import group_screen_scores
 from .prox_step import prox_step
 from .solver_step import GRAM_BUCKET_MAX, cd_gram_sweep, fista_step
@@ -150,6 +150,7 @@ __all__ = [
     "group_edpp_screen",
     "group_screen_scores",
     "prox_step",
+    "resolve_tiles",
     "screen_matvec",
     "INTERPRET",
 ]

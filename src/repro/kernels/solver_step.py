@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .edpp_screen import resolve_tiles
 from .ref import _acc_dtype
 
 # VMEM guard for cd_gram_sweep: G is (b, b) f32/f64 and must fit on-chip
@@ -119,10 +120,7 @@ def fista_step(
     to a 512×512 tile would multiply the whole solve's flops.
     """
     n, p = X.shape
-    if bn is None:
-        bn = min(512, -(-n // 16) * 16)      # sublane multiple (f32 + bf16)
-    if bp is None:
-        bp = min(512, -(-p // 128) * 128)    # lane multiple
+    bn, bp = resolve_tiles(n, p, bn, bp)
     acc = _acc_dtype(X)
     n_pad = -n % bn
     p_pad = -p % bp

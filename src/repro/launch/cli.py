@@ -79,6 +79,45 @@ def add_serve_args(ap: argparse.ArgumentParser, *, b_max: int = 8,
                          "compare)")
 
 
+def add_mesh_arg(ap: argparse.ArgumentParser) -> None:
+    """``--mesh QxF``: run the session on a 2D (queries × features) mesh.
+
+    Q shards query batches (data parallel), F shards dictionary columns
+    (the screens run per-shard tile kernels under shard_map). Q·F must
+    not exceed the visible device count; on CPU combine with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to fake
+    devices.
+    """
+    ap.add_argument("--mesh", default=None, metavar="QxF",
+                    help="2D device mesh 'QxF' (e.g. 2x4): Q query shards "
+                         "× F feature shards (default: no mesh, single "
+                         "device)")
+
+
+def make_mesh(args):
+    """The jax Mesh for ``--mesh QxF`` (None when the flag is absent).
+
+    Imports jax — only call after :func:`setup_jax`.
+    """
+    spec = getattr(args, "mesh", None)
+    if spec is None:
+        return None
+    import jax
+    try:
+        q, f = (int(t) for t in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'QxF' (e.g. 2x4), got {spec!r}")
+    if q < 1 or f < 1:
+        raise SystemExit(f"--mesh axes must be ≥ 1, got {spec!r}")
+    n_dev = len(jax.devices())
+    if q * f > n_dev:
+        raise SystemExit(
+            f"--mesh {spec} needs {q * f} devices but only {n_dev} are "
+            f"visible (on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={q * f})")
+    return jax.make_mesh((q, f), ("query", "feature"))
+
+
 def add_x64_arg(ap: argparse.ArgumentParser, *, default: bool) -> None:
     ap.add_argument("--x64", action=argparse.BooleanOptionalAction,
                     default=default,

@@ -46,6 +46,7 @@ def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
     cli.add_problem_args(ap, n=150, p=1000, nnz=20)
     cli.add_engine_args(ap)
+    cli.add_mesh_arg(ap)
     cli.add_serve_args(ap)
     cli.add_x64_arg(ap, default=False)
     ap.add_argument("--num-queries", type=int, default=128)
@@ -200,7 +201,7 @@ def main(argv=None):
     t0 = time.perf_counter()
     X = stream.dictionary(dtype=dtype)
     cfg = cli.path_config(args, solver_tol=args.solver_tol)
-    sess = LassoSession.fit(X, config=cfg)
+    sess = LassoSession.fit(X, mesh=cli.make_mesh(args), config=cfg)
     sess.geometry.col_norms.block_until_ready()
     print(f"dictionary fitted once in {time.perf_counter() - t0:.3f}s "
           f"(fused passes: {sess.fit_passes}); n={args.n} p={args.p} "

@@ -26,6 +26,7 @@ def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
     cli.add_problem_args(ap, n=150, p=3000, nnz=60)
     cli.add_engine_args(ap)
+    cli.add_mesh_arg(ap)
     cli.add_x64_arg(ap, default=True)
     ap.add_argument("--num-lambdas", type=int, default=100)
     ap.add_argument("--group-size", type=int, default=0,
@@ -69,7 +70,8 @@ def main(argv=None):
                                 corr=args.corr)
 
     cfg = cli.path_config(args, checkpoint_fn=ckpt_fn)
-    sess = LassoSession.fit(X, groups=groups, config=cfg)
+    sess = LassoSession.fit(X, groups=groups, mesh=cli.make_mesh(args),
+                            config=cfg)
 
     t0 = time.perf_counter()
     res = sess.path(y, num_lambdas=args.num_lambdas).squeeze()

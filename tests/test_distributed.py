@@ -132,3 +132,58 @@ def test_distributed_batched_matches_per_query(subproc):
     step, per-query results identical to the single-query references."""
     out = subproc(BATCHED_CODE, devices=8)
     assert "BATCH_DIST_OK" in out
+
+
+SHARD_PARITY_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.session import LassoSession, PathConfig
+
+def beta_err_tol(y, solver_tol, kappa=25.0):
+    return kappa * float(np.sqrt(solver_tol * 0.5 * np.dot(y, y)))
+
+rng = np.random.default_rng(11)
+n, p, B = 48, 256, 4
+X = rng.standard_normal((n, p)).astype(np.float32)
+Y = np.stack([
+    (X[:, rng.choice(p, 8, replace=False)] @ rng.uniform(-1, 1, 8)
+     + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    for _ in range(B)])
+tol = 1e-8
+grids = np.stack([
+    np.linspace(0.95, 0.1, 8) * float(np.max(np.abs(X.T @ Y[b])))
+    for b in range(B)])                     # hi_frac=0.95: inside (0, λmax)
+
+for tile in ("jnp", "interpret"):
+    cfg = PathConfig(backend=tile, solver_backend=tile, solver_tol=tol)
+    ref = LassoSession.fit(X, config=cfg)
+    r0 = ref.path(Y, grids)
+    r0_single = ref.path(Y[0], grids[0])
+    for q, f in [(1, 1), (1, 2), (2, 2), (1, 8)]:
+        mesh = jax.make_mesh((q, f), ("query", "feature"))
+        sess = LassoSession.fit(X, mesh=mesh, config=cfg)
+        assert sess.backend_name == f"shard:{tile}", sess.backend_name
+        r = sess.path(Y, grids)
+        assert np.array_equal(np.asarray(r.masks), np.asarray(r0.masks)), \
+            (tile, q, f, "batched masks diverged")
+        berr = float(np.max(np.abs(np.asarray(r.betas)
+                                   - np.asarray(r0.betas))))
+        assert berr <= beta_err_tol(Y[0], tol), (tile, q, f, berr)
+        r1 = sess.path(Y[0], grids[0])       # single-query driver too
+        assert np.array_equal(np.asarray(r1.masks),
+                              np.asarray(r0_single.masks)), \
+            (tile, q, f, "single masks diverged")
+        assert r.stats[1].screen_backend == f"shard:{tile}"
+    print(f"SHARD_PARITY_{tile}_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_session_mask_parity_sweep(subproc):
+    """ISSUE 7 acceptance: the session on every tested mesh shape —
+    {1×1, 1×2, 2×2, 1×8} over ('query', 'feature') — produces masks
+    bit-identical to the unsharded engine and β within the solver-tol
+    bound, with the per-shard tile dispatcher resolved from the configured
+    backend (jnp AND interpret tiles)."""
+    out = subproc(SHARD_PARITY_CODE, devices=8)
+    assert "SHARD_PARITY_jnp_OK" in out
+    assert "SHARD_PARITY_interpret_OK" in out

@@ -317,7 +317,7 @@ def test_hybrid_strong_tightens_screening_and_stays_exact():
 
 
 # ---------------------------------------------------------------------------
-# mesh dispatch (single virtual device: placement + GSPMD path)
+# mesh dispatch (single virtual device: placement + per-shard backends)
 # ---------------------------------------------------------------------------
 
 def test_mesh_session_matches_unsharded_masks():
@@ -327,14 +327,43 @@ def test_mesh_session_matches_unsharded_masks():
     mesh = jax.make_mesh((1,), ("model",))
     grid = _grids(X, Y[:1])[0]
     sess_m = LassoSession.fit(X, mesh=mesh)
-    assert sess_m.backend_name == "jnp"        # GSPMD pins the jnp backend
+    # the screen backend is the per-shard dispatcher around the default tile
+    assert sess_m.backend_name.startswith("shard:")
     res_m = sess_m.path(y, grid)
-    res = LassoSession.fit(X, config=PathConfig(backend="jnp",
-                                                solver_backend="jnp")) \
-        .path(y, grid)
+    res = LassoSession.fit(X).path(y, grid)
     np.testing.assert_array_equal(res_m.masks, res.masks)
+    assert res_m.stats[1].screen_backend.startswith("shard:")
+
+
+def test_mesh_session_honours_explicit_backend():
+    """ISSUE 7 satellite: fit(mesh=..., backend="interpret") must resolve
+    the named tile under the per-shard dispatcher, not silently downgrade
+    to jnp, and the resolved names must land in the per-step stats."""
+    import jax
+    X, Y = _problem()
+    y = Y[0]
+    mesh = jax.make_mesh((1,), ("model",))
+    grid = _grids(X, Y[:1])[0]
+    cfg = PathConfig(backend="interpret", solver_backend="interpret")
+    sess_m = LassoSession.fit(X, mesh=mesh, config=cfg)
+    assert sess_m.backend_name == "shard:interpret"
+    res_m = sess_m.path(y, grid)
+    assert res_m.stats[1].screen_backend == "shard:interpret"
+    live = [s for s in res_m.stats if s.bucket]
+    assert live and all(s.solver_backend == "interpret" for s in live)
+    res = LassoSession.fit(X, config=cfg).path(y, grid)
+    np.testing.assert_array_equal(res_m.masks, res.masks)
+
+
+def test_group_mesh_pins_jnp_and_raises_otherwise():
+    import jax
+    X, _ = _problem()
+    mesh = jax.make_mesh((1,), ("model",))
+    sess = LassoSession.fit(X, groups=4, mesh=mesh)
+    assert sess.backend_name == "jnp"   # group GSPMD partial support
     with pytest.raises(ValueError, match="jnp backend"):
-        LassoSession.fit(X, mesh=mesh, config=PathConfig(backend="pallas"))
+        LassoSession.fit(X, groups=4, mesh=mesh,
+                         config=PathConfig(backend="pallas"))
 
 
 # ---------------------------------------------------------------------------
@@ -368,8 +397,12 @@ def test_grid_endpoint_contract_pins_hi_frac():
         np.testing.assert_array_equal(res_b.masks[b], res_1.masks)
     # (c) at and above λ_max both layouts degenerate identically: β = 0,
     # everything discarded — the endpoint is trivial, just not bitwise-
-    # classified the same way in every reduction order
-    hi = np.array([[1.5 * lm_batched, lm_batched * (1 + 1e-12)]])
+    # classified the same way in every reduction order. The (p,) and
+    # (B, p) reductions may disagree on λ_max's last couple of ULPs, so
+    # "above" means above BOTH (a grid built from one λ_max can land a
+    # hair inside the other driver's live region).
+    lm_hi = max(lm_single, lm_batched)
+    hi = np.array([[1.5 * lm_hi, lm_hi * (1 + 1e-12)]])
     res_hi = sess.path(Y[:1], np.repeat(hi, 1, axis=0))
     assert np.all(res_hi.betas == 0.0)
     assert res_hi.masks.all()

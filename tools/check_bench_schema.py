@@ -17,6 +17,7 @@ Usage:
     python tools/check_bench_schema.py BENCH_solver.json --section bench_solver_swap
     python tools/check_bench_schema.py BENCH_batch.json --section bench_batched
     python tools/check_bench_schema.py BENCH_serve.json --section bench_serve
+    python tools/check_bench_schema.py BENCH_dist.json --section bench_dist
 """
 
 from __future__ import annotations
@@ -72,9 +73,21 @@ SERVE_ROW_KEYS = {
     "masks_identical",
 }
 
+DIST_ROW_KEYS = {
+    "dataset",
+    "mesh",
+    "backend",
+    "arm",
+    "num_lambdas",
+    "wall_time_s",
+    "speedup_vs_open_coded",
+    "masks_identical",
+}
+
 SECTION_ROW_KEYS = {
     "bench_batched": BATCH_ROW_KEYS,
     "bench_serve": SERVE_ROW_KEYS,
+    "bench_dist": DIST_ROW_KEYS,
 }
 
 
