@@ -7,13 +7,28 @@ Real sets are not redistributable offline (DESIGN §9.2): we use synthetic
 matrices with matched aspect ratio and dense-response structure (y = dense
 mix of many columns, mimicking image-from-dictionary regression, which is
 what PIE/MNIST trials do).
+
+Beyond the paper's four rules this bench also A/Bs the two fused-pass
+upgrades (docs/screening-rules.md, docs/kernels.md):
+
+  * ``gap`` vs ``gap_cut`` — the λ_max feasibility half-space composed
+    with the gap ball. Safety gives cut-discards ⊇ ball-discards per λ;
+    the bench asserts the superset AND a strict total improvement.
+  * ``edpp`` f32 vs bfloat16 screen copy — masks must be bit-identical
+    (margin-aware f32 fallback) while the per-step screen HBM bytes drop
+    to ≤ 0.55× (the narrow fallback pass is counted).
+
+Every arm lands in the ``bench_dpp_family`` section of BENCH_solver.json
+with ``rejection_rate`` and ``bytes_per_screen`` columns
+(tools/check_bench_schema.py enforces the row schema).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from .common import beta_err_tol, emit, grid_for, ground_truth, run_rule
+from .common import (beta_err_tol, emit, grid_for, ground_truth, run_rule,
+                     write_bench_section)
 
 DATASETS_QUICK = {
     "prostate-like": (66, 1500),
@@ -25,8 +40,12 @@ DATASETS_FULL = {
     "pie-like": (1024, 11553),
     "mnist-like": (784, 50000),
 }
+# one small set for the CI smoke job (INTERPRET=1 makes kernels slow)
+DATASETS_SMOKE = {
+    "pie-like": (64, 384),
+}
 
-RULES = ["dpp", "imp1", "imp2", "edpp"]
+RULES = ["dpp", "imp1", "imp2", "edpp", "gap", "gap_cut"]
 
 
 def make_dataset(n, p, seed=0):
@@ -40,31 +59,93 @@ def make_dataset(n, p, seed=0):
     return X, y
 
 
-def run(full: bool = False, num_lambdas: int = 100):
-    datasets = DATASETS_FULL if full else DATASETS_QUICK
+def _row(name, rule, dtype, num_lambdas, r):
+    return {
+        "dataset": name, "rule": rule, "screen_dtype": dtype,
+        "num_lambdas": int(num_lambdas),
+        "rejection_rate": float(r.rejection.mean()),
+        "bytes_per_screen": float(r.screen_bytes_per_step),
+        "speedup_vs_unscreened": float(r.speedup),
+        "wall_time_s": float(r.path_time_s),
+        "max_beta_err": float(r.max_beta_err),
+    }
+
+
+def _emit_rule(name, tag, r):
+    # derived is parsed as key=value pairs (tools/make_claims.py), so new
+    # keys append safely; speedup= and mean_rej= must keep their meaning
+    emit(f"dpp_family/{name}/{tag}", r.path_time_s * 1e6,
+         f"speedup={r.speedup:.2f} mean_rej={r.rejection.mean():.4f}"
+         f" screen_s={r.screen_time_s:.3f}"
+         f" hbm_passes_per_step={r.x_passes_per_step:.2f}"
+         f" jnp_hbm_passes={r.jnp_x_passes}"
+         f" bytes_per_screen={r.screen_bytes_per_step:.0f}")
+
+
+def run(full: bool = False, num_lambdas: int = 100, datasets=None):
+    if datasets is None:
+        datasets = DATASETS_FULL if full else DATASETS_QUICK
     rows = []
+    json_rows = []
     for name, (n, p) in datasets.items():
         X, y = make_dataset(n, p)
         grid = grid_for(X, y, num=num_lambdas)
         betas_ref, t_ref = ground_truth(X, y, grid)
         emit(f"dpp_family/{name}/solver", t_ref * 1e6, "speedup=1.00")
+        # solver-precision bound ~ sqrt(gap/mu), tied to solver_tol
+        # (common.beta_err_tol); floor at the seed's 5e-4
+        tol = max(5e-4, beta_err_tol(y, 1e-12))
+        res = {}
         for rule in RULES:
             r = run_rule(X, y, grid, rule, betas_ref, t_ref)
-            # solver-precision bound ~ sqrt(gap/mu), tied to solver_tol
-            # (common.beta_err_tol); floor at the seed's 5e-4
-            tol = max(5e-4, beta_err_tol(y, 1e-12))
             # strong is heuristic: borderline features (|x·r|≈λ)
             # re-enter only to solver precision (paper §1 KKT loop)
             assert r.max_beta_err < tol, (rule, r.max_beta_err)
-            emit(f"dpp_family/{name}/{rule}", r.path_time_s * 1e6,
-                 f"speedup={r.speedup:.2f} mean_rej={r.rejection.mean():.4f}"
-                 f" screen_s={r.screen_time_s:.3f}"
-                 f" hbm_passes_per_step={r.x_passes_per_step:.2f}"
-                 f" jnp_hbm_passes={r.jnp_x_passes}")
+            res[rule] = r
+            _emit_rule(name, rule, r)
+            json_rows.append(_row(name, rule, "float32", num_lambdas, r))
             rows.append((name, rule, r))
+
+        # --- half-space cut: superset per λ, strictly better in total ----
+        m_gap, m_cut = res["gap"].masks, res["gap_cut"].masks
+        assert (~m_gap | m_cut).all(), \
+            f"{name}: gap_cut dropped a gap discard (safety superset broken)"
+        assert int(m_cut.sum()) > int(m_gap.sum()), \
+            f"{name}: gap_cut did not strictly improve on gap"
+
+        # --- mixed precision: bit-identical masks at ~half the bytes -----
+        rb = run_rule(X, y, grid, "edpp", betas_ref, t_ref,
+                      screen_dtype="bfloat16")
+        assert rb.max_beta_err < tol, ("edpp-bf16", rb.max_beta_err)
+        f32 = res["edpp"]
+        assert np.array_equal(rb.masks, f32.masks), \
+            f"{name}: bfloat16 masks differ from float32 (fallback broken)"
+        ratio = rb.screen_bytes_per_step / max(f32.screen_bytes_per_step,
+                                               1e-30)
+        assert ratio <= 0.55, \
+            f"{name}: bf16 screen bytes {ratio:.3f}x f32 (want <= 0.55x)"
+        _emit_rule(name, "edpp-bf16", rb)
+        json_rows.append(_row(name, "edpp", "bfloat16", num_lambdas, rb))
+        rows.append((name, "edpp-bf16", rb))
+
+    write_bench_section("bench_dpp_family",
+                        {"datasets": {k: list(v) for k, v in
+                                      datasets.items()},
+                         "num_lambdas": int(num_lambdas)},
+                        json_rows)
     return rows
 
 
 if __name__ == "__main__":
-    import sys
-    run(full="--full" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size data sets")
+    ap.add_argument("--quick", action="store_true",
+                    help="one small data set (the CI smoke config)")
+    ap.add_argument("--num-lambdas", type=int, default=None)
+    args = ap.parse_args()
+    if args.quick:
+        run(num_lambdas=args.num_lambdas or 25, datasets=DATASETS_SMOKE)
+    else:
+        run(full=args.full, num_lambdas=args.num_lambdas or 100)

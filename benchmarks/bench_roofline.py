@@ -155,11 +155,13 @@ def main(argv=None):
     from repro.core import DualState, edpp_mask
     st = DualState.at_lambda_max(jnp.asarray(X), jnp.asarray(y))
     masks_ok = True
+    refs = []
     for lam in grid:
         m_open = np.asarray(open_coded(float(lam))[0])
         m_fused = np.asarray(fused(float(lam))[1])
         ref = np.asarray(edpp_mask(jnp.asarray(X), jnp.asarray(y),
                                    float(lam), st))
+        refs.append(ref)
         masks_ok &= np.array_equal(m_open, ref)
         masks_ok &= np.array_equal(m_fused, ref)
     assert masks_ok, "sharded masks diverged from the local reference"
@@ -178,20 +180,69 @@ def main(argv=None):
     # to the open-coded two-pass screen (it strictly skips one X pass)
     assert t_fused <= t_open, (t_fused, t_open)
 
+    # -- mixed-precision A/B: the SAME fused sharded screen through the
+    # ScreeningEngine, f32 vs bfloat16 screen copy. bf16 halves the bytes
+    # each screen streams over the mesh; the margin-aware f32 fallback
+    # keeps masks bit-identical to the f32 (and local-oracle) masks
+    # (docs/kernels.md).
+    from repro.core import ScreeningEngine
+    sb = D.sharded_backend(mesh, args.backend)
+    arms = {}
+    for dtype in ("float32", "bfloat16"):
+        eng = ScreeningEngine(Xd, yd, backend=sb, screen_dtype=dtype)
+        st0 = eng.state_at_lambda_max()
+
+        def sweep():
+            return np.stack([np.asarray(eng.screen(float(lam), st0, "edpp"))
+                             for lam in grid])
+        sweep(), sweep()                      # warm: compile + caches
+        eng.total_screen_bytes = 0.0
+        t0 = time.perf_counter()
+        masks_eng = sweep()
+        t_eng = time.perf_counter() - t0
+        arms[dtype] = (masks_eng, t_eng, eng.total_screen_bytes / len(grid))
+    dtype_ok = (np.array_equal(arms["bfloat16"][0], arms["float32"][0])
+                and np.array_equal(arms["float32"][0], np.stack(refs)))
+    assert dtype_ok, "bfloat16 engine masks diverged from f32/local oracle"
+    byte_ratio = arms["bfloat16"][2] / max(arms["float32"][2], 1e-30)
+    assert byte_ratio <= 0.55, \
+        f"bf16 screen bytes {byte_ratio:.3f}x f32 (want <= 0.55x)"
+    print(f"  engine-f32  {arms['float32'][1] * 1e3:8.1f} ms  "
+          f"{arms['float32'][2]:.0f} B/screen")
+    print(f"  engine-bf16 {arms['bfloat16'][1] * 1e3:8.1f} ms  "
+          f"{arms['bfloat16'][2]:.0f} B/screen "
+          f"({byte_ratio:.2f}x)  masks identical: {dtype_ok}")
+
     from .common import write_bench_section
+    item = np.dtype(np.float32).itemsize
     meta = {"n": n, "p": p, "num_lambdas": K, "mesh": f"{q}x{f}",
             "backend": args.backend, "repeats": args.repeats,
             "quick": bool(args.quick)}
     row_common = {"dataset": f"synthetic n={n} p={p}",
                   "mesh": f"{q}x{f}", "backend": args.backend,
                   "num_lambdas": K, "masks_identical": bool(masks_ok),
-                  "n_discarded_last": n_disc}
+                  "n_discarded_last": n_disc, "screen_dtype": "float32"}
     write_bench_section(
         "bench_dist", meta=meta,
         rows=[dict(row_common, arm="sharded_jnp", wall_time_s=t_open,
-                   speedup_vs_open_coded=1.0),
+                   speedup_vs_open_coded=1.0,
+                   bytes_per_screen=2.0 * n * p * item),
               dict(row_common, arm="sharded_fused", wall_time_s=t_fused,
-                   speedup_vs_open_coded=speedup)],
+                   speedup_vs_open_coded=speedup,
+                   bytes_per_screen=float(n) * p * item),
+              dict(row_common, arm="engine_fused",
+                   masks_identical=bool(dtype_ok),
+                   wall_time_s=arms["float32"][1],
+                   speedup_vs_open_coded=t_open / max(arms["float32"][1],
+                                                      1e-12),
+                   bytes_per_screen=arms["float32"][2]),
+              dict(row_common, arm="engine_fused",
+                   screen_dtype="bfloat16",
+                   masks_identical=bool(dtype_ok),
+                   wall_time_s=arms["bfloat16"][1],
+                   speedup_vs_open_coded=t_open / max(arms["bfloat16"][1],
+                                                      1e-12),
+                   bytes_per_screen=arms["bfloat16"][2])],
         path=args.bench_json)
     print(f"wrote {args.bench_json}")
 

@@ -43,6 +43,7 @@ Public API:
     PathResult, PathStepStats, lambda_grid                    (results)
     lambda_max, DualState, screen, edpp_mask, dpp_mask, ...   (screening)
     SphereTest, edpp_sphere, gap_mask, make_sphere, ...       (geometry)
+    HalfSpaceCut, feasibility_cut, cut_mask, gap_cut_mask     (dual cuts)
     ScreeningEngine, GroupScreeningEngine, PathWorkspace      (engine)
     DictionaryGeometry, GroupDictionaryGeometry               (fitted dict)
     register_backend, available_backends, default_backend     (backends)
@@ -81,20 +82,28 @@ from .solver import (  # noqa: F401
     resolve_solver_backend,
 )
 from .screening import (  # noqa: F401
+    CUT_RULES,
     EPS_DEFAULT,
     HEURISTIC_RULES,
     RULES,
     SAFE_RULES,
     SPHERE_RULES,
     DualState,
+    HalfSpaceCut,
     SphereTest,
+    cut_from_ray,
+    cut_mask,
     dome_mask,
     dpp_mask,
     dpp_sphere,
+    edpp_cut_mask,
     edpp_mask,
     edpp_sphere,
+    feasibility_cut,
+    gap_cut_mask,
     gap_mask,
     gap_sphere,
+    halfspace_sup,
     imp1_mask,
     imp1_sphere,
     imp2_mask,

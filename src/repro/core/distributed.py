@@ -156,6 +156,14 @@ def sharded_backend(mesh: Mesh, tile=None) -> ops.ScreenBackend:
     ``REPRO_SCREEN_BACKEND`` → ``INTERPRET=1`` → platform default). The
     result is what ``LassoSession.fit(X, mesh=...)`` resolves its engines
     to — ``session.backend_name == "shard:<tile>"``.
+
+    Mixed precision and cut rules need nothing special here: the engine
+    hands this backend a bf16 screen copy / a stacked ``[centre; ĝ]``
+    right-hand side exactly as it would a plain f32 centre, the narrow
+    f32 fallback's column gather runs on the (feature-sharded) full-
+    precision X, and the ``*_cut`` combines are plain O(p) jnp on the
+    feature-sharded dots — mask parity across mesh shapes is pinned by
+    ``tests/test_distributed.py::test_sharded_bf16_and_cut_mask_parity``.
     """
     tile = resolve_backend(tile)
     f = _fspec(mesh)

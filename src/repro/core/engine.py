@@ -54,9 +54,14 @@ from . import screening as scr
 
 # Full HBM passes over X that one screen costs, per rule: through the engine
 # (norms/argmax geometry cached in the workspace) vs the hand-rolled jnp
-# oracle masks (dot + column norms each time; DOME also redoes Xᵀy).
-ENGINE_X_PASSES = {"strong": 1, "dome": 2, "none": 0, "safe": 1}
-ORACLE_X_PASSES = {"strong": 1, "dome": 4, "none": 0, "safe": 2}
+# oracle masks (dot + column norms each time; DOME also redoes Xᵀy). The
+# ``<base>_cut`` rules stay ONE engine pass — the cut dot rides the same
+# stacked matvec — while their oracles pay four (Xᵀcentre, column norms,
+# Xᵀy for the cut construction, Xᵀĝ).
+ENGINE_X_PASSES = {"strong": 1, "dome": 2, "none": 0, "safe": 1,
+                   **{f"{b}_cut": 1 for b in scr.SPHERE_RULES}}
+ORACLE_X_PASSES = {"strong": 1, "dome": 4, "none": 0, "safe": 2,
+                   **{f"{b}_cut": 4 for b in scr.SPHERE_RULES}}
 
 
 def engine_x_passes(rule: str) -> int:
@@ -67,6 +72,11 @@ def engine_x_passes(rule: str) -> int:
 def oracle_x_passes(rule: str) -> int:
     """HBM passes over X per screen for the pure-jnp oracle mask."""
     return ORACLE_X_PASSES.get(rule, 2)
+
+
+def _next_pow2(k: int) -> int:
+    """Smallest power of two ≥ k (bucket size for the narrow re-test)."""
+    return 1 << max(0, (k - 1).bit_length())
 
 
 # ---------------------------------------------------------------------------
@@ -147,10 +157,54 @@ def _strong_combine(dot, lam_next, lam_prev, eps):
     return jnp.abs(dot) < 2.0 * lam_next - lam_prev - eps
 
 
+# Margin-aware twins of the combines above, for the reduced-precision fast
+# pass: alongside the discard mask they return the BAND of columns whose
+# score lies within ``margin`` of the decision threshold — exactly the
+# columns whose bf16 decision is not provably the f32 decision
+# (kernels/ops.bf16_score_margin) and must be re-tested in full precision.
+
+@jax.jit
+def _sphere_combine_margin(dot, rho, col_norms, eps, margin):
+    if dot.ndim == 2:
+        scores = jnp.abs(dot) + scr._col(rho) * col_norms
+        thresh = 1.0 - scr._col(jnp.asarray(eps))
+    else:
+        scores = jnp.abs(dot) + rho * col_norms
+        thresh = 1.0 - eps
+    return scores < thresh, jnp.abs(scores - thresh) <= margin
+
+
+@jax.jit
+def _strong_combine_margin(dot, lam_next, lam_prev, eps, margin):
+    if dot.ndim == 2:
+        thresh = scr._col(2.0 * lam_next - lam_prev - eps)
+    else:
+        thresh = 2.0 * lam_next - lam_prev - eps
+    a = jnp.abs(dot)
+    return a < thresh, jnp.abs(a - thresh) <= margin
+
+
 @jax.jit
 def _dome_combine(scores_c, gdot, col_norms, c, rho, ghat, b, eps):
     return scr.dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) \
         < 1.0 - eps
+
+
+@jax.jit
+def _gap_cut_combine(dot, gdot, y, lam_next, state, col_norms, ghat, b, eps):
+    """gap_cut: the GAP sphere's feasibility rescale (served by the dot the
+    pass already produced, exactly like _gap_combine) composed with the
+    half-space sup over ball ∩ cut."""
+    if dot.ndim == 2:
+        sup_corr = jnp.max(jnp.abs(dot), axis=-1)
+        test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+        scores_c = dot / scr._col(jnp.maximum(1.0, sup_corr))
+    else:
+        sup_corr = jnp.max(jnp.abs(dot))
+        test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+        scores_c = dot / jnp.maximum(1.0, sup_corr)
+    return scr.dome_scores(scores_c, gdot, col_norms, test.centre, test.rho,
+                           ghat, b) < 1.0 - eps
 
 
 @jax.jit
@@ -281,12 +335,44 @@ class DictionaryGeometry:
         self.X = jnp.asarray(X)
         self.fit_passes = 0       # fused workspace passes over X (fit-once)
         self.query_passes = 0     # per-query |XᵀY| attach passes
+        self._screen_copies: dict[str, jax.Array] = {}
         if _sumsq is None:
             _, _sumsq = self.backend.fused_scores(
                 self.X, jnp.zeros((self.X.shape[0],), self.X.dtype), 0.0)
             self.fit_passes = 1
         self.sumsq = _sumsq                       # ‖x_j‖²
         self.col_norms = jnp.sqrt(_sumsq)
+
+    def screen_copy(self, dtype) -> jax.Array:
+        """A reduced-precision copy of X for screening passes, built lazily
+        and cached for the dictionary's lifetime (fit-once, like everything
+        else here). Only X is down-cast — sumsq/col_norms/|Xᵀy| always come
+        from the full-precision fit pass, and the tile dots accumulate in
+        f32 regardless of storage dtype (kernels contract). ``astype`` is
+        elementwise, so a sharded X keeps its column placement."""
+        dtype = jnp.dtype(dtype)
+        if dtype == self.X.dtype:
+            return self.X
+        cached = self._screen_copies.get(dtype.name)
+        if cached is None:
+            cached = self.X.astype(dtype)
+            self._screen_copies[dtype.name] = cached
+        return cached
+
+    def screen_err(self, dtype) -> jax.Array:
+        """Per-column dot-error bound (p,) for screening through the
+        ``screen_copy(dtype)`` — the measured quantisation residual of
+        ops.bf16_column_err, cached like the copy itself. Zero when the
+        copy IS X (no down-cast)."""
+        dtype = jnp.dtype(dtype)
+        if dtype == self.X.dtype:
+            return jnp.zeros_like(self.col_norms)
+        key = dtype.name + ":err"
+        cached = self._screen_copies.get(key)
+        if cached is None:
+            cached = ops.bf16_column_err(self.X, self.screen_copy(dtype))
+            self._screen_copies[key] = cached
+        return cached
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -428,14 +514,37 @@ class ScreeningEngine:
     callers (benchmarks, PathStepStats) can report data movement.
     """
 
+    #: Rules whose score is a single linear dot against a dot-independent
+    #: sphere — the only shape the bf16 error bound covers. ``gap`` folds a
+    #: data-dependent rescale into the same dot, and the ``*_cut``/``dome``
+    #: sups are only piecewise-linear in the dots, so those stay f32 even
+    #: under ``screen_dtype="bfloat16"`` (documented in docs/kernels.md).
+    BF16_FAST_RULES = ("dpp", "imp1", "imp2", "edpp", "seq_safe", "safe",
+                      "strong")
+
     def __init__(self, X, y, backend: str | None = None,
                  eps: float = scr.EPS_DEFAULT, *,
-                 geometry: DictionaryGeometry | None = None):
+                 geometry: DictionaryGeometry | None = None,
+                 screen_dtype: str = "float32"):
+        if screen_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"screen_dtype must be 'float32' or 'bfloat16', "
+                f"got {screen_dtype!r}")
         self.ws = PathWorkspace(X, y, backend, geometry=geometry)
         self.eps = eps
+        self.screen_dtype = screen_dtype
+        # bf16 copy for the fast pass (lazy + cached on the geometry);
+        # all thresholds/norms stay full precision.
+        self._x_fast = (self.ws.geometry.screen_copy(jnp.bfloat16)
+                        if screen_dtype == "bfloat16" else None)
+        self._x_fast_err = (self.ws.geometry.screen_err(jnp.bfloat16)
+                            if screen_dtype == "bfloat16" else None)
         self.n_screens = 0
         self.total_x_passes = 0
         self.last_x_passes = 0
+        self.total_screen_bytes = 0.0
+        self.last_screen_bytes = 0.0
+        self.last_fallback_cols = 0
 
     @property
     def lam_max(self):
@@ -477,10 +586,72 @@ class ScreeningEngine:
         return _make_state(self.ws.X, self.ws.y, beta, lam,
                            self.ws.lam_max, self.ws.v1_at_lmax)
 
-    def _count(self, passes: int):
+    def _count(self, passes: int, screen_bytes: float | None = None):
         self.n_screens += 1
         self.last_x_passes = passes
         self.total_x_passes += passes
+        if screen_bytes is None:
+            n, p = self.ws.X.shape
+            screen_bytes = float(passes) * n * p * self.ws.X.dtype.itemsize
+        self.last_screen_bytes = screen_bytes
+        self.total_screen_bytes += screen_bytes
+
+    def _fast_bytes(self) -> float:
+        """HBM bytes one streaming pass over the bf16 screen copy moves."""
+        n, p = self.ws.X.shape
+        return float(n) * p * self._x_fast.dtype.itemsize
+
+    def _bf16_fallback(self, dec, band, recompute):
+        """Re-test the band columns in full precision and override their
+        decisions, making the returned mask bit-identical to the f32
+        engine's: outside the band the bf16 decision is provably the f32
+        decision (the margin bounds |score_bf − score_f32|); inside it the
+        narrow full-precision pass IS the f32 decision. Returns
+        (mask, extra_passes, extra_bytes)."""
+        ws = self.ws
+        band_np = np.asarray(band)
+        cols = np.flatnonzero(
+            band_np if band_np.ndim == 1 else band_np.any(axis=0))
+        self.last_fallback_cols = int(cols.size)
+        if cols.size == 0:
+            return dec, 0, 0.0
+        p = ws.X.shape[1]
+        # pow-2 bucket (floor 8): bounds recompilations and keeps the
+        # gathered block's width divisible by the feature-mesh sizes the
+        # sharded backend supports, so shard_map re-dispatch just works.
+        bucket = min(_next_pow2(max(int(cols.size), 8)), p)
+        idx = np.zeros((bucket,), dtype=np.int32)
+        idx[:cols.size] = cols
+        idx_dev = jnp.asarray(idx)
+        Xn = jnp.take(ws.X, idx_dev, axis=1)      # full-precision columns
+        dec_n = recompute(Xn, idx_dev)
+        out = np.asarray(dec).copy()
+        out[..., cols] = np.asarray(dec_n)[..., :cols.size]
+        return jnp.asarray(out), 1, float(ws.X.shape[0]) * bucket \
+            * ws.X.dtype.itemsize
+
+    def _sphere_screen(self, test: scr.SphereTest, eps_val) -> jax.Array:
+        """One streaming pass for a plain sphere test — through the bf16
+        copy with the margin-aware fallback when screen_dtype asks for it."""
+        ws = self.ws
+        if self._x_fast is None:
+            dot = ws.backend.matvec(ws.X, test.centre)
+            self._count(1)
+            return _sphere_combine(dot, test.rho, ws.col_norms, eps_val)
+        dot = ws.backend.matvec(self._x_fast, test.centre)
+        margin = ops.bf16_score_margin(
+            self._x_fast_err, jnp.linalg.norm(test.centre, axis=-1))
+        dec, band = _sphere_combine_margin(dot, test.rho, ws.col_norms,
+                                           eps_val, margin)
+
+        def recompute(Xn, idx_dev):
+            return _sphere_combine(ws.backend.matvec(Xn, test.centre),
+                                   test.rho, jnp.take(ws.col_norms, idx_dev),
+                                   eps_val)
+
+        dec, extra, narrow_bytes = self._bf16_fallback(dec, band, recompute)
+        self._count(1 + extra, self._fast_bytes() + narrow_bytes)
+        return dec
 
     def screen(self, lam_next, state: scr.DualState | None,
                rule: str = "edpp") -> jax.Array:
@@ -493,18 +664,15 @@ class ScreeningEngine:
         if batched:
             lam_next = jnp.asarray(lam_next, ws.X.dtype)
         if rule == "none":
-            self._count(0)
+            self._count(0, 0.0)
             shape = (ws.X.shape[1],) if not batched else (ws.batch,
                                                           ws.X.shape[1])
             return jnp.zeros(shape, dtype=bool)
         if rule == "safe":
             lmax = ws.lam_max_array() if batched else ws.lam_max
             test = scr.safe_sphere(ws.y, lam_next, lmax)
-            dot = ws.backend.matvec(ws.X, test.centre)
-            self._count(1)
             # eq. 15's eps margin is at λ scale: eps/λ once unit-normalised
-            return _sphere_combine(dot, test.rho, ws.col_norms,
-                                   self.eps / lam_next)
+            return self._sphere_screen(test, self.eps / lam_next)
         if rule == "dome":
             if batched:
                 lmax = ws.lam_max_array()
@@ -525,23 +693,75 @@ class ScreeningEngine:
         if rule == "strong":
             theta_lam = (state.theta * scr._col(state.lam) if batched
                          else state.theta * state.lam)
-            dot = ws.backend.matvec(ws.X, theta_lam)
-            self._count(1)
-            return _strong_combine(dot, lam_next, state.lam, self.eps)
+            if self._x_fast is None:
+                dot = ws.backend.matvec(ws.X, theta_lam)
+                self._count(1)
+                return _strong_combine(dot, lam_next, state.lam, self.eps)
+            dot = ws.backend.matvec(self._x_fast, theta_lam)
+            margin = ops.bf16_score_margin(
+                self._x_fast_err, jnp.linalg.norm(theta_lam, axis=-1))
+            dec, band = _strong_combine_margin(dot, lam_next, state.lam,
+                                               self.eps, margin)
+
+            def recompute(Xn, idx_dev):
+                return _strong_combine(ws.backend.matvec(Xn, theta_lam),
+                                       lam_next, state.lam, self.eps)
+
+            dec, extra, narrow_bytes = self._bf16_fallback(
+                dec, band, recompute)
+            self._count(1 + extra, self._fast_bytes() + narrow_bytes)
+            return dec
         if rule == "gap":
             # one matvec serves the feasibility rescale AND the scores
             dot = ws.backend.matvec(ws.X, state.theta)
             self._count(1)
             return _gap_combine(dot, ws.y, lam_next, state, ws.col_norms,
                                 self.eps)
+        if rule.endswith("_cut") and rule[:-4] in scr.SPHERE_RULES:
+            return self._cut_screen(rule[:-4], lam_next, state, batched)
         if rule not in scr.SPHERE_RULES:
             raise ValueError(
                 f"unknown screening rule {rule!r}; available: "
-                f"{(*scr.SPHERE_RULES, 'safe', 'dome', 'strong', 'none')}")
+                f"{(*scr.SPHERE_RULES, *scr.CUT_RULES, 'safe', 'dome', 'strong', 'none')}")
         test = scr.make_sphere(rule, ws.y, lam_next, state)
-        dot = ws.backend.matvec(ws.X, test.centre)
+        return self._sphere_screen(test, self.eps)
+
+    def _cut_screen(self, base: str, lam_next, state: scr.DualState,
+                    batched: bool) -> jax.Array:
+        """``<base>_cut``: the base rule's sphere ∩ the λ_max feasibility
+        cut, in ONE streaming pass — the cut normal ĝ (cached in the
+        workspace since the fit) is stacked with the sphere centre into a
+        single batched matvec, so the extra dot per column rides the same
+        HBM pass (same trick the batched query path uses)."""
+        ws = self.ws
+        gnorm = jnp.linalg.norm(ws.v1_at_lmax, axis=-1) + 1e-30
+        b_cut = 1.0 / gnorm                       # ĝᵀθ ≤ 1/‖g‖ on all of F
+        if base == "gap":
+            centre = state.theta                  # rescale folds into combine
+            test = None
+        else:
+            test = scr.make_sphere(base, ws.y, lam_next, state)
+            centre = test.centre
+        if batched:
+            # stack-then-reshape, NOT concatenate: jnp.concatenate along a
+            # query-sharded axis miscomputes on multi-device meshes
+            # (observed on jax 0.4.37 host platforms); the (2, B, n) stack
+            # keeps the sharded axis intact and reshapes to the same
+            # [centre-rows; ghat-rows] layout.
+            stacked = jnp.stack([centre, ws.ghat]).reshape(
+                2 * ws.batch, centre.shape[-1])                   # (2B, n)
+            dot = ws.backend.matvec(ws.X, stacked)
+            dot_c, gdot = dot[:ws.batch], dot[ws.batch:]
+        else:
+            stacked = jnp.stack([centre, ws.ghat])                # (2, n)
+            dot = ws.backend.matvec(ws.X, stacked)
+            dot_c, gdot = dot[0], dot[1]
         self._count(1)
-        return _sphere_combine(dot, test.rho, ws.col_norms, self.eps)
+        if base == "gap":
+            return _gap_cut_combine(dot_c, gdot, ws.y, lam_next, state,
+                                    ws.col_norms, ws.ghat, b_cut, self.eps)
+        return _dome_combine(dot_c, gdot, ws.col_norms, test.centre,
+                             test.rho, ws.ghat, b_cut, self.eps)
 
 
 # ---------------------------------------------------------------------------
@@ -582,6 +802,8 @@ class GroupScreeningEngine:
         self.n_screens = 0
         self.total_x_passes = 0
         self.last_x_passes = 0
+        self.total_screen_bytes = 0.0
+        self.last_screen_bytes = 0.0
 
     @property
     def batch(self) -> None:
@@ -609,6 +831,10 @@ class GroupScreeningEngine:
         self.n_screens += 1
         self.last_x_passes = passes
         self.total_x_passes += passes
+        n, p = self.X.shape
+        screen_bytes = float(passes) * n * p * self.X.dtype.itemsize
+        self.last_screen_bytes = screen_bytes
+        self.total_screen_bytes += screen_bytes
 
     def screen(self, lam_next, state: gscr.GroupDualState,
                rule: str = "edpp") -> jax.Array:

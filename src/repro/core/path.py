@@ -96,6 +96,9 @@ class PathStepStats:
     batch_size: int = 1           # queries screened/solved together this step
     queries_converged: int = 0    # queries whose reduced solve converged
     x_passes_per_query: float = 0.0  # amortised screen passes: x_passes/B
+    screen_bytes: float = 0.0     # HBM bytes this step's screens streamed
+    #                               (bf16 screen_dtype ≈ halves this; the
+    #                               narrow fallback pass is counted in)
 
 
 @dataclasses.dataclass
@@ -279,10 +282,12 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                    else jnp.asarray(lam_vec, X.dtype))
         discard = screen_engine.screen(lam_dev, state, rule=cfg.rule)
         screen_passes = screen_engine.last_x_passes
+        screen_bytes = getattr(screen_engine, "last_screen_bytes", 0.0)
         if hybrid:
             discard = discard | screen_engine.screen(lam_dev, state,
                                                      rule="strong")
             screen_passes += screen_engine.last_x_passes
+            screen_bytes += getattr(screen_engine, "last_screen_bytes", 0.0)
         discard_np = np.asarray(discard)
         if batch is None:
             discard_np = discard_np[None, :]
@@ -390,6 +395,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             batch_size=B,
             queries_converged=q_conv,
             x_passes_per_query=screen_passes / B,
+            screen_bytes=screen_bytes,
         ))
         if cfg.checkpoint_fn:
             if batch is None:

@@ -445,6 +445,135 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
 
 
 # ---------------------------------------------------------------------------
+# Composable half-space cuts: sphere ∩ {θ : ĝᵀθ ≤ b}   (Tran et al. 2022)
+# ---------------------------------------------------------------------------
+
+class HalfSpaceCut(NamedTuple):
+    """A dual cutting half-space {θ : ĝᵀθ ≤ b}, composable with any
+    :class:`SphereTest`: the sup of ±x_jᵀθ over ball ∩ half-space has the
+    same closed form as the DOME region (:func:`_sup_over_dome`), and its
+    evaluation needs ONE extra dot per column (Xᵀĝ) — which the engine
+    stacks into the same streaming pass as the sphere-centre dot.
+
+    ghat: unit normal, (n,) or (B, n) for per-query cuts
+    b:    offset, scalar or (B,)
+
+    A cut that does not intersect the ball is harmless: ``t_b`` clips to 1
+    and the sup reduces exactly to the plain sphere sup (never *larger*),
+    so composing is always safe and never looser than the sphere alone.
+    """
+
+    ghat: jax.Array
+    b: jax.Array
+
+
+def cut_from_ray(v1) -> HalfSpaceCut:
+    """The λ_max feasibility cut from the (cached) ray g = sign(x*ᵀy)·x*.
+
+    Every θ ∈ F satisfies |x*ᵀθ| ≤ 1, so gᵀθ ≤ 1, i.e. ĝᵀθ ≤ 1/‖g‖ with
+    ĝ = g/‖g‖ — a half-space containing θ*(λ) for EVERY λ, dual-feasibility
+    made geometric. The engine has v₁ cached in its workspace, so this cut
+    is free; the oracle recomputes it from Xᵀy (:func:`feasibility_cut`).
+    Batched: v1 (B, n) → per-query cuts.
+    """
+    gnorm = jnp.linalg.norm(v1, axis=-1) + 1e-30
+    if jnp.ndim(v1) == 2:
+        return HalfSpaceCut(ghat=v1 / _col(gnorm), b=1.0 / gnorm)
+    return HalfSpaceCut(ghat=v1 / gnorm, b=1.0 / gnorm)
+
+
+def feasibility_cut(X, y) -> HalfSpaceCut:
+    """The λ_max feasibility cut computed from scratch (pure-jnp oracle
+    path): g = sign(x*ᵀy)·x* with x* the λ_max feature — the same
+    construction :func:`dome_mask` uses for its half-space."""
+    if _is_batched(y):
+        corr = y @ X                                   # (B, p)
+        istar = jnp.argmax(jnp.abs(corr), axis=-1)
+        g = _col(jnp.sign(jnp.take_along_axis(
+            corr, istar[:, None], axis=-1)[:, 0])) * X[:, istar].T
+        return cut_from_ray(g)
+    corr = X.T @ y
+    istar = jnp.argmax(jnp.abs(corr))
+    return cut_from_ray(jnp.sign(corr[istar]) * X[:, istar])
+
+
+def halfspace_sup(scores_c, gdot, col_norms, test: SphereTest,
+                  cut: HalfSpaceCut):
+    """sup |x_jᵀθ| over B(centre, ρ) ∩ {ĝᵀθ ≤ b}, from precomputed dots
+    scores_c = Xᵀ·centre and gdot = Xᵀĝ — exact closed form (the DOME sup
+    with an arbitrary cut). Degenerate cuts (half-space contains the whole
+    ball) reduce bit-exactly to the sphere sup |scores_c| + ρ‖x_j‖."""
+    return dome_scores(scores_c, gdot, col_norms, test.centre, test.rho,
+                       cut.ghat, cut.b)
+
+
+def cut_mask(X, test: SphereTest, cut: HalfSpaceCut,
+             eps: float = EPS_DEFAULT):
+    """Pure-jnp oracle for sphere ∩ half-space: discard j iff the exact sup
+    of |x_jᵀθ| over the intersection is < 1 − eps. Because the region is a
+    subset of the sphere, the discard set is always a superset of
+    ``sphere_mask(X, test, eps)``'s."""
+    col_norms = jnp.linalg.norm(X, axis=0)
+    if _is_batched(test.centre):
+        scores_c = test.centre @ X
+        gdot = cut.ghat @ X
+    else:
+        scores_c = X.T @ test.centre
+        gdot = X.T @ cut.ghat
+    return halfspace_sup(scores_c, gdot, col_norms, test, cut) < 1.0 - eps
+
+
+def _make_cut_rule(base: str):
+    """Discard-mask oracle for ``<base>_cut``: the base rule's safe sphere
+    intersected with the λ_max feasibility cut. Signature matches RULES."""
+    def mask(X, y, lam_next, state: DualState, eps: float = EPS_DEFAULT):
+        cut = feasibility_cut(X, y)
+        col_norms = jnp.linalg.norm(X, axis=0)
+        if base == "gap":
+            # mirror gap_mask: one dot serves the feasibility rescale AND
+            # the centre scores (centre = θ₀/max(1, ‖Xᵀθ₀‖∞))
+            if _is_batched(y):
+                dot = state.theta @ X
+                sup_corr = jnp.max(jnp.abs(dot), axis=-1)
+                test = gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+                scores_c = dot / _col(jnp.maximum(1.0, sup_corr))
+                gdot = cut.ghat @ X
+            else:
+                dot = X.T @ state.theta
+                sup_corr = jnp.max(jnp.abs(dot))
+                test = gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+                scores_c = dot / jnp.maximum(1.0, sup_corr)
+                gdot = X.T @ cut.ghat
+        else:
+            test = SPHERE_RULES[base](y, lam_next, state)
+            if _is_batched(y):
+                scores_c = test.centre @ X
+                gdot = cut.ghat @ X
+            else:
+                scores_c = X.T @ test.centre
+                gdot = X.T @ cut.ghat
+        return halfspace_sup(scores_c, gdot, col_norms, test, cut) \
+            < 1.0 - eps
+
+    mask.__name__ = f"{base}_cut_mask"
+    mask.__doc__ = (
+        f"{base.upper()}-sphere ∩ λ_max feasibility cut: the {base!r} safe "
+        f"ball intersected with {{θ : ĝᵀθ ≤ 1/‖g‖}} (g = sign(x*ᵀy)·x*). "
+        f"Safe (both regions contain θ*(λ)); discards ⊇ the plain "
+        f"{base!r} rule's.")
+    return mask
+
+
+#: ``<base>_cut`` for every sequential sphere rule: the base safe ball
+#: intersected with the λ_max feasibility cut — evaluated by the engine in
+#: the SAME single fused pass (the cut dot rides the stacked matvec).
+CUT_RULES = {f"{base}_cut": _make_cut_rule(base) for base in SPHERE_RULES}
+
+gap_cut_mask = CUT_RULES["gap_cut"]
+edpp_cut_mask = CUT_RULES["edpp_cut"]
+
+
+# ---------------------------------------------------------------------------
 # KKT post-check (needed by the strong rule; free safety telemetry otherwise)
 # ---------------------------------------------------------------------------
 
@@ -475,10 +604,11 @@ RULES = {
     "seq_safe": seq_safe_mask,
     "gap": gap_mask,
     "strong": strong_mask,
+    **CUT_RULES,
 }
 
 SAFE_RULES = ("dpp", "imp1", "imp2", "edpp", "seq_safe", "gap", "safe",
-              "dome", "none")
+              "dome", "none", *CUT_RULES)
 HEURISTIC_RULES = ("strong",)
 
 

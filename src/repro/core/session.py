@@ -98,6 +98,12 @@ def _check_group_rule(cfg: "PathConfig") -> None:
         raise ValueError(
             f"group sessions support rules {GROUP_RULES}, got "
             f"{cfg.screen.rule!r}")
+    if cfg.screen.screen_dtype != "float32":
+        # the group kernel's ‖X_gᵀc‖ score has no margin bound yet, so a
+        # silent bf16 run could mis-discard — fail loudly instead
+        raise ValueError(
+            "group sessions support screen_dtype='float32' only, got "
+            f"{cfg.screen.screen_dtype!r}")
 
 
 def _check_backend(name, what: str) -> None:
@@ -121,7 +127,7 @@ class ScreenSpec:
     screening deep in the path without giving up the safe contract.
     """
 
-    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|gap|safe|dome|strong|none
+    rule: str = "edpp"            # edpp|dpp|imp1|imp2|seq_safe|gap|*_cut|safe|dome|strong|none
     backend: str | ops.ScreenBackend | None = None  # None = auto-detect
     sequential: bool = True       # False = "basic" variants (state at λmax)
     strong: bool = False          # hybrid safe+strong toggle (see above)
@@ -129,6 +135,11 @@ class ScreenSpec:
     paranoid: bool = False        # run the KKT loop even for safe rules
     kkt_tol: float = 1e-4
     max_kkt_rounds: int = 10
+    # dtype of the X copy the screening passes stream: "bfloat16" halves the
+    # HBM bytes per screen while the margin-aware fallback keeps the masks
+    # bit-identical to float32 (docs/kernels.md). The solve path is
+    # untouched either way.
+    screen_dtype: str = "float32"
 
     def __post_init__(self):
         if self.rule not in KNOWN_RULES:
@@ -141,6 +152,10 @@ class ScreenSpec:
             raise ValueError(f"kkt_tol must be > 0, got {self.kkt_tol}")
         if self.max_kkt_rounds < 0:
             raise ValueError("max_kkt_rounds must be ≥ 0")
+        if self.screen_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"screen_dtype must be 'float32' or 'bfloat16', got "
+                f"{self.screen_dtype!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +199,7 @@ _SCREEN_KW = {
     "rule": "rule", "backend": "backend", "sequential": "sequential",
     "eps": "eps", "paranoid": "paranoid", "kkt_tol": "kkt_tol",
     "max_kkt_rounds": "max_kkt_rounds", "hybrid_strong": "strong",
+    "screen_dtype": "screen_dtype",
 }
 _SOLVE_KW = {
     "solver": "strategy", "solver_backend": "backend", "solver_tol": "tol",
@@ -275,6 +291,10 @@ class PathConfig:
     @property
     def max_kkt_rounds(self) -> int:
         return self.screen.max_kkt_rounds
+
+    @property
+    def screen_dtype(self) -> str:
+        return self.screen.screen_dtype
 
     @property
     def solver(self) -> str:
@@ -568,7 +588,8 @@ class LassoSession:
 
     def _lasso_path(self, y, lambdas, cfg, grid_kw) -> PathResult:
         eng = ScreeningEngine(self.X, y, eps=cfg.screen.eps,
-                              geometry=self._geometry(cfg.screen.backend))
+                              geometry=self._geometry(cfg.screen.backend),
+                              screen_dtype=cfg.screen.screen_dtype)
         if lambdas is None:
             lambdas = lambda_grid(float(eng.lam_max), **grid_kw)
         solver = self._solver_engine(y, cfg)
@@ -597,7 +618,8 @@ class LassoSession:
             return self._lasso_path(Y[0], _squeeze_grid(lambdas), cfg,
                                     grid_kw)
         eng = ScreeningEngine(self.X, Y, eps=cfg.screen.eps,
-                              geometry=self._geometry(cfg.screen.backend))
+                              geometry=self._geometry(cfg.screen.backend),
+                              screen_dtype=cfg.screen.screen_dtype)
         if lambdas is None:
             lambdas = np.stack([
                 lambda_grid(float(lm), **grid_kw)
@@ -707,4 +729,5 @@ def _merge_step_stats(steps: list[PathStepStats]) -> PathStepStats:
         batch_size=B,
         queries_converged=sum(s.queries_converged for s in steps),
         x_passes_per_query=x_passes / B,
+        screen_bytes=sum(s.screen_bytes for s in steps),
     )

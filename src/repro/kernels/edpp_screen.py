@@ -28,7 +28,12 @@ TPU mapping
   (sublane dim); the (Bp, bn)×(bn, bp) dot hits the MXU, the
   square/accumulate runs on the VPU. Batched centres are padded to a sublane
   multiple (Bp = 8⌈B/8⌉ for B > 1).
-* Accumulation is f32 regardless of input dtype (bf16 X supported).
+* Accumulation is f32 regardless of input dtype (bf16 X supported): a
+  bf16 X tile halves the streamed bytes — the dominant cost — while the
+  MXU contraction and the VMEM accumulators stay f32, so the only error
+  vs an f32 pass is the input quantisation itself. The engine's
+  margin-aware fallback (docs/kernels.md) turns that into f32-exact
+  masks; the kernel itself just honours the dtype it is handed.
 
 VMEM budget (defaults bn=512, bp=512, f32, B=64): X tile 1 MiB + o tile
 128 KiB + accumulators 3·128 KiB ≈ 1.5 MiB ≪ 16 MiB/core.

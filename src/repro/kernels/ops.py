@@ -107,6 +107,56 @@ BACKENDS: dict[str, ScreenBackend] = {
 }
 
 
+# --------------------------------------------------------------------------
+# Mixed-precision screening contract (docs/kernels.md).
+#
+# X may be STORED in bf16 while every tile dot ACCUMULATES in f32 — the
+# pallas kernel body casts tiles up before the MXU dot and ref._acc_dtype
+# promotes the jnp oracle the same way. The only storage error is the
+# rounding of X itself: with Δx_j = x_j − bf16(x_j), Cauchy-Schwarz bounds
+# the dot against any full-precision centre by
+#
+#     |x̂_jᵀc − x_jᵀc| ≤ ‖Δx_j‖·‖c‖.
+#
+# ‖Δx_j‖ is MEASURED per column at screen-copy time (bf16_column_err) —
+# typically ≈ 2⁻⁹‖x_j‖/√3 (rounding errors add in quadrature), ~7× tighter
+# than the worst-case u‖x_j‖ bound, so ~7× fewer columns land in the
+# fallback band. On top ride the f32 accumulation noise of both passes
+# (γ_n ≈ n·2⁻²⁴ relative, the F32_ACC_ROUND term — covers reduction-order
+# differences between the wide bf16 pass and the narrow f32 re-test too)
+# and a 2× safety factor.
+# --------------------------------------------------------------------------
+
+BF16_ROUND = 2.0 ** -8         # bf16 unit roundoff (worst case, 8-bit mant.)
+F32_ACC_ROUND = 2.0 ** -24     # f32 accumulation unit roundoff
+BF16_MARGIN_SAFETY = 2.0
+
+
+def bf16_column_err(X, X_lo):
+    """Per-column dot-error bound for screening through the low-precision
+    copy ``X_lo``: ``err[j] = ‖x_j − x̂_j‖ + 2·n·u_f32·‖x_j‖`` (measured
+    quantisation residual + the accumulation noise of both the wide and the
+    narrow pass). Computed once per screen copy, cached on the geometry."""
+    Xf = jnp.asarray(X, jnp.float32)
+    quant = jnp.linalg.norm(Xf - jnp.asarray(X_lo, jnp.float32), axis=0)
+    col_norms = jnp.linalg.norm(Xf, axis=0)
+    n = Xf.shape[0]
+    return quant + 2.0 * n * F32_ACC_ROUND * col_norms
+
+
+def bf16_score_margin(col_err, centre_norm):
+    """Per-column error bound on a linear screen score evaluated through a
+    bf16 copy of X: ``margin[j] = 2·err_j·‖centre‖`` with ``err_j`` from
+    :func:`bf16_column_err`. The ρ‖x_j‖ term of a sphere score is exact
+    (both factors stay full precision), so this bounds the whole score
+    error. Columns whose bf16 score lands within the margin of the decision
+    threshold are re-tested in full precision (the ScreeningEngine's
+    margin-aware fallback), which makes bf16 masks bit-identical to the f32
+    engine's. ``centre_norm``: scalar or (B,) → margin (p,) or (B, p)."""
+    cn = jnp.asarray(centre_norm, jnp.float32)[..., None]
+    return BF16_MARGIN_SAFETY * cn * jnp.asarray(col_err)
+
+
 def edpp_screen(X, centre, rho, eps: float = 1e-6, *, col_norms=None,
                 interpret: bool | None = None):
     """Full fused screening decision.
@@ -141,8 +191,13 @@ def group_edpp_screen(X, centre, rho, m: int, spec_norms, eps: float = 1e-6,
 
 __all__ = [
     "BACKENDS",
+    "BF16_MARGIN_SAFETY",
+    "BF16_ROUND",
     "GRAM_BUCKET_MAX",
     "ScreenBackend",
+    "F32_ACC_ROUND",
+    "bf16_column_err",
+    "bf16_score_margin",
     "cd_gram_sweep",
     "edpp_screen",
     "edpp_screen_scores",

@@ -14,6 +14,16 @@ one fitted dictionary serves all B queries, which is the whole point: a
 batched call reads X from HBM **once** for the entire batch. Rank-1 inputs
 take the exact pre-batch code paths, so single-query results are
 bit-identical to the unbatched implementation.
+
+Mixed precision
+---------------
+Every op accepts bf16 X with f32 accumulation (``_acc_dtype``): scores
+may then deviate from the f32 pass by at most ``‖c‖·e_j`` per column,
+where ``e_j`` is the measured quantisation error bound of
+``repro.kernels.ops.bf16_column_err``. The engine's margin fallback
+(docs/kernels.md) re-tests threshold-adjacent columns in f32 so the
+final masks stay bit-identical; these oracles make no such promise on
+their own — they are exact only for the dtype they are given.
 """
 
 from __future__ import annotations

@@ -38,7 +38,10 @@ def add_engine_args(ap: argparse.ArgumentParser, *, rule: str = "edpp",
                     solver: str = "fista") -> None:
     """Screen/solve spec flags, shared verbatim by solve and serve."""
     ap.add_argument("--rule", default=rule,
-                    help="screening rule (edpp|dpp|gap|strong|none|...)")
+                    help="screening rule (edpp|dpp|gap|gap_cut|edpp_cut|"
+                         "strong|none|...; *_cut composes the sphere with "
+                         "the λ_max feasibility half-space in the same "
+                         "fused pass)")
     ap.add_argument("--solver", default=solver,
                     help="any registered solver strategy (fista|cd|...)")
     ap.add_argument("--backend", default=None,
@@ -47,6 +50,12 @@ def add_engine_args(ap: argparse.ArgumentParser, *, rule: str = "edpp",
     ap.add_argument("--solver-backend", default=None,
                     help="pallas|interpret|jnp (default: auto / "
                          "REPRO_SOLVER_BACKEND)")
+    ap.add_argument("--screen-dtype", choices=("float32", "bfloat16"),
+                    default="float32",
+                    help="dtype of the X copy the screens stream: bfloat16 "
+                         "halves screen HBM bytes; masks stay bit-identical "
+                         "via the margin-aware f32 fallback (solves are "
+                         "untouched)")
 
 
 def add_serve_args(ap: argparse.ArgumentParser, *, b_max: int = 8,
@@ -143,5 +152,7 @@ def path_config(args, *, solver_tol: float | None = None, **extra):
         solve_kw["tol"] = solver_tol
     return PathConfig(
         screen=ScreenSpec(rule=args.rule,
-                          backend=getattr(args, "backend", None)),
+                          backend=getattr(args, "backend", None),
+                          screen_dtype=getattr(args, "screen_dtype",
+                                               "float32")),
         solve=SolveSpec(**solve_kw), **extra)

@@ -187,3 +187,56 @@ def test_sharded_session_mask_parity_sweep(subproc):
     out = subproc(SHARD_PARITY_CODE, devices=8)
     assert "SHARD_PARITY_jnp_OK" in out
     assert "SHARD_PARITY_interpret_OK" in out
+
+
+BF16_CUT_PARITY_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.session import LassoSession, PathConfig
+
+rng = np.random.default_rng(13)
+n, p, B = 48, 256, 4
+X = rng.standard_normal((n, p)).astype(np.float32)
+Y = np.stack([
+    (X[:, rng.choice(p, 8, replace=False)] @ rng.uniform(-1, 1, 8)
+     + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    for _ in range(B)])
+grids = np.stack([
+    np.linspace(0.95, 0.1, 8) * float(np.max(np.abs(X.T @ Y[b])))
+    for b in range(B)])
+
+for tile in ("jnp", "interpret"):
+    kw = dict(backend=tile, solver_backend=tile, solver_tol=1e-8)
+    r0 = LassoSession.fit(X, config=PathConfig(**kw)).path(Y, grids)
+    cfg16 = PathConfig(screen_dtype="bfloat16", **kw)
+    cfg_cut = PathConfig(rule="gap_cut", **kw)
+    r_gap = LassoSession.fit(X, config=PathConfig(rule="gap", **kw)).path(
+        Y, grids)
+    r_cut0 = LassoSession.fit(X, config=cfg_cut).path(Y, grids)
+    for q, f in [(1, 2), (2, 2), (1, 8)]:
+        mesh = jax.make_mesh((q, f), ("query", "feature"))
+        # bf16 screen copy on the mesh: the narrow f32 fallback re-gathers
+        # sharded columns, masks must equal the f32 UNSHARDED session's
+        r16 = LassoSession.fit(X, mesh=mesh, config=cfg16).path(Y, grids)
+        assert np.array_equal(np.asarray(r16.masks), np.asarray(r0.masks)), \
+            (tile, q, f, "bf16 mesh masks diverged from f32 unsharded")
+        # gap_cut on the mesh: bit-identical to unsharded gap_cut AND a
+        # discard superset of plain gap (ball ∩ half-space ⊆ ball)
+        r_cut = LassoSession.fit(X, mesh=mesh, config=cfg_cut).path(Y, grids)
+        assert np.array_equal(np.asarray(r_cut.masks),
+                              np.asarray(r_cut0.masks)), \
+            (tile, q, f, "gap_cut mesh masks diverged")
+        mg, mc = np.asarray(r_gap.masks), np.asarray(r_cut.masks)
+        assert np.all(mc | ~mg), (tile, q, f, "cut lost a gap discard")
+    print(f"BF16_CUT_PARITY_{tile}_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_bf16_and_cut_mask_parity(subproc):
+    """Mixed-precision + half-space cuts on the mesh: bfloat16 screen
+    copies keep masks bit-identical to the unsharded f32 session on every
+    tested mesh shape, and gap_cut masks are shard-invariant and a
+    superset of gap's (jnp AND interpret tiles)."""
+    out = subproc(BF16_CUT_PARITY_CODE, devices=8)
+    assert "BF16_CUT_PARITY_jnp_OK" in out
+    assert "BF16_CUT_PARITY_interpret_OK" in out

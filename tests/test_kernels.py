@@ -210,6 +210,95 @@ def test_prox_step_kernel_batched(batch):
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# Mixed precision: bf16 screen copy + margin-aware f32 fallback must give
+# masks BIT-IDENTICAL to the f32 engine (docs/kernels.md)
+# ---------------------------------------------------------------------------
+
+BF16_RULES = ["edpp", "dpp", "imp1", "imp2", "seq_safe", "safe", "strong"]
+
+
+def test_bf16_margin_bounds_quantisation():
+    """bf16_column_err dominates the true per-column dot error for any
+    full-precision centre (Cauchy-Schwarz), in scalar and batched shapes."""
+    rng = np.random.default_rng(5)
+    X = jnp.asarray(rng.standard_normal((40, 120)), jnp.float32)
+    Xb = X.astype(jnp.bfloat16)
+    err = ops.bf16_column_err(X, Xb)
+    assert err.shape == (120,)
+    c = jnp.asarray(rng.standard_normal(40), jnp.float32)
+    true_err = jnp.abs(Xb.astype(jnp.float32).T @ c - X.T @ c)
+    margin = ops.bf16_score_margin(err, jnp.linalg.norm(c))
+    assert margin.shape == (120,)
+    assert np.all(np.asarray(true_err) <= np.asarray(margin))
+    mB = ops.bf16_score_margin(err, jnp.ones(3))
+    assert mB.shape == (3, 120)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+@pytest.mark.parametrize("rule", BF16_RULES)
+def test_bf16_engine_masks_bit_identical(backend, rule):
+    """Sweep: the bf16 fast path + narrow f32 fallback equals the f32
+    engine mask exactly, at strictly fewer screen bytes and ≤ +1 pass."""
+    from repro.core import ScreeningEngine
+    rng = np.random.default_rng(7)
+    n, p = 48, 320
+    X = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    e32 = ScreeningEngine(X, y, backend=backend)
+    e16 = ScreeningEngine(X, y, backend=backend, screen_dtype="bfloat16")
+    st = e32.state_at_lambda_max()
+    for frac in (0.8, 0.5, 0.2):
+        lam = frac * e32.lam_max
+        m32 = np.asarray(e32.screen(lam, st, rule))
+        m16 = np.asarray(e16.screen(lam, st, rule))
+        np.testing.assert_array_equal(m16, m32, err_msg=f"{rule}@{frac}")
+        assert e16.last_screen_bytes < e32.last_screen_bytes
+        assert e16.last_x_passes <= e32.last_x_passes + 1
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_bf16_adversarial_band_fallback(backend):
+    """Columns PLANTED with scores inside the bf16 error band of the
+    decision threshold: the margin fallback must fire (a bf16-only pass
+    would misclassify some of them) and the final mask must still equal
+    the f32 engine's bit-for-bit."""
+    from repro.core import ScreeningEngine
+    rng = np.random.default_rng(17)
+    n, p = 32, 256
+    X = rng.standard_normal((n, p)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    yn = (y / np.linalg.norm(y)).astype(np.float64)
+    lmax = float(np.abs(X.astype(np.float64).T @ y.astype(np.float64)).max())
+    lam = 0.5 * lmax
+    eps = 1e-6                       # scr.EPS_DEFAULT
+    thresh = 1.0 - eps / lam         # engine "safe" threshold at λ scale
+    # safe-sphere score of a column α·ŷ is linear in α:
+    #   |αŷᵀ(y/λ)| + α‖y‖(1/λ − 1/λmax) = α·slope
+    ynorm = float(np.linalg.norm(y.astype(np.float64)))
+    slope = ynorm * (2.0 / lam - 1.0 / lmax)
+    alpha_star = thresh / slope      # score lands exactly ON the threshold
+    assert alpha_star * ynorm < 0.9 * lmax   # planting can't move λ_max
+    # ladder of score offsets spanning ± the expected bf16 band
+    # (≈ 2·(2⁻⁹/√3)·α‖c‖, ‖c‖ = ‖y‖/λ); δ ≈ 0 is inside ANY nonzero margin
+    band = 2.0 * (2.0 ** -9) / np.sqrt(3.0) * alpha_star * ynorm / lam
+    n_plant = 24
+    for j, d in enumerate(np.linspace(-band, band, n_plant)):
+        X[:, j] = ((alpha_star + d / slope) * yn).astype(np.float32)
+    Xf, yf = jnp.asarray(X), jnp.asarray(y)
+    e32 = ScreeningEngine(Xf, yf, backend=backend)
+    e16 = ScreeningEngine(Xf, yf, backend=backend, screen_dtype="bfloat16")
+    lam = 0.5 * e32.lam_max
+    m32 = np.asarray(e32.screen(lam, None, "safe"))
+    m16 = np.asarray(e16.screen(lam, None, "safe"))
+    np.testing.assert_array_equal(m16, m32)
+    assert e16.last_fallback_cols > 0, "planted band never triggered"
+    assert e16.last_x_passes == 2      # wide bf16 pass + narrow f32 re-test
+    # the ladder straddles the threshold: the mask splits inside it
+    planted = m32[:n_plant]
+    assert planted.any() and not planted.all()
+
+
 @pytest.mark.parametrize("batch", [2, 9])
 def test_cd_gram_sweep_kernel_batched_with_valid(batch):
     b = 48

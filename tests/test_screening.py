@@ -4,9 +4,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (DualState, PathConfig, dome_mask, dpp_mask, edpp_mask,
-                        gap_mask, imp1_mask, imp2_mask, lambda_grid,
-                        lambda_max, lasso_path, make_dual_state, safe_mask,
+from repro.core import (CUT_RULES, DualState, HalfSpaceCut, PathConfig, RULES,
+                        cut_mask, dome_mask, dpp_mask, edpp_mask,
+                        feasibility_cut, gap_mask, halfspace_sup, imp1_mask,
+                        imp2_mask, lambda_grid, lambda_max, lasso_path,
+                        make_dual_state, make_sphere, safe_mask,
                         seq_safe_mask, strong_mask, v2_perp)
 
 from conftest import small_problem
@@ -142,3 +144,133 @@ def test_strong_rule_kkt_loop_runs():
     grid = lambda_grid(lmax, num=10)
     res = lasso_path(X, y, grid, PathConfig(rule="strong", solver_tol=1e-10))
     assert all(s.kkt_rounds >= 0 for s in res.stats)
+
+
+# ---------------------------------------------------------------------------
+# Half-space cuts: sphere ∩ λ_max feasibility cut (docs/screening-rules.md)
+# ---------------------------------------------------------------------------
+
+def _sup_oracle(x, c, rho, ghat, b, k=100001):
+    """Independent oracle for sup |xᵀθ| over B(c,ρ) ∩ {ĝᵀθ ≤ b}.
+
+    The maximiser of ±xᵀθ over the cap satisfies θ* = c + ρ(±x − μĝ)/
+    ‖±x − μĝ‖ for some μ ≥ 0 (KKT), so it lies on the sphere boundary in
+    the 2-plane c + span{x, ĝ} — a dense angle grid over that circle is an
+    exact-to-grid-resolution reference, no sampling noise."""
+    x = np.asarray(x, np.float64)
+    g = np.asarray(ghat, np.float64)
+    c = np.asarray(c, np.float64)
+    e1 = x / np.linalg.norm(x)
+    g_perp = g - (g @ e1) * e1
+    if np.linalg.norm(g_perp) > 1e-12:
+        e2 = g_perp / np.linalg.norm(g_perp)
+    else:                       # x ∥ ĝ: complete the plane arbitrarily
+        e2 = np.zeros_like(e1)
+        e2[int(np.argmin(np.abs(e1)))] = 1.0
+        e2 -= (e2 @ e1) * e1
+        e2 /= np.linalg.norm(e2)
+    phi = np.linspace(0.0, 2.0 * np.pi, k)
+    theta = c[None] + rho * (np.cos(phi)[:, None] * e1[None]
+                             + np.sin(phi)[:, None] * e2[None])
+    feas = theta @ g <= b + 1e-12
+    assert feas.any(), "cut must intersect the ball in this test"
+    return float(np.abs(theta[feas] @ x).max())
+
+
+def test_halfspace_sup_matches_closed_form_oracle():
+    """The fused-pass closed form equals the exact sup over ball ∩ cut."""
+    rng = np.random.default_rng(11)
+    n, p = 7, 40
+    X = rng.standard_normal((n, p)).astype(np.float32)
+    c = rng.standard_normal(n).astype(np.float32)
+    rho = 0.8
+    g = rng.standard_normal(n)
+    ghat = (g / np.linalg.norm(g)).astype(np.float32)
+    # cut passes through the ball: t_b = (b − ĝᵀc)/ρ ≈ 0.3
+    b = float(ghat @ c + 0.3 * rho)
+    from repro.core import SphereTest
+    test = SphereTest(centre=jnp.asarray(c), rho=jnp.asarray(rho,
+                                                             jnp.float32))
+    cut = HalfSpaceCut(ghat=jnp.asarray(ghat), b=jnp.asarray(b, jnp.float32))
+    Xf = jnp.asarray(X)
+    sups = np.asarray(halfspace_sup(Xf.T @ test.centre, Xf.T @ cut.ghat,
+                                    jnp.linalg.norm(Xf, axis=0), test, cut))
+    for j in range(p):
+        ref = _sup_oracle(X[:, j], c, rho, ghat, b)
+        assert abs(sups[j] - ref) < 2e-4 * max(ref, 1.0), (j, sups[j], ref)
+        # never looser than the plain sphere sup
+        sphere = abs(float(X[:, j] @ c)) + rho * np.linalg.norm(X[:, j])
+        assert sups[j] <= sphere + 1e-4
+
+
+def test_halfspace_sup_degenerate_cut_is_sphere_sup():
+    """A cut whose half-space contains the whole ball clips t_b to 1 and
+    must reduce BIT-EXACTLY to the sphere sup (composing is never looser
+    AND never spuriously tighter than the ball alone)."""
+    X, y, Xf, yf, lmax = _setup(seed=12)
+    state = DualState.at_lambda_max(Xf, yf)
+    test = make_sphere("edpp", yf, 0.4 * lmax, state)
+    g = np.asarray(np.random.default_rng(1).standard_normal(Xf.shape[0]))
+    ghat = jnp.asarray(g / np.linalg.norm(g), jnp.float32)
+    centre_norm = float(jnp.linalg.norm(test.centre))
+    rho = float(test.rho)
+    # b beyond ĝᵀc + ρ for every possible ĝᵀc: the ball never touches it
+    cut = HalfSpaceCut(ghat=ghat,
+                       b=jnp.asarray(centre_norm + 2.0 * rho + 1.0,
+                                     jnp.float32))
+    scores_c = Xf.T @ test.centre
+    sups = halfspace_sup(scores_c, Xf.T @ ghat,
+                         jnp.linalg.norm(Xf, axis=0), test, cut)
+    sphere = jnp.abs(scores_c) + test.rho * jnp.linalg.norm(Xf, axis=0)
+    assert np.array_equal(np.asarray(sups), np.asarray(sphere))
+
+
+@pytest.mark.parametrize("rule", sorted(CUT_RULES))
+def test_cut_rules_safety_sequential(rule):
+    """No cut rule discards an oracle-active feature from an exact
+    sequential state (the cut region still contains θ*(λ))."""
+    X, y, Xf, yf, lmax = _setup(seed=9)
+    beta0 = cd_lasso(X, y, 0.5 * lmax)
+    oracle = cd_lasso(X, y, 0.3 * lmax)
+    active = np.abs(oracle) > 1e-10
+    state = make_dual_state(Xf, yf, jnp.asarray(beta0, jnp.float32),
+                            0.5 * lmax, lmax)
+    mask = np.asarray(CUT_RULES[rule](Xf, yf, 0.3 * lmax, state))
+    assert not np.any(mask & active), rule
+
+
+@pytest.mark.parametrize("base", ["dpp", "imp1", "imp2", "edpp", "seq_safe",
+                                  "gap"])
+def test_cut_discards_superset_of_sphere(base):
+    """ball ∩ half-space ⊆ ball ⇒ every sphere discard is a cut discard."""
+    X, y, Xf, yf, lmax = _setup(seed=10, p=250)
+    beta0 = cd_lasso(X, y, 0.6 * lmax)
+    state = make_dual_state(Xf, yf, jnp.asarray(beta0, jnp.float32),
+                            0.6 * lmax, lmax)
+    for lam in [0.45 * lmax, 0.25 * lmax]:
+        m_sphere = np.asarray(RULES[base](Xf, yf, lam, state))
+        m_cut = np.asarray(CUT_RULES[base + "_cut"](Xf, yf, lam, state))
+        assert np.all(m_cut | ~m_sphere), (base, lam)
+
+
+def test_cut_mask_matches_rule_oracle():
+    """cut_mask(X, sphere, feasibility_cut) == the registered <base>_cut
+    oracle (same geometry, two code paths)."""
+    X, y, Xf, yf, lmax = _setup(seed=13)
+    state = DualState.at_lambda_max(Xf, yf)
+    lam = 0.35 * lmax
+    test = make_sphere("edpp", yf, lam, state)
+    cut = feasibility_cut(Xf, yf)
+    direct = np.asarray(cut_mask(Xf, test, cut))
+    via_rule = np.asarray(CUT_RULES["edpp_cut"](Xf, yf, lam, state))
+    assert np.array_equal(direct, via_rule)
+
+
+def test_gap_cut_path_agrees_with_unscreened():
+    """End-to-end: the gap_cut path equals the unscreened path."""
+    X, y, Xf, yf, lmax = _setup(seed=14, n=30, p=120)
+    grid = lambda_grid(lmax, num=12)
+    ref = lasso_path(X, y, grid, PathConfig(rule="none", solver_tol=1e-10))
+    res = lasso_path(X, y, grid, PathConfig(rule="gap_cut",
+                                            solver_tol=1e-10))
+    np.testing.assert_allclose(res.betas, ref.betas, atol=5e-4)

@@ -18,6 +18,7 @@ Usage:
     python tools/check_bench_schema.py BENCH_batch.json --section bench_batched
     python tools/check_bench_schema.py BENCH_serve.json --section bench_serve
     python tools/check_bench_schema.py BENCH_dist.json --section bench_dist
+    python tools/check_bench_schema.py BENCH_solver.json --section bench_dpp_family
 """
 
 from __future__ import annotations
@@ -82,12 +83,27 @@ DIST_ROW_KEYS = {
     "wall_time_s",
     "speedup_vs_open_coded",
     "masks_identical",
+    "screen_dtype",
+    "bytes_per_screen",
+}
+
+DPP_FAMILY_ROW_KEYS = {
+    "dataset",
+    "rule",
+    "screen_dtype",
+    "num_lambdas",
+    "rejection_rate",
+    "bytes_per_screen",
+    "speedup_vs_unscreened",
+    "wall_time_s",
+    "max_beta_err",
 }
 
 SECTION_ROW_KEYS = {
     "bench_batched": BATCH_ROW_KEYS,
     "bench_serve": SERVE_ROW_KEYS,
     "bench_dist": DIST_ROW_KEYS,
+    "bench_dpp_family": DPP_FAMILY_ROW_KEYS,
 }
 
 
