@@ -44,6 +44,8 @@ on every rule and backend.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -77,6 +79,38 @@ def oracle_x_passes(rule: str) -> int:
 def _next_pow2(k: int) -> int:
     """Smallest power of two ≥ k (bucket size for the narrow re-test)."""
     return 1 << max(0, (k - 1).bit_length())
+
+
+def _narrow_bucket(k: int, p: int) -> int:
+    """Bucket size for the narrow f32 gathers: the smallest of
+    {8, 16, 24, 32, 48, 64, 96, ...} — powers of two plus their 3/4
+    midpoints, all multiples of 8 so the gathered width stays divisible
+    by the feature-mesh sizes the sharded backend supports — that holds
+    k columns, capped at p. The midpoints halve the worst-case rounding
+    overhead (1.5× instead of 2×) for ~2× the compiled gather variants,
+    still O(log p)."""
+    b = _next_pow2(max(k, 8))
+    if b >= 32 and 3 * b // 4 >= k:
+        b = 3 * b // 4
+    return min(b, p)
+
+
+# Rules that have requested screen_dtype="bfloat16" but had to run f32
+# because no certified margin covers them — warn once per rule per process
+# so a silent fallback can't mislabel a bench row (the effective dtype is
+# also recorded in PathStepStats.screen_dtype_effective).
+_BF16_FALLBACK_WARNED: set[str] = set()
+
+
+def _note_f32_fallback(rule: str) -> None:
+    if rule in _BF16_FALLBACK_WARNED:
+        return
+    _BF16_FALLBACK_WARNED.add(rule)
+    warnings.warn(
+        f"screen_dtype='bfloat16' has no certified margin for rule "
+        f"{rule!r}; screening it in float32 instead (masks unchanged, no "
+        f"byte saving — see docs/kernels.md#mixed-precision-screening)",
+        RuntimeWarning, stacklevel=4)
 
 
 # ---------------------------------------------------------------------------
@@ -137,17 +171,25 @@ def _sphere_combine(dot, rho, col_norms, eps):
 
 
 @jax.jit
-def _gap_combine(dot, y, lam_next, state, col_norms, eps):
-    if dot.ndim == 2:
-        sup_corr = jnp.max(jnp.abs(dot), axis=-1)
-        test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
-        s = jnp.maximum(1.0, sup_corr)
-        return jnp.abs(dot) / scr._col(s) \
-            + scr._col(test.rho) * col_norms < 1.0 - eps
-    sup_corr = jnp.max(jnp.abs(dot))
+def _gap_combine_from(dot, sup_corr, y, lam_next, state, col_norms, eps):
+    """The GAP combine with the feasibility rescale ``sup_corr = ‖Xᵀθ₀‖∞``
+    supplied explicitly — shared by the one-pass f32 combine (sup_corr from
+    the same dot) and the bf16 narrow fallback (sup_corr recovered exactly
+    from the gathered f32 dots, see ``_gap_screen_margin`` notes)."""
     test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
     s = jnp.maximum(1.0, sup_corr)
+    if dot.ndim == 2:
+        return jnp.abs(dot) / scr._col(s) \
+            + scr._col(test.rho) * col_norms < 1.0 - eps
     return jnp.abs(dot) / s + test.rho * col_norms < 1.0 - eps
+
+
+@jax.jit
+def _gap_combine(dot, y, lam_next, state, col_norms, eps):
+    sup_corr = (jnp.max(jnp.abs(dot), axis=-1) if dot.ndim == 2
+                else jnp.max(jnp.abs(dot)))
+    return _gap_combine_from(dot, sup_corr, y, lam_next, state, col_norms,
+                             eps)
 
 
 @jax.jit
@@ -191,20 +233,124 @@ def _dome_combine(scores_c, gdot, col_norms, c, rho, ghat, b, eps):
 
 
 @jax.jit
+def _gap_cut_combine_from(dot, gdot, sup_corr, y, lam_next, state, col_norms,
+                          ghat, b, eps):
+    """The gap_cut combine with ``sup_corr`` supplied explicitly (see
+    ``_gap_combine_from`` — same split, same fallback consumer)."""
+    test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+    if dot.ndim == 2:
+        scores_c = dot / scr._col(jnp.maximum(1.0, sup_corr))
+    else:
+        scores_c = dot / jnp.maximum(1.0, sup_corr)
+    return scr.dome_scores(scores_c, gdot, col_norms, test.centre, test.rho,
+                           ghat, b) < 1.0 - eps
+
+
+@jax.jit
 def _gap_cut_combine(dot, gdot, y, lam_next, state, col_norms, ghat, b, eps):
     """gap_cut: the GAP sphere's feasibility rescale (served by the dot the
     pass already produced, exactly like _gap_combine) composed with the
     half-space sup over ball ∩ cut."""
+    sup_corr = (jnp.max(jnp.abs(dot), axis=-1) if dot.ndim == 2
+                else jnp.max(jnp.abs(dot)))
+    return _gap_cut_combine_from(dot, gdot, sup_corr, y, lam_next, state,
+                                 col_norms, ghat, b, eps)
+
+
+# --- per-piece margin combines for the bf16 fast pass -----------------------
+# The dome sup and the HalfSpaceCut combine are only PIECEWISE-linear in the
+# two dots (x_j·c, x_j·ĝ), so PR 8's single scalar band does not transfer.
+# Instead each combine below propagates one interval per dot (centre dot
+# ± e_c, cut dot ± e_g from ops.bf16_score_margin) through every linear
+# regime of the closed form (scr.dome_score_bounds evaluates the cap term at
+# both interval endpoints AND the regime breakpoint g = ‖x_j‖), yielding
+# certified [lo, hi] bounds on the exact f32 score. Outside [lo, hi]'s
+# straddle of the threshold the bf16 decision is provably the f32 decision;
+# the returned band marks the columns that must be re-tested in f32.
+#
+# The GAP rules add a wrinkle: their feasibility rescale sup_corr = ‖Xᵀθ₀‖∞
+# is a global max the bf16 pass can only bracket. Propagating that bracket
+# through u = 1/max(1, sc) and the radius ρ(u) = √(2·gap(u))/λ is far too
+# loose near convergence: gap(u*) ≈ 0, so a bracket of width 2m inflates ρ
+# by ~√(λ|θᵀy|·m) and hundreds of columns straddle the threshold at small
+# λ. The engine therefore recovers sup_corr EXACTLY first, with a separate
+# tiny gather of the argmax CANDIDATES (|d̃_j|+m_j ≥ max_k(|d̃_k|−m_k)): the
+# true f32 argmax column is provably a candidate, every gathered f32 dot is
+# ≤ the true max, hence the max over the gathered exact dots IS the global
+# f32 sup bit-for-bit (`_narrow_sup`). With u and ρ exact scalars the only
+# residual uncertainty is the per-column dot margin, and the band collapses
+# to the true threshold straddlers (tens of columns, not hundreds).
+
+@jax.jit
+def _dome_combine_margin(scores_c, gdot, e_c, e_g, col_norms, c, rho, ghat,
+                         b, eps):
+    t_b = scr.dome_t_b(c, rho, ghat, b)
+    lo, hi = scr.dome_score_bounds(scores_c - e_c, scores_c + e_c,
+                                   gdot - e_g, gdot + e_g, col_norms,
+                                   rho, rho, t_b, t_b)
+    thresh = 1.0 - eps
+    return hi < thresh, (hi >= thresh) & (lo < thresh)
+
+
+@jax.jit
+def _gap_cand(dot, margin):
+    """Argmax-candidate mask for the exact sup_corr recovery: every column
+    whose bf16 upper bound |d̃_j| + m_j reaches the best lower bound
+    max_k(|d̃_k| − m_k) could be the true f32 argmax. The threshold is
+    additionally floored at 1 because every consumer reads sup_corr
+    through max(1, ·) (gap_sphere's u = 1/max(1, sup) and the combine's
+    rescale): a column with |d̃_j| + m_j < 1 has exact |d_j| < 1 and so
+    can never move that max — if the true sup exceeds 1 its argmax column
+    clears the floor by itself, and if it doesn't the gathered max is ≤ 1
+    and the consumer's floor takes over either way. The set CAN be empty
+    (all upper bounds < 1); the zero-padded gather then returns some
+    exact |d_0| ≤ sup < 1, which the floor also absorbs."""
+    a = jnp.abs(dot)
+    abs_hi = a + margin
+    abs_lo = jnp.maximum(a - margin, 0.0)
     if dot.ndim == 2:
-        sup_corr = jnp.max(jnp.abs(dot), axis=-1)
-        test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
-        scores_c = dot / scr._col(jnp.maximum(1.0, sup_corr))
+        t = jnp.maximum(jnp.max(abs_lo, axis=-1), 1.0)
+        return abs_hi >= scr._col(t)
+    return abs_hi >= jnp.maximum(jnp.max(abs_lo), 1.0)
+
+
+@jax.jit
+def _gap_combine_margin(dot, margin, sup_corr, y, lam_next, state,
+                        col_norms, eps):
+    """GAP margin combine with the EXACT f32 rescale in hand (see the
+    block comment above): u = 1/max(1, sup_corr) and ρ are exact scalars,
+    so the certified bounds differ from the exact score only by the dot
+    margin and the band is the true threshold straddlers."""
+    test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+    s = jnp.maximum(1.0, sup_corr)
+    a = jnp.abs(dot)
+    if dot.ndim == 2:
+        sc, rc = scr._col(s), scr._col(test.rho)
+        hi = (a + margin) / sc + rc * col_norms
+        lo = jnp.maximum(a - margin, 0.0) / sc + rc * col_norms
     else:
-        sup_corr = jnp.max(jnp.abs(dot))
-        test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
-        scores_c = dot / jnp.maximum(1.0, sup_corr)
-    return scr.dome_scores(scores_c, gdot, col_norms, test.centre, test.rho,
-                           ghat, b) < 1.0 - eps
+        hi = (a + margin) / s + test.rho * col_norms
+        lo = jnp.maximum(a - margin, 0.0) / s + test.rho * col_norms
+    thresh = 1.0 - eps
+    return hi < thresh, (hi >= thresh) & (lo < thresh)
+
+
+@jax.jit
+def _gap_cut_combine_margin(dot, gdot, e_c, e_g, sup_corr, y, lam_next,
+                            state, col_norms, ghat, b, eps):
+    """gap_cut margin combine with the exact rescale: the sphere geometry
+    (centre θ₀/s, ρ, and the clip breakpoint t_b) is exact, so only the
+    two dot intervals flow through the piecewise closed form — the same
+    `dome_score_bounds` call the dome margin combine makes."""
+    test = scr.gap_sphere(y, lam_next, state, sup_corr=sup_corr)
+    t_b = scr.dome_t_b(test.centre, test.rho, ghat, b)
+    s = scr._col(jnp.maximum(1.0, sup_corr)) if dot.ndim == 2 \
+        else jnp.maximum(1.0, sup_corr)
+    lo, hi = scr.dome_score_bounds((dot - e_c) / s, (dot + e_c) / s,
+                                   gdot - e_g, gdot + e_g, col_norms,
+                                   test.rho, test.rho, t_b, t_b)
+    thresh = 1.0 - eps
+    return hi < thresh, (hi >= thresh) & (lo < thresh)
 
 
 @jax.jit
@@ -514,13 +660,18 @@ class ScreeningEngine:
     callers (benchmarks, PathStepStats) can report data movement.
     """
 
-    #: Rules whose score is a single linear dot against a dot-independent
-    #: sphere — the only shape the bf16 error bound covers. ``gap`` folds a
-    #: data-dependent rescale into the same dot, and the ``*_cut``/``dome``
-    #: sups are only piecewise-linear in the dots, so those stay f32 even
-    #: under ``screen_dtype="bfloat16"`` (documented in docs/kernels.md).
+    #: Rules the bf16 fast pass serves with a certified margin. PR 8 covered
+    #: the single-dot sphere/strong shape; the per-piece interval bounds
+    #: (scr.dome_score_bounds + the GAP rescale/radius intervals in the
+    #: ``*_margin`` combines above) extend the contract to ``gap``, ``dome``
+    #: and every ``<base>_cut`` composite — the whole scalar-rule family now
+    #: streams the bf16 copy with masks bit-identical to f32. A future rule
+    #: dispatched without a margin derivation runs f32 with a one-time
+    #: warning (``_note_f32_fallback``) and reports
+    #: ``last_effective_dtype == "float32"``.
     BF16_FAST_RULES = ("dpp", "imp1", "imp2", "edpp", "seq_safe", "safe",
-                      "strong")
+                       "strong", "gap", "dome",
+                       *(f"{b}_cut" for b in scr.SPHERE_RULES))
 
     def __init__(self, X, y, backend: str | None = None,
                  eps: float = scr.EPS_DEFAULT, *,
@@ -545,6 +696,20 @@ class ScreeningEngine:
         self.total_screen_bytes = 0.0
         self.last_screen_bytes = 0.0
         self.last_fallback_cols = 0
+        # dtype the last screen actually streamed ("bfloat16" only when the
+        # fast pass ran — the narrow f32 fallback doesn't demote it)
+        self.last_effective_dtype = "float32"
+
+    def _use_bf16(self, rule: str) -> bool:
+        """Whether this screen runs the bf16 fast pass; warns once per rule
+        when bfloat16 was requested but no certified margin covers it."""
+        if self._x_fast is None:
+            return False
+        if rule in self.BF16_FAST_RULES:
+            self.last_effective_dtype = "bfloat16"
+            return True
+        _note_f32_fallback(rule)
+        return False
 
     @property
     def lam_max(self):
@@ -616,10 +781,11 @@ class ScreeningEngine:
         if cols.size == 0:
             return dec, 0, 0.0
         p = ws.X.shape[1]
-        # pow-2 bucket (floor 8): bounds recompilations and keeps the
-        # gathered block's width divisible by the feature-mesh sizes the
-        # sharded backend supports, so shard_map re-dispatch just works.
-        bucket = min(_next_pow2(max(int(cols.size), 8)), p)
+        # bucketed gather (floor 8, multiples of 8): bounds recompilations
+        # and keeps the gathered block's width divisible by the
+        # feature-mesh sizes the sharded backend supports, so shard_map
+        # re-dispatch just works.
+        bucket = _narrow_bucket(int(cols.size), p)
         idx = np.zeros((bucket,), dtype=np.int32)
         idx[:cols.size] = cols
         idx_dev = jnp.asarray(idx)
@@ -630,11 +796,38 @@ class ScreeningEngine:
         return jnp.asarray(out), 1, float(ws.X.shape[0]) * bucket \
             * ws.X.dtype.itemsize
 
-    def _sphere_screen(self, test: scr.SphereTest, eps_val) -> jax.Array:
+    def _narrow_sup(self, cand, centre, batched):
+        """Exact max(1, ‖Xᵀθ₀‖∞) from a narrow f32 gather of the argmax
+        candidates (`_gap_cand`): whenever the true sup exceeds 1 — the
+        only case any consumer can distinguish, all of them read the value
+        through max(1, ·) — its argmax column is provably a candidate and
+        every gathered exact dot is ≤ the true max, so the max over the
+        gathered dots recovers the global f32 sup bit-for-bit; otherwise
+        the gathered max is some exact dot ≤ sup < 1 and the consumer's
+        floor yields the same 1 either way. Pad/union columns that are not
+        candidates for a given query only ever contribute values ≤ that
+        query's sup, so they never corrupt the max. Returns
+        (sup_corr, gather_bytes)."""
+        ws = self.ws
+        cand_np = np.asarray(cand)
+        cols = np.flatnonzero(
+            cand_np if cand_np.ndim == 1 else cand_np.any(axis=0))
+        p = ws.X.shape[1]
+        bucket = _narrow_bucket(int(cols.size), p)
+        idx = np.zeros((bucket,), dtype=np.int32)
+        idx[:cols.size] = cols
+        Xn = jnp.take(ws.X, jnp.asarray(idx), axis=1)
+        dot_n = ws.backend.matvec(Xn, centre)
+        sup = (jnp.max(jnp.abs(dot_n), axis=-1) if batched
+               else jnp.max(jnp.abs(dot_n)))
+        return sup, float(ws.X.shape[0]) * bucket * ws.X.dtype.itemsize
+
+    def _sphere_screen(self, test: scr.SphereTest, eps_val,
+                       rule: str) -> jax.Array:
         """One streaming pass for a plain sphere test — through the bf16
         copy with the margin-aware fallback when screen_dtype asks for it."""
         ws = self.ws
-        if self._x_fast is None:
+        if not self._use_bf16(rule):
             dot = ws.backend.matvec(ws.X, test.centre)
             self._count(1)
             return _sphere_combine(dot, test.rho, ws.col_norms, eps_val)
@@ -661,6 +854,7 @@ class ScreeningEngine:
         the whole batch."""
         ws = self.ws
         batched = ws.batch is not None
+        self.last_effective_dtype = "float32"
         if batched:
             lam_next = jnp.asarray(lam_next, ws.X.dtype)
         if rule == "none":
@@ -672,7 +866,7 @@ class ScreeningEngine:
             lmax = ws.lam_max_array() if batched else ws.lam_max
             test = scr.safe_sphere(ws.y, lam_next, lmax)
             # eq. 15's eps margin is at λ scale: eps/λ once unit-normalised
-            return self._sphere_screen(test, self.eps / lam_next)
+            return self._sphere_screen(test, self.eps / lam_next, rule)
         if rule == "dome":
             if batched:
                 lmax = ws.lam_max_array()
@@ -685,15 +879,53 @@ class ScreeningEngine:
                 rho = jnp.linalg.norm(ws.y) * (
                     1.0 / lam_next - 1.0 / ws.lam_max)
                 gnorm = jnp.linalg.norm(ws.v1_at_lmax) + 1e-30
+            b_cut = 1.0 / gnorm
+
+            def keep_istar(dec):
+                # The dome sup at istar is identically 1 (θ = y/λ_max sits
+                # on both the sphere and half-space boundaries with
+                # x_*ᵀθ = 1), so the test is exactly ON the discard
+                # threshold there and f32 rounding could evict the
+                # λ_max-attaining feature. Pin it kept — mirrors
+                # scr.dome_mask so engine and oracle masks stay identical.
+                if batched:
+                    return dec & (jnp.arange(ws.X.shape[1])[None, :]
+                                  != jnp.asarray(ws.istar)[:, None])
+                return dec.at[ws.istar].set(False)
+
+            if self._use_bf16(rule):
+                # both directions ride ONE stacked bf16 pass (the f32 dome
+                # spends two passes), bounded per piece by the margins
+                dot_c, gdot, stacked = self._stacked_matvec(
+                    self._x_fast, c, batched)
+                e_c = ops.bf16_score_margin(
+                    self._x_fast_err, jnp.linalg.norm(c, axis=-1))
+                e_g = ops.bf16_score_margin(
+                    self._x_fast_err, jnp.linalg.norm(ws.ghat, axis=-1))
+                dec, band = _dome_combine_margin(
+                    dot_c, gdot, e_c, e_g, ws.col_norms, c, rho, ws.ghat,
+                    b_cut, self.eps)
+
+                def recompute(Xn, idx_dev):
+                    dc, dg = self._split_stacked(
+                        ws.backend.matvec(Xn, stacked), batched)
+                    return _dome_combine(
+                        dc, dg, jnp.take(ws.col_norms, idx_dev), c, rho,
+                        ws.ghat, b_cut, self.eps)
+
+                dec, extra, narrow_bytes = self._bf16_fallback(
+                    dec, band, recompute)
+                self._count(1 + extra, self._fast_bytes() + narrow_bytes)
+                return keep_istar(dec)
             scores_c = ws.backend.matvec(ws.X, c)
             gdot = ws.backend.matvec(ws.X, ws.ghat)
             self._count(2)
-            return _dome_combine(scores_c, gdot, ws.col_norms, c, rho,
-                                 ws.ghat, 1.0 / gnorm, self.eps)
+            return keep_istar(_dome_combine(scores_c, gdot, ws.col_norms, c,
+                                            rho, ws.ghat, b_cut, self.eps))
         if rule == "strong":
             theta_lam = (state.theta * scr._col(state.lam) if batched
                          else state.theta * state.lam)
-            if self._x_fast is None:
+            if not self._use_bf16(rule):
                 dot = ws.backend.matvec(ws.X, theta_lam)
                 self._count(1)
                 return _strong_combine(dot, lam_next, state.lam, self.eps)
@@ -712,11 +944,36 @@ class ScreeningEngine:
             self._count(1 + extra, self._fast_bytes() + narrow_bytes)
             return dec
         if rule == "gap":
-            # one matvec serves the feasibility rescale AND the scores
-            dot = ws.backend.matvec(ws.X, state.theta)
-            self._count(1)
-            return _gap_combine(dot, ws.y, lam_next, state, ws.col_norms,
-                                self.eps)
+            if not self._use_bf16(rule):
+                # one matvec serves the feasibility rescale AND the scores
+                dot = ws.backend.matvec(ws.X, state.theta)
+                self._count(1)
+                return _gap_combine(dot, ws.y, lam_next, state, ws.col_norms,
+                                    self.eps)
+            dot = ws.backend.matvec(self._x_fast, state.theta)
+            margin = ops.bf16_score_margin(
+                self._x_fast_err, jnp.linalg.norm(state.theta, axis=-1))
+            # stage 1: exact feasibility rescale from the tiny candidate
+            # gather, so u and ρ in the margin combine are exact scalars
+            sup_corr, sup_bytes = self._narrow_sup(
+                _gap_cand(dot, margin), state.theta, batched)
+            dec, band = _gap_combine_margin(dot, margin, sup_corr, ws.y,
+                                            lam_next, state, ws.col_norms,
+                                            self.eps)
+
+            def recompute(Xn, idx_dev):
+                # stage 2: the gathered exact dots + the stage-1 sup_corr
+                # reproduce the f32 combine's scores bit-for-bit
+                return _gap_combine_from(
+                    ws.backend.matvec(Xn, state.theta), sup_corr, ws.y,
+                    lam_next, state, jnp.take(ws.col_norms, idx_dev),
+                    self.eps)
+
+            dec, _, narrow_bytes = self._bf16_fallback(dec, band, recompute)
+            # the candidate gather always runs, so gap always pays exactly
+            # one narrow extra pass on top of the wide bf16 stream
+            self._count(2, self._fast_bytes() + sup_bytes + narrow_bytes)
+            return dec
         if rule.endswith("_cut") and rule[:-4] in scr.SPHERE_RULES:
             return self._cut_screen(rule[:-4], lam_next, state, batched)
         if rule not in scr.SPHERE_RULES:
@@ -724,7 +981,31 @@ class ScreeningEngine:
                 f"unknown screening rule {rule!r}; available: "
                 f"{(*scr.SPHERE_RULES, *scr.CUT_RULES, 'safe', 'dome', 'strong', 'none')}")
         test = scr.make_sphere(rule, ws.y, lam_next, state)
-        return self._sphere_screen(test, self.eps)
+        return self._sphere_screen(test, self.eps, rule)
+
+    def _stacked_matvec(self, X_src, centre, batched: bool):
+        """[centre; ĝ] through ONE streaming matvec against ``X_src``.
+        Returns (dot_c, gdot, stacked) — ``stacked`` so narrow fallbacks
+        can replay the identical operand against gathered f32 columns."""
+        ws = self.ws
+        if batched:
+            # stack-then-reshape, NOT concatenate: jnp.concatenate along a
+            # query-sharded axis miscomputes on multi-device meshes
+            # (observed on jax 0.4.37 host platforms); the (2, B, n) stack
+            # keeps the sharded axis intact and reshapes to the same
+            # [centre-rows; ghat-rows] layout.
+            stacked = jnp.stack([centre, ws.ghat]).reshape(
+                2 * ws.batch, centre.shape[-1])                   # (2B, n)
+            dot = ws.backend.matvec(X_src, stacked)
+            return dot[:ws.batch], dot[ws.batch:], stacked
+        stacked = jnp.stack([centre, ws.ghat])                    # (2, n)
+        dot = ws.backend.matvec(X_src, stacked)
+        return dot[0], dot[1], stacked
+
+    def _split_stacked(self, dot, batched: bool):
+        if batched:
+            return dot[:self.ws.batch], dot[self.ws.batch:]
+        return dot[0], dot[1]
 
     def _cut_screen(self, base: str, lam_next, state: scr.DualState,
                     batched: bool) -> jax.Array:
@@ -732,7 +1013,10 @@ class ScreeningEngine:
         cut, in ONE streaming pass — the cut normal ĝ (cached in the
         workspace since the fit) is stacked with the sphere centre into a
         single batched matvec, so the extra dot per column rides the same
-        HBM pass (same trick the batched query path uses)."""
+        HBM pass (same trick the batched query path uses). Under
+        screen_dtype="bfloat16" the stacked pass streams the bf16 copy and
+        the per-piece margin combines band the decisions (masks stay
+        bit-identical — see the margin-combine block above)."""
         ws = self.ws
         gnorm = jnp.linalg.norm(ws.v1_at_lmax, axis=-1) + 1e-30
         b_cut = 1.0 / gnorm                       # ĝᵀθ ≤ 1/‖g‖ on all of F
@@ -742,26 +1026,54 @@ class ScreeningEngine:
         else:
             test = scr.make_sphere(base, ws.y, lam_next, state)
             centre = test.centre
-        if batched:
-            # stack-then-reshape, NOT concatenate: jnp.concatenate along a
-            # query-sharded axis miscomputes on multi-device meshes
-            # (observed on jax 0.4.37 host platforms); the (2, B, n) stack
-            # keeps the sharded axis intact and reshapes to the same
-            # [centre-rows; ghat-rows] layout.
-            stacked = jnp.stack([centre, ws.ghat]).reshape(
-                2 * ws.batch, centre.shape[-1])                   # (2B, n)
-            dot = ws.backend.matvec(ws.X, stacked)
-            dot_c, gdot = dot[:ws.batch], dot[ws.batch:]
-        else:
-            stacked = jnp.stack([centre, ws.ghat])                # (2, n)
-            dot = ws.backend.matvec(ws.X, stacked)
-            dot_c, gdot = dot[0], dot[1]
-        self._count(1)
+        fast = self._use_bf16(base + "_cut")
+        dot_c, gdot, stacked = self._stacked_matvec(
+            self._x_fast if fast else ws.X, centre, batched)
+        if not fast:
+            self._count(1)
+            if base == "gap":
+                return _gap_cut_combine(dot_c, gdot, ws.y, lam_next, state,
+                                        ws.col_norms, ws.ghat, b_cut,
+                                        self.eps)
+            return _dome_combine(dot_c, gdot, ws.col_norms, test.centre,
+                                 test.rho, ws.ghat, b_cut, self.eps)
+        e_c = ops.bf16_score_margin(
+            self._x_fast_err, jnp.linalg.norm(centre, axis=-1))
+        e_g = ops.bf16_score_margin(
+            self._x_fast_err, jnp.linalg.norm(ws.ghat, axis=-1))
+        sup_corr = sup_bytes = None
         if base == "gap":
-            return _gap_cut_combine(dot_c, gdot, ws.y, lam_next, state,
-                                    ws.col_norms, ws.ghat, b_cut, self.eps)
-        return _dome_combine(dot_c, gdot, ws.col_norms, test.centre,
-                             test.rho, ws.ghat, b_cut, self.eps)
+            # stage 1 (see the gap branch of `screen`): exact rescale from
+            # the tiny candidate gather collapses u, ρ and t_b to exact
+            # scalars before the piecewise bounds run
+            sup_corr, sup_bytes = self._narrow_sup(
+                _gap_cand(dot_c, e_c), centre, batched)
+            dec, band = _gap_cut_combine_margin(
+                dot_c, gdot, e_c, e_g, sup_corr, ws.y, lam_next, state,
+                ws.col_norms, ws.ghat, b_cut, self.eps)
+        else:
+            dec, band = _dome_combine_margin(
+                dot_c, gdot, e_c, e_g, ws.col_norms, test.centre, test.rho,
+                ws.ghat, b_cut, self.eps)
+
+        def recompute(Xn, idx_dev):
+            dc, dg = self._split_stacked(ws.backend.matvec(Xn, stacked),
+                                         batched)
+            cn = jnp.take(ws.col_norms, idx_dev)
+            if base == "gap":
+                return _gap_cut_combine_from(
+                    dc, dg, sup_corr, ws.y, lam_next, state, cn, ws.ghat,
+                    b_cut, self.eps)
+            return _dome_combine(dc, dg, cn, test.centre, test.rho, ws.ghat,
+                                 b_cut, self.eps)
+
+        dec, extra, narrow_bytes = self._bf16_fallback(dec, band, recompute)
+        if base == "gap":
+            # the candidate gather always runs — exactly one narrow extra
+            # pass regardless of whether the band gather fired too
+            extra, narrow_bytes = 1, narrow_bytes + sup_bytes
+        self._count(1 + extra, self._fast_bytes() + narrow_bytes)
+        return dec
 
 
 # ---------------------------------------------------------------------------

@@ -99,6 +99,13 @@ class PathStepStats:
     screen_bytes: float = 0.0     # HBM bytes this step's screens streamed
     #                               (bf16 screen_dtype ≈ halves this; the
     #                               narrow fallback pass is counted in)
+    screen_dtype_effective: str = ""  # dtype the screen stream actually ran
+    #                               ("float32" when a bf16 request fell back)
+    solve_dtype_effective: str = ""   # dtype the solver matvecs streamed
+    solver_lo_iters: int = 0      # solver iterations run on the bf16 stream
+    solve_bytes: float = 0.0      # HBM bytes this step's solves streamed
+    #                               (bf16 iteration passes counted at 2 B/el,
+    #                               f32 certificates/polish at 4)
 
 
 @dataclasses.dataclass
@@ -200,7 +207,8 @@ def lambda_grid(lam_max: float, num: int = 100, lo_frac: float = 0.05,
 
 def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                  solver_engine: SolverEngine, need_kkt: bool,
-                 kkt_fn, batch: int | None = None, reshard=None):
+                 kkt_fn, batch: int | None = None, reshard=None,
+                 lo_gather=None):
     """The shared screen → reduce → solve → KKT loop over a decreasing grid.
 
     ``m`` is the unit size: 1 for the Lasso (units = features), the group
@@ -214,6 +222,14 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
     fitted values (``fitted = Xr·β_r``, threaded into KKT and the next
     dual state instead of a full, psum-ordered X·β), this is what makes
     sharded and unsharded masks bit-identical (docs/distributed.md).
+
+    ``lo_gather`` (set by the session when ``solve_dtype="bfloat16"``) maps
+    the same ``(idx, valid, bucket)`` the f32 gather uses onto the cached
+    bf16 dictionary copy: it returns ``(X_lo_r, err_max, cn_max)`` — the
+    reduced low-precision bucket plus the per-bucket error/norm bounds the
+    solver's certified bf16 phase needs (docs/solvers.md). The driver
+    threads it as ``lo=`` into every reduced solve so the session-level
+    copy is fitted once and shared with the bf16 screen path.
 
     ``batch``: None runs the classic single-query path (Y (n,), lambdas
     (K,), engine called with scalar λ). batch=B runs B queries against one
@@ -283,6 +299,8 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
         discard = screen_engine.screen(lam_dev, state, rule=cfg.rule)
         screen_passes = screen_engine.last_x_passes
         screen_bytes = getattr(screen_engine, "last_screen_bytes", 0.0)
+        screen_dtype_eff = getattr(screen_engine, "last_effective_dtype",
+                                   "float32")
         if hybrid:
             discard = discard | screen_engine.screen(lam_dev, state,
                                                      rule="strong")
@@ -299,6 +317,9 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
         kkt_rounds = 0
         solves = gram_solves = gap_checks = 0
         solver_x_passes = 0.0
+        solver_lo_iters = 0
+        solve_bytes = 0.0
+        solve_dtype_eff = "float32"
         bucket = 0
         res_iters, res_gap, q_conv = 0, 0.0, B
         conv_vec = np.ones((B,), dtype=bool)
@@ -317,10 +338,15 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                 Xr = _gather_cols(X, idx, valid, bucket * m)
                 if reshard is not None:
                     Xr = reshard(Xr)
+                lo = None
+                if lo_gather is not None:
+                    lo = lo_gather(idx, valid, bucket * m)
+                    if reshard is not None:
+                        lo = (reshard(lo[0]),) + tuple(lo[1:])
                 if batch is None:
                     beta0 = jnp.take(beta_prev[0], idx) * valid
                     res = solver_engine.solve(Xr, float(lam_vec[0]), beta0,
-                                              m=m)
+                                              m=m, lo=lo)
                     beta_full = (
                         jnp.zeros((p,), dtype=X.dtype)
                         .at[col_idx]
@@ -342,7 +368,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                     beta0 = jnp.take(beta_prev, idx, axis=1) * vq
                     res = solver_engine.solve_batched(
                         Xr, jnp.asarray(lam_vec, X.dtype), beta0,
-                        valid=vq, m=m)
+                        valid=vq, m=m, lo=lo)
                     beta_full = (
                         jnp.zeros((B, p), dtype=X.dtype)
                         .at[:, col_idx]
@@ -358,6 +384,12 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                 gap_checks += solver_engine.last_gap_checks
                 solver_x_passes += (solver_engine.last_x_passes
                                     * (bucket * m) / p)
+                solver_lo_iters += getattr(solver_engine,
+                                           "last_lo_iters", 0)
+                solve_bytes += getattr(solver_engine,
+                                       "last_solve_bytes", 0.0)
+                solve_dtype_eff = getattr(solver_engine,
+                                          "last_effective_dtype", "float32")
             if not need_kkt:
                 break
             if batch is None:
@@ -396,6 +428,10 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             queries_converged=q_conv,
             x_passes_per_query=screen_passes / B,
             screen_bytes=screen_bytes,
+            screen_dtype_effective=screen_dtype_eff,
+            solve_dtype_effective=solve_dtype_eff,
+            solver_lo_iters=solver_lo_iters,
+            solve_bytes=solve_bytes,
         ))
         if cfg.checkpoint_fn:
             if batch is None:

@@ -399,6 +399,73 @@ def dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b):
     return jnp.maximum(sup_pos, sup_neg)
 
 
+def _cap_sup(g, t_b, a_norms):
+    """h(g, t_b) = sup_{t ≤ t_b, within the ball} of the unit-ρ cap term of
+    :func:`_sup_over_dome`, as a function of ONE dot g = aᵀĝ:
+
+        h = ‖a‖                                    if g/‖a‖ ≤ t_b (unclipped)
+            g·t_b + √(‖a‖²−g²)₊·√(1−t_b²)₊          otherwise   (clipped)
+
+    Used by the interval bounds below; the exact combines keep using
+    :func:`_sup_over_dome` itself.
+    """
+    perp = jnp.sqrt(jnp.maximum(jnp.square(a_norms) - jnp.square(g), 0.0))
+    clipped = g * t_b + perp * jnp.sqrt(jnp.maximum(1.0 - t_b * t_b, 0.0))
+    return jnp.where(g <= t_b * (a_norms + 1e-30), a_norms, clipped)
+
+
+def dome_sup_bounds(s_lo, s_hi, g_lo, g_hi, a_norms, rho_lo, rho_hi,
+                    tb_lo, tb_hi):
+    """Interval bound on the dome sup s + ρ·h(g, t_b) given per-piece
+    intervals on its inputs: s ∈ [s_lo, s_hi], g ∈ [g_lo, g_hi],
+    ρ ∈ [rho_lo, rho_hi] (ρ ≥ 0), t_b ∈ [tb_lo, tb_hi]. Returns (lo, hi)
+    with the exact sup guaranteed inside.
+
+    h is piecewise in g — constant ‖a‖ on the unclipped regime, concave
+    decreasing on the cap regime up to g = ‖a‖, then linear g·t_b beyond —
+    so its max over [g_lo, g_hi] is attained at an endpoint, while its min
+    needs the regime breakpoint g = ‖a‖ as a third candidate (for t_b > 0
+    the clipped branch turns back upward there). h is non-decreasing in
+    t_b (the cap only grows), so hi evaluates at tb_hi and lo at tb_lo.
+    """
+    if jnp.ndim(s_lo) == 2:
+        rho_lo, rho_hi = _col(rho_lo), _col(rho_hi)
+        tb_lo, tb_hi = _col(tb_lo), _col(tb_hi)
+    g_brk = jnp.clip(a_norms, g_lo, g_hi)
+    h_hi = jnp.maximum(_cap_sup(g_lo, tb_hi, a_norms),
+                       _cap_sup(g_hi, tb_hi, a_norms))
+    h_lo = jnp.minimum(
+        jnp.minimum(_cap_sup(g_lo, tb_lo, a_norms),
+                    _cap_sup(g_hi, tb_lo, a_norms)),
+        _cap_sup(g_brk, tb_lo, a_norms))
+    # ρ ≥ 0 but h may be negative: take both corners of ρ·h
+    hi = s_hi + jnp.maximum(rho_lo * h_hi, rho_hi * h_hi)
+    lo = s_lo + jnp.minimum(rho_lo * h_lo, rho_hi * h_lo)
+    return lo, hi
+
+
+def dome_score_bounds(s_lo, s_hi, g_lo, g_hi, a_norms, rho_lo, rho_hi,
+                      tb_lo, tb_hi):
+    """Interval bound on :func:`dome_scores` = max(sup over ±x_j): the +
+    branch takes (s, g) straight, the − branch takes (−s, −g) with the
+    interval endpoints swapped and negated. Exact max lies in [lo, hi]."""
+    lo_p, hi_p = dome_sup_bounds(s_lo, s_hi, g_lo, g_hi, a_norms,
+                                 rho_lo, rho_hi, tb_lo, tb_hi)
+    lo_n, hi_n = dome_sup_bounds(-s_hi, -s_lo, -g_hi, -g_lo, a_norms,
+                                 rho_lo, rho_hi, tb_lo, tb_hi)
+    return jnp.maximum(lo_p, lo_n), jnp.maximum(hi_p, hi_n)
+
+
+def dome_t_b(c, rho, ghat, b):
+    """The clipped cap threshold t_b = clip((b − ĝᵀc)/ρ, −1, 1) of
+    :func:`_sup_over_dome`, exposed for the mixed-precision interval
+    screens (which need it as an explicit input interval)."""
+    if _is_batched(c):
+        return jnp.clip(
+            (b - jnp.sum(ghat * c, axis=-1)) / (rho + 1e-30), -1.0, 1.0)
+    return jnp.clip((b - jnp.dot(ghat, c)) / (rho + 1e-30), -1.0, 1.0)
+
+
 def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
     """DOME test (Xiang et al. [36, 35]) — basic rule only (no sequential
     version exists; paper §4.1).
@@ -427,8 +494,14 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
         scores_c = c @ X
         gdot = ghat @ X
         col_norms = jnp.linalg.norm(X, axis=0)
-        return dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) \
+        dec = dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) \
             < 1.0 - eps
+        # The sup at istar itself is identically 1: θ = y/λ_max attains both
+        # the sphere boundary (‖y/λ − y/λ_max‖ = ρ) and the half-space
+        # boundary (ĝᵀθ = b) with x_*ᵀθ = 1 — the test sits exactly ON the
+        # discard threshold, so any negative f32 rounding would evict the
+        # λ_max-attaining feature. Pin it kept (exact, not a tolerance).
+        return dec & (jnp.arange(X.shape[1])[None, :] != istar[:, None])
     corr = X.T @ y
     istar = jnp.argmax(jnp.abs(corr))
     g = jnp.sign(corr[istar]) * X[:, istar]
@@ -441,7 +514,9 @@ def dome_mask(X, y, lam_next, lam_max_val, eps: float = EPS_DEFAULT):
     scores_c = X.T @ c
     gdot = X.T @ ghat
     col_norms = jnp.linalg.norm(X, axis=0)
-    return dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) < 1.0 - eps
+    dec = dome_scores(scores_c, gdot, col_norms, c, rho, ghat, b) < 1.0 - eps
+    # sup at istar is identically 1 (see batched branch) — pin it kept.
+    return dec.at[istar].set(False)
 
 
 # ---------------------------------------------------------------------------

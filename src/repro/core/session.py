@@ -166,6 +166,13 @@ class SolveSpec:
     ``strategy=None`` resolves per problem: ``fista`` for the Lasso,
     ``group_fista`` when the session is fitted with ``groups=m``.
     ``bucket_min=None`` resolves to 32 features / 16 groups.
+
+    ``solve_dtype="bfloat16"`` streams the FISTA iteration matvecs through
+    the session's cached bf16 dictionary copy (shared with the bf16 screen
+    path — fitted once) while every duality-gap certificate and the final
+    polish stay f32, so ``beta_err_tol`` and the KKT backstop are
+    unchanged (docs/solvers.md#mixed-precision-solves). Strategies without
+    a certified low-precision phase warn once and solve in f32.
     """
 
     strategy: str | None = None
@@ -174,6 +181,7 @@ class SolveSpec:
     max_iter: int = 5000
     gap_check_cadence: int = 10   # duality-gap check every k iterations
     bucket_min: int | None = None
+    solve_dtype: str = "float32"  # dtype of the solver's X iteration stream
 
     def __post_init__(self):
         if self.strategy is not None and self.strategy not in SOLVERS:
@@ -188,6 +196,10 @@ class SolveSpec:
             raise ValueError("gap_check_cadence must be ≥ 1")
         if self.bucket_min is not None and self.bucket_min < 1:
             raise ValueError("bucket_min must be ≥ 1")
+        if self.solve_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"solve_dtype must be 'float32' or 'bfloat16', got "
+                f"{self.solve_dtype!r}")
 
     def resolved_strategy(self, m: int = 1) -> str:
         return self.strategy or ("group_fista" if m > 1 else "fista")
@@ -204,7 +216,7 @@ _SCREEN_KW = {
 _SOLVE_KW = {
     "solver": "strategy", "solver_backend": "backend", "solver_tol": "tol",
     "max_iter": "max_iter", "gap_check_cadence": "gap_check_cadence",
-    "bucket_min": "bucket_min",
+    "bucket_min": "bucket_min", "solve_dtype": "solve_dtype",
 }
 
 
@@ -319,6 +331,10 @@ class PathConfig:
     @property
     def bucket_min(self) -> int | None:
         return self.solve.bucket_min
+
+    @property
+    def solve_dtype(self) -> str:
+        return self.solve.solve_dtype
 
 
 def GroupPathConfig(**kw) -> PathConfig:
@@ -551,6 +567,26 @@ class LassoSession:
             return self._lasso_path(Y, lambdas, cfg, grid_kw)
         return self._lasso_path_batched(Y, lambdas, cfg, grid_kw)
 
+    def reset_solver_cache(self) -> None:
+        """Drop the warm-started per-bucket Lipschitz eigenpairs.
+
+        ``SolverEngine.lipschitz`` warm-starts power iteration from the
+        eigenvector cached for the bucket size and refreshes the cache on
+        every solve, so the FISTA step size L — and therefore the solver's
+        last-bit iterates — is a function of the session's whole call
+        history, not just of the current query. That is fine for serving
+        (L is an upper bound either way; solutions agree to solver
+        tolerance), but it breaks byte-exact replay: two ``path`` calls
+        with identical inputs can differ in the last float, and rules
+        whose geometry amplifies solver noise (GAP's ρ = √(2·gap)/λ turns
+        an ulp-level β change into ~√ulp of radius) can flip a
+        threshold-straddling mask bit between the calls. Call this before
+        each run that must be bitwise reproducible — e.g. both arms of a
+        precision A/B — so every arm starts from the same deterministic
+        cold cache (power iteration is seeded).
+        """
+        self._eig_cache.clear()
+
     # ------------------------------------------------------------- drivers
     def _solver_engine(self, y, cfg: PathConfig) -> SolverEngine:
         backend = cfg.solve.backend
@@ -566,7 +602,33 @@ class LassoSession:
             y, solver=cfg.solve.resolved_strategy(self.groups),
             backend=backend, tol=cfg.solve.tol, max_iter=cfg.solve.max_iter,
             gap_check_cadence=cfg.solve.gap_check_cadence,
-            eig_cache=self._eig_cache)
+            eig_cache=self._eig_cache, solve_dtype=cfg.solve.solve_dtype)
+
+    def _lo_gather(self, cfg: PathConfig):
+        """The driver's ``lo_gather`` hook: reduce the session's cached
+        bf16 dictionary copy (the SAME copy the bf16 screen path streams —
+        fitted once per geometry) onto a solve bucket, together with the
+        per-bucket dot-error and column-norm bounds the solver's certified
+        bf16 phase needs. None unless ``solve_dtype="bfloat16"`` on a
+        plain (non-group) Lasso session."""
+        if cfg.solve.solve_dtype != "bfloat16" or self.groups > 1:
+            return None
+        geom = self._geometry(cfg.screen.backend)
+        X_lo = geom.screen_copy(jnp.bfloat16)
+        col_err = geom.screen_err(jnp.bfloat16)
+        col_norms = geom.col_norms
+
+        def lo_gather(idx, valid, bucket):
+            from .path import _gather_cols
+            # valid is {0,1} so the bf16 cast is exact; multiplying in f32
+            # would silently promote the gathered bucket back to f32.
+            Xr_lo = _gather_cols(X_lo, idx, valid.astype(X_lo.dtype),
+                                 bucket)
+            err = jnp.max(jnp.take(col_err, idx, mode="clip") * valid)
+            cn = jnp.max(jnp.take(col_norms, idx, mode="clip") * valid)
+            return Xr_lo, err, cn
+
+        return lo_gather
 
     def _reshard(self):
         """The bucket placement hook for ``_path_driver``: on a mesh, pin
@@ -602,7 +664,8 @@ class LassoSession:
         return _path_driver(
             X, y, lambdas, cfg, m=1, screen_engine=eng,
             solver_engine=solver, need_kkt=self._need_kkt(cfg),
-            kkt_fn=kkt_fn, reshard=self._reshard())
+            kkt_fn=kkt_fn, reshard=self._reshard(),
+            lo_gather=self._lo_gather(cfg))
 
     def _lasso_path_batched(self, Y, lambdas, cfg, grid_kw) -> PathResult:
         B = Y.shape[0]
@@ -639,7 +702,8 @@ class LassoSession:
         return _path_driver(
             X, Y, lambdas, cfg, m=1, screen_engine=eng,
             solver_engine=solver, need_kkt=self._need_kkt(cfg),
-            kkt_fn=kkt_fn, batch=B, reshard=self._reshard())
+            kkt_fn=kkt_fn, batch=B, reshard=self._reshard(),
+            lo_gather=self._lo_gather(cfg))
 
     def _group_path(self, y, lambdas, cfg, grid_kw) -> PathResult:
         m = self.groups
@@ -730,4 +794,8 @@ def _merge_step_stats(steps: list[PathStepStats]) -> PathStepStats:
         queries_converged=sum(s.queries_converged for s in steps),
         x_passes_per_query=x_passes / B,
         screen_bytes=sum(s.screen_bytes for s in steps),
+        screen_dtype_effective=steps[0].screen_dtype_effective,
+        solve_dtype_effective=steps[0].solve_dtype_effective,
+        solver_lo_iters=sum(s.solver_lo_iters for s in steps),
+        solve_bytes=sum(s.solve_bytes for s in steps),
     )

@@ -41,6 +41,7 @@ to solver tolerance on lasso and group-lasso paths.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -147,6 +148,77 @@ def _fista_solve(backend, X, y, lam, beta0, lipschitz, tol,
     state = (beta0, beta0, t0, jnp.asarray(0), gap_of(beta0),
              jnp.asarray(1))
     beta, _, _, k, gap, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, k, gap <= tol * scale, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_iter", "cadence"))
+def _fista_solve_lo(backend, X, X_lo, y, lam, beta0, lipschitz, tol,
+                    max_iter: int, cadence: int, err_max,
+                    cn_max) -> SolveResult:
+    """Certified low-precision FISTA phase: the same fused iteration as
+    :func:`_fista_solve` but the 2·cadence iteration matvecs between gap
+    checks stream the bf16 copy ``X_lo`` of the bucket. β/z and every
+    accumulation stay f32 (``fista_step`` out-dtypes follow z; the kernels
+    cast X tiles up before the dot), so the only iteration error is the
+    bf16 storage rounding of X — bounded per column by
+    :func:`ops.bf16_column_err`.
+
+    The duality-gap CERTIFICATE streams the f32 ``X`` (2 passes per check,
+    cadence-amortised like every gap check), so a stop at ``gap ≤
+    tol·scale`` is TRUE convergence — exactness never rests on bf16 data.
+    The phase hands over to the f32 polish early only when the exact gap
+    sits under ``BF16_SOLVE_SLACK ×`` the certified progress floor
+    (:func:`ops.bf16_gap_budget` — below it a bf16 gradient cannot
+    certifiably improve the gap) AND the measured gap has stopped decaying
+    by ``BF16_SOLVE_PROGRESS`` per check: the worst-case budget alone must
+    not evict a stream that is still measurably converging, and a stall
+    alone (FISTA momentum ripples) must not either.
+    """
+    dtype = beta0.dtype               # β/z stay f32 over the bf16 stream
+    step_op = _fista_step_op(backend)
+    L = jnp.maximum(lipschitz, 1e-12)
+    step = 1.0 / L
+    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
+
+    def gap_budget(beta):
+        r = y - X @ beta              # exact certificate: f32 stream
+        gap = gap_from_residual(r, X.T @ r, beta, lam, y)
+        budget = ops.bf16_gap_budget(jnp.linalg.norm(r),
+                                     jnp.sum(jnp.abs(beta)),
+                                     err_max, cn_max)
+        return gap, budget
+
+    def one_step(carry, _):
+        beta, z, t = carry
+        rz = X_lo @ z - y
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        mom = (t - 1.0) / t_new
+        beta_new, z_new = step_op(X_lo, rz, z, beta, step, lam, mom)
+        return (beta_new.astype(dtype), z_new.astype(dtype), t_new), None
+
+    def stop(gap, budget, prev_gap):
+        stalled = gap > ops.BF16_SOLVE_PROGRESS * prev_gap
+        floored = gap <= ops.BF16_SOLVE_SLACK * budget
+        return jnp.logical_or(gap <= tol * scale,
+                              jnp.logical_and(stalled, floored))
+
+    def cond(state):
+        _, _, _, k, _, _, done, _ = state
+        return jnp.logical_and(k < max_iter, jnp.logical_not(done))
+
+    def body(state):
+        beta, z, t, k, prev_gap, _, _, checks = state
+        (beta, z, t), _ = jax.lax.scan(one_step, (beta, z, t), None,
+                                       length=cadence)
+        gap, budget = gap_budget(beta)
+        done = stop(gap, budget, prev_gap)
+        return beta, z, t, k + cadence, gap, budget, done, checks + 1
+
+    t0 = jnp.asarray(1.0, dtype=dtype)
+    gap0, budget0 = gap_budget(beta0)
+    state = (beta0, beta0, t0, jnp.asarray(0), gap0, budget0,
+             stop(gap0, budget0, jnp.asarray(jnp.inf)), jnp.asarray(1))
+    beta, _, _, k, gap, _, _, checks = jax.lax.while_loop(cond, body, state)
     return SolveResult(beta, gap, k, gap <= tol * scale, checks)
 
 
@@ -317,6 +389,74 @@ def _fista_solve_batched(backend, X, Y, lam, beta0, valid, lipschitz, tol,
     return SolveResult(beta, gap, iters, conv, checks)
 
 
+@functools.partial(jax.jit, static_argnames=("backend", "max_iter", "cadence"))
+def _fista_solve_lo_batched(backend, X, X_lo, Y, lam, beta0, valid,
+                            lipschitz, tol, max_iter: int, cadence: int,
+                            err_max, cn_max) -> SolveResult:
+    """Batched twin of :func:`_fista_solve_lo`: B queries share every pass
+    over the bf16 bucket copy (iterations) and the f32 bucket (exact gap
+    certificates), each with its OWN certified progress floor (per-query
+    ‖r‖, ‖β‖₁) and stall test — a query freezes as soon as it truly
+    converges or its bf16 stream provably can't improve it, exactly like
+    batched f32 convergence freezing."""
+    dtype = beta0.dtype
+    step_op = _fista_step_op(backend)
+    L = jnp.maximum(lipschitz, 1e-12)
+    step = 1.0 / L
+    scale = 0.5 * jnp.sum(jnp.square(Y), axis=-1) + 1e-30     # (B,)
+
+    def gap_budget(beta):
+        r = Y - beta @ X.T            # exact certificate: f32 stream
+        gap = _gap_from_residual_batched(r, r @ X, beta, lam, Y)
+        budget = ops.bf16_gap_budget(jnp.linalg.norm(r, axis=-1),
+                                     jnp.sum(jnp.abs(beta), axis=-1),
+                                     err_max, cn_max)
+        return gap, budget
+
+    def stop(gap, budget, prev_gap):
+        stalled = gap > ops.BF16_SOLVE_PROGRESS * prev_gap
+        floored = gap <= ops.BF16_SOLVE_SLACK * budget
+        return jnp.logical_or(gap <= tol * scale,
+                              jnp.logical_and(stalled, floored))
+
+    def body(state):
+        beta, z, t, k, prev_gap, conv, iters, checks = state
+        frozen = conv[:, None]
+
+        def one_step(carry, _):
+            beta, z, t = carry
+            rz = z @ X_lo.T - Y
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            mom = (t - 1.0) / t_new
+            beta_new, z_new = step_op(X_lo, rz, z, beta, step, lam, mom)
+            beta_new = (beta_new * valid).astype(dtype)
+            z_new = (z_new * valid).astype(dtype)
+            beta_new = jnp.where(frozen, beta, beta_new)
+            z_new = jnp.where(frozen, z, z_new)
+            return (beta_new, z_new, t_new), None
+
+        (beta, z, t), _ = jax.lax.scan(one_step, (beta, z, t), None,
+                                       length=cadence)
+        iters = iters + jnp.where(conv, 0, cadence)
+        gap, budget = gap_budget(beta)
+        conv = jnp.logical_or(conv, stop(gap, budget, prev_gap))
+        return beta, z, t, k + cadence, gap, conv, iters, checks + 1
+
+    def cond(state):
+        _, _, _, k, _, conv, _, _ = state
+        return jnp.logical_and(k < max_iter, jnp.any(~conv))
+
+    t0 = jnp.asarray(1.0, dtype=dtype)
+    gap0, budget0 = gap_budget(beta0)
+    conv0 = stop(gap0, budget0, jnp.full_like(gap0, jnp.inf))
+    iters0 = jnp.zeros(Y.shape[:1], jnp.int32)
+    state = (beta0, beta0, t0, jnp.asarray(0), gap0, conv0, iters0,
+             jnp.asarray(1))
+    beta, _, _, _, gap, conv, iters, checks = jax.lax.while_loop(
+        cond, body, state)
+    return SolveResult(beta, gap, iters, gap <= tol * scale, checks)
+
+
 @functools.partial(jax.jit, static_argnames=("max_epochs", "cadence"))
 def _cd_solve_batched(X, Y, lam, beta0, valid, tol, max_epochs: int,
                       cadence: int) -> SolveResult:
@@ -454,14 +594,56 @@ def _group_fista_solve(X, y, lam, m: int, beta0, lipschitz, tol,
 
 # ---------------------------------------------------------------------------
 # Strategies + registry. A strategy is `(engine, Xr, lam, beta0, m) ->
-# (SolveResult, info)` with info = {"gram": bool} telemetry.
+# (SolveResult, info)` with info = {"gram": bool} telemetry (+ "lo_iters" /
+# "lo_checks" / "hi_iters" from the mixed-precision fista two-phase).
 # ---------------------------------------------------------------------------
 
+_BF16_SOLVE_WARNED: set[str] = set()
+
+
+def _note_solve_f32_fallback(strategy: str) -> None:
+    """One-time warning per strategy: solve_dtype='bfloat16' was requested
+    but this strategy has no certified low-precision phase (only fista's
+    gap-certificate argument is implemented), so solves run f32."""
+    if strategy in _BF16_SOLVE_WARNED:
+        return
+    _BF16_SOLVE_WARNED.add(strategy)
+    warnings.warn(
+        f"solve_dtype='bfloat16' has no certified low-precision phase for "
+        f"solver strategy {strategy!r}; solving in float32 instead (results "
+        f"unchanged, no byte saving — see docs/solvers.md#mixed-precision-"
+        f"solves)", RuntimeWarning, stacklevel=4)
+
+
 def _fista_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
-    res = _fista_solve(eng.backend, Xr, eng.y, lam, beta0,
-                       eng.lipschitz(Xr), eng.tol, eng.max_iter,
-                       eng.gap_check_cadence)
-    return res, {"gram": False}
+    L = eng.lipschitz(Xr)                 # shared by both phases
+    lo = eng._take_lo()
+    lo_it = lo_ck = 0
+    if lo is not None:
+        # Phase 1: certified bf16 iterations while the gap certificate is
+        # provably slack (see _fista_solve_lo). β stays f32 throughout.
+        X_lo, err_max, cn_max = lo
+        res_lo = _fista_solve_lo(eng.backend, Xr, X_lo, eng.y, lam,
+                                 beta0.astype(jnp.float32), L, eng.tol,
+                                 eng.max_iter, eng.gap_check_cadence,
+                                 err_max, cn_max)
+        lo_it, lo_ck = int(res_lo.iters), int(res_lo.gap_checks)
+        if bool(res_lo.converged):
+            # The lo-phase gap certificate streams f32 X, so convergence
+            # declared there IS convergence at the original tol — no
+            # polish pass needed.
+            return (SolveResult(res_lo.beta.astype(Xr.dtype), res_lo.gap,
+                                res_lo.iters, res_lo.converged,
+                                res_lo.gap_checks),
+                    {"gram": False, "lo_iters": lo_it, "lo_checks": lo_ck})
+        beta0 = res_lo.beta.astype(Xr.dtype)
+    # Phase 2 (or the whole solve in f32): polish at the original tol.
+    res = _fista_solve(eng.backend, Xr, eng.y, lam, beta0, L, eng.tol,
+                       eng.max_iter, eng.gap_check_cadence)
+    if lo is not None:
+        res = SolveResult(res.beta, res.gap, res.iters + lo_it,
+                          res.converged, res.gap_checks + lo_ck)
+    return res, {"gram": False, "lo_iters": lo_it, "lo_checks": lo_ck}
 
 
 def _cd_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
@@ -484,10 +666,36 @@ def _group_fista_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
 
 def _fista_strategy_batched(eng: "SolverEngine", Xr, lam, beta0, valid,
                             m: int):
-    res = _fista_solve_batched(eng.backend, Xr, eng.y, lam, beta0, valid,
-                               eng.lipschitz(Xr), eng.tol, eng.max_iter,
-                               eng.gap_check_cadence)
-    return res, {"gram": False}
+    L = eng.lipschitz(Xr)
+    lo = eng._take_lo()
+    lo_it = lo_ck = 0
+    res_lo = None
+    if lo is not None:
+        X_lo, err_max, cn_max = lo
+        res_lo = _fista_solve_lo_batched(eng.backend, Xr, X_lo, eng.y, lam,
+                                         beta0.astype(jnp.float32), valid,
+                                         L, eng.tol, eng.max_iter,
+                                         eng.gap_check_cadence, err_max,
+                                         cn_max)
+        lo_it = int(jnp.max(res_lo.iters))
+        lo_ck = int(res_lo.gap_checks)
+        if bool(jnp.all(res_lo.converged)):
+            # every query converged against the f32 gap certificate inside
+            # the lo phase — the batch needs no polish pass
+            return (SolveResult(res_lo.beta.astype(Xr.dtype), res_lo.gap,
+                                res_lo.iters, res_lo.converged,
+                                res_lo.gap_checks),
+                    {"gram": False, "lo_iters": lo_it, "lo_checks": lo_ck,
+                     "hi_iters": 0})
+        beta0 = res_lo.beta.astype(Xr.dtype)
+    res = _fista_solve_batched(eng.backend, Xr, eng.y, lam, beta0, valid, L,
+                               eng.tol, eng.max_iter, eng.gap_check_cadence)
+    hi_it = int(jnp.max(res.iters))
+    if res_lo is not None:
+        res = SolveResult(res.beta, res.gap, res.iters + res_lo.iters,
+                          res.converged, res.gap_checks + lo_ck)
+    return res, {"gram": False, "lo_iters": lo_it, "lo_checks": lo_ck,
+                 "hi_iters": hi_it}
 
 
 def _cd_strategy_batched(eng: "SolverEngine", Xr, lam, beta0, valid, m: int):
@@ -559,17 +767,22 @@ class SolverEngine:
                  backend: str | ops.ScreenBackend | None = None,
                  tol: float = 1e-8, max_iter: int = 5000,
                  gap_check_cadence: int = 10,
+                 solve_dtype: str = "float32",
                  power_iters: int = 50, warm_power_iters: int = 16,
                  seed: int = 0, eig_cache: dict | None = None):
         if solver not in SOLVERS:
             raise ValueError(f"unknown solver {solver!r}; "
                              f"available: {available_solvers()}")
+        if solve_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"unknown solve_dtype {solve_dtype!r}; "
+                             "expected 'float32' or 'bfloat16'")
         self.y = jnp.asarray(y)
         self.solver = solver
         self.backend = resolve_solver_backend(backend)
         self.tol = tol
         self.max_iter = max_iter
         self.gap_check_cadence = max(1, int(gap_check_cadence))
+        self.solve_dtype = solve_dtype
         self.power_iters = power_iters
         self.warm_power_iters = warm_power_iters
         self.seed = seed
@@ -585,6 +798,12 @@ class SolverEngine:
         self.last_gap_checks = 0
         self.last_used_gram = False
         self.last_x_passes = 0.0   # HBM passes over the reduced buffer
+        # Mixed-precision solve telemetry (solve_dtype="bfloat16"):
+        self.last_lo_iters = 0             # bf16-phase iterations last solve
+        self.last_effective_dtype = "float32"  # stream dtype actually used
+        self.last_solve_bytes = 0.0        # HBM bytes the last solve streamed
+        self.total_solve_bytes = 0.0
+        self._lo = None                    # staged (X_lo, err_max, cn_max)
 
     @property
     def backend_name(self) -> str:
@@ -609,13 +828,54 @@ class SolverEngine:
         self._eig_cache[bucket] = v
         return 1.05 * eig
 
-    def solve(self, Xr, lam, beta0=None, m: int = 1) -> SolveResult:
+    # -- mixed-precision lo-phase staging -------------------------------
+    # The strategy signature is fixed at (eng, Xr, lam, beta0, m), so the
+    # bf16 buffers for a solve are STAGED on the engine by solve()/
+    # solve_batched() and consumed exactly once by the fista strategies
+    # via _take_lo(). Strategies without a certified lo phase never see
+    # them (_stage_lo only arms fista and warns once otherwise).
+
+    def _stage_lo(self, Xr, lo) -> None:
+        """Arm the bf16 phase for the next strategy dispatch. ``lo`` is the
+        caller-provided ``(X_lo, col_err, col_norms)`` triple (the path
+        driver gathers it from the geometry's cached bf16 copy — one cache
+        for screens and solves); None builds it from Xr on the fly."""
+        self._lo = None
+        self.last_effective_dtype = "float32"
+        if self.solve_dtype != "bfloat16":
+            return
+        if self.solver != "fista":
+            _note_solve_f32_fallback(self.solver)
+            return
+        if lo is None:
+            X_lo = jnp.asarray(Xr, jnp.bfloat16)
+            col_err = ops.bf16_column_err(Xr, X_lo)
+            col_norms = jnp.linalg.norm(jnp.asarray(Xr, jnp.float32), axis=0)
+            lo = (X_lo, col_err, col_norms)
+        X_lo, col_err, col_norms = lo
+        # scalar worst-case bounds over the bucket (padding columns are
+        # zero in both copies, so their err/norm of 0 can't raise the max)
+        self._lo = (jnp.asarray(X_lo), jnp.max(jnp.asarray(col_err)),
+                    jnp.max(jnp.asarray(col_norms)))
+        self.last_effective_dtype = "bfloat16"
+
+    def _take_lo(self):
+        lo, self._lo = self._lo, None
+        return lo
+
+    def solve(self, Xr, lam, beta0=None, m: int = 1, lo=None) -> SolveResult:
         """Solve the reduced problem on the bucket buffer Xr (zero-padded
         columns are fixed points). Returns the SolveResult; telemetry in
-        ``last_gap_checks`` / ``last_used_gram``."""
+        ``last_gap_checks`` / ``last_used_gram`` / ``last_solve_bytes``.
+
+        ``lo``: optional ``(X_lo, col_err, col_norms)`` bf16 bucket triple
+        for ``solve_dtype="bfloat16"`` (gathered from the geometry cache by
+        the path driver); ignored for f32 engines, built from Xr when the
+        engine is bf16 and the caller didn't pass one."""
         Xr = jnp.asarray(Xr)
         if beta0 is None:
             beta0 = jnp.zeros((Xr.shape[1],), dtype=Xr.dtype)
+        self._stage_lo(Xr, lo)
         res, info = SOLVERS[self.solver](self, Xr, lam, beta0, m)
         self.n_solves += 1
         self.last_used_gram = bool(info.get("gram", False))
@@ -635,10 +895,21 @@ class SolverEngine:
             self.last_x_passes = float(it) + 2.0 * ck
         else:
             self.last_x_passes = 2.0 * it + 2.0 * ck
+        # Byte accounting: the bf16-phase ITERATION passes (2 per iter)
+        # moved 2-byte elements; every gap check — bf16 phase included —
+        # and every f32-phase pass moved 4-byte elements. it/ck above
+        # already include the lo phase (the strategies sum both phases).
+        lo_it = int(info.get("lo_iters", 0))
+        lo_passes = 2.0 * lo_it
+        self.last_lo_iters = lo_it
+        self.last_solve_bytes = (
+            (self.last_x_passes - lo_passes) * n * b * 4.0
+            + lo_passes * n * b * 2.0)
+        self.total_solve_bytes += self.last_solve_bytes
         return res
 
     def solve_batched(self, Xr, lam, beta0=None, valid=None,
-                      m: int = 1) -> SolveResult:
+                      m: int = 1, lo=None) -> SolveResult:
         """Solve B reduced problems that share the bucket buffer Xr.
 
         The engine must have been built with y of shape (B, n); ``lam`` is
@@ -672,15 +943,28 @@ class SolverEngine:
                 return float(it) + 2.0 * ck
             return 2.0 * it + 2.0 * ck
 
+        self._stage_lo(Xr, lo)
         strategy = BATCHED_SOLVERS.get(self.solver)
         if strategy is not None:
             res, info = strategy(self, Xr, lam, beta0, valid, m)
             self.last_gap_checks = int(res.gap_checks)
             # Shared-pass accounting: one buffer pass serves the whole
-            # batch, and the loop runs until the LAST query converges.
-            self.last_x_passes = _passes(int(jnp.max(res.iters)),
-                                         self.last_gap_checks,
-                                         bool(info.get("gram", False)))
+            # batch, and each phase's loop runs until ITS last query
+            # converges — the bf16 phase contributes 2·max(lo_iters)
+            # iteration passes at 2 bytes/elt plus 2·lo_checks f32
+            # certificate passes, the f32 polish max(hi_iters) at 4.
+            lo_it = int(info.get("lo_iters", 0))
+            lo_ck = int(info.get("lo_checks", 0))
+            hi_it = int(info.get("hi_iters", int(jnp.max(res.iters))))
+            hi_ck = self.last_gap_checks - lo_ck
+            lo_passes = 2.0 * lo_it
+            self.last_x_passes = (
+                _passes(hi_it, hi_ck, bool(info.get("gram", False)))
+                + lo_passes + 2.0 * lo_ck)
+            self.last_lo_iters = lo_it
+            self.last_solve_bytes = (
+                (self.last_x_passes - lo_passes) * n * b * 4.0
+                + lo_passes * n * b * 2.0)
         else:
             # per-query fallback: loops the single-query strategy (custom
             # registered solvers without a batched twin stay usable)
@@ -724,10 +1008,13 @@ class SolverEngine:
             info = {"gram": gram}
             self.last_gap_checks = checks
             self.last_x_passes = passes
+            self.last_lo_iters = 0
+            self.last_solve_bytes = passes * n * b * 4.0
         self.n_solves += 1
         self.last_used_gram = bool(info.get("gram", False))
         self.gram_solves += int(self.last_used_gram)
         self.total_gap_checks += self.last_gap_checks
+        self.total_solve_bytes += self.last_solve_bytes
         return res
 
 

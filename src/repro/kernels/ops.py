@@ -157,6 +157,49 @@ def bf16_score_margin(col_err, centre_norm):
     return BF16_MARGIN_SAFETY * cn * jnp.asarray(col_err)
 
 
+# Solver-side mixed precision (docs/solvers.md#mixed-precision-solves).
+# The FISTA iteration matvecs (forward fit + fused gradient step — the
+# 2·cadence HBM passes between gap checks) may stream a bf16 copy of the
+# reduced bucket; the duality-gap CERTIFICATE itself always streams f32 X,
+# so convergence declared in the low-precision phase is true convergence —
+# exactness never rests on the bf16 data. `bf16_gap_budget` bounds the gap
+# level below which a bf16 gradient can no longer make certified progress;
+# the low-precision phase hands over to the f32 polish when the (exact) gap
+# both sits under BF16_SOLVE_SLACK × budget AND has stopped decaying by
+# BF16_SOLVE_PROGRESS per check (iterating bf16 past its own noise floor is
+# pure waste — but a loose worst-case budget alone must not evict a stream
+# that is still measurably converging).
+
+BF16_SOLVE_SLACK = 2.0
+BF16_SOLVE_PROGRESS = 0.7      # min per-check gap decay to keep bf16 going:
+#                                a cadence block that fails to cut the gap
+#                                by 30% while inside the certified band is
+#                                noise-limited — hand over to f32
+
+
+def bf16_gap_budget(resid_norm, beta_l1, err_max, col_norm_max):
+    """Certified first-order bound on the duality-gap excess a bf16
+    gradient stream can leave uncorrected, evaluated at the current iterate
+    (per-column dot-error bounds err_j ≤ err_max from
+    :func:`bf16_column_err`, ‖x_j‖ ≤ col_norm_max).
+
+    Hölder gives the residual error  e_r = ‖r − r̃‖ ≤ err_max·‖β‖₁  and the
+    gradient error  e_d = ‖X̂ᵀr̃ − Xᵀr‖∞ ≤ err_max·‖r‖ + col_norm_max·e_r.
+    A fixed point of the perturbed proximal-gradient iteration satisfies
+    the true KKT system shifted by at most e_d per coordinate — i.e. its
+    dual infeasibility contributes at most e_d·‖β‖₁ to the gap — and the
+    residual perturbation moves the primal term by at most e_r·‖r‖::
+
+        budget = e_d·‖β‖₁ + e_r·‖r‖
+
+    Below ~this level the bf16 stream cannot certifiably decrease the
+    (exactly measured) gap further. Batch-polymorphic: scalars or (B,)
+    vectors throughout."""
+    e_r = err_max * beta_l1
+    e_d = err_max * resid_norm + col_norm_max * e_r
+    return e_d * beta_l1 + e_r * resid_norm
+
+
 def edpp_screen(X, centre, rho, eps: float = 1e-6, *, col_norms=None,
                 interpret: bool | None = None):
     """Full fused screening decision.
@@ -193,10 +236,13 @@ __all__ = [
     "BACKENDS",
     "BF16_MARGIN_SAFETY",
     "BF16_ROUND",
+    "BF16_SOLVE_PROGRESS",
+    "BF16_SOLVE_SLACK",
     "GRAM_BUCKET_MAX",
     "ScreenBackend",
     "F32_ACC_ROUND",
     "bf16_column_err",
+    "bf16_gap_budget",
     "bf16_score_margin",
     "cd_gram_sweep",
     "edpp_screen",

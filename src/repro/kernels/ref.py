@@ -24,6 +24,12 @@ where ``e_j`` is the measured quantisation error bound of
 (docs/kernels.md) re-tests threshold-adjacent columns in f32 so the
 final masks stay bit-identical; these oracles make no such promise on
 their own — they are exact only for the dtype they are given.
+
+The solver steps accept bf16 X the same way: the SolverEngine's
+mixed-precision mode iterates through a bf16 copy while its duality-gap
+certificates recompute with f32 X, so solver exactness also never rests
+on these oracles' low-precision outputs
+(docs/solvers.md#mixed-precision-solves).
 """
 
 from __future__ import annotations

@@ -36,6 +36,12 @@ Accumulation follows ref._acc_dtype: f32 for f32/bf16 inputs, f64 is never
 downcast (x64 benchmark runs keep solver-grade precision in interpret
 mode). Semantics are DEFINED by ref.fista_step_ref / ref.cd_gram_sweep_ref;
 tests/test_kernels.py sweeps shapes/dtypes against them.
+
+bf16 X is a first-class input: under ``SolveSpec(solve_dtype="bfloat16")``
+the SolverEngine streams its iteration matvecs (``fista_step`` + the
+forward fit) through a bf16 copy of the reduced bucket while β/z and the
+accumulators stay f32 — the duality-gap certificates stream the f32 data,
+so convergence is certified exactly (docs/solvers.md#mixed-precision-solves).
 """
 
 from __future__ import annotations

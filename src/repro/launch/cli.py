@@ -53,9 +53,17 @@ def add_engine_args(ap: argparse.ArgumentParser, *, rule: str = "edpp",
     ap.add_argument("--screen-dtype", choices=("float32", "bfloat16"),
                     default="float32",
                     help="dtype of the X copy the screens stream: bfloat16 "
-                         "halves screen HBM bytes; masks stay bit-identical "
-                         "via the margin-aware f32 fallback (solves are "
-                         "untouched)")
+                         "halves screen HBM bytes for every rule — spheres, "
+                         "gap, dome, and the *_cut composites (per-piece "
+                         "margins); masks stay bit-identical via the "
+                         "margin-aware f32 fallback (solves are untouched)")
+    ap.add_argument("--solve-dtype", choices=("float32", "bfloat16"),
+                    default="float32",
+                    help="dtype of the FISTA iteration matvec stream: "
+                         "bfloat16 near-halves solver HBM bytes while every "
+                         "duality-gap certificate and the final polish stay "
+                         "f32-exact (docs/solvers.md#mixed-precision-solves; "
+                         "non-fista solvers fall back to float32)")
 
 
 def add_serve_args(ap: argparse.ArgumentParser, *, b_max: int = 8,
@@ -147,7 +155,8 @@ def path_config(args, *, solver_tol: float | None = None, **extra):
     merged as legacy flat keywords (e.g. ``checkpoint_fn=...``).
     """
     from repro.core import PathConfig, ScreenSpec, SolveSpec
-    solve_kw = {"strategy": args.solver, "backend": args.solver_backend}
+    solve_kw = {"strategy": args.solver, "backend": args.solver_backend,
+                "solve_dtype": getattr(args, "solve_dtype", "float32")}
     if solver_tol is not None:
         solve_kw["tol"] = solver_tol
     return PathConfig(

@@ -208,6 +208,7 @@ for tile in ("jnp", "interpret"):
     kw = dict(backend=tile, solver_backend=tile, solver_tol=1e-8)
     r0 = LassoSession.fit(X, config=PathConfig(**kw)).path(Y, grids)
     cfg16 = PathConfig(screen_dtype="bfloat16", **kw)
+    cfg_gap16 = PathConfig(rule="gap", screen_dtype="bfloat16", **kw)
     cfg_cut = PathConfig(rule="gap_cut", **kw)
     r_gap = LassoSession.fit(X, config=PathConfig(rule="gap", **kw)).path(
         Y, grids)
@@ -219,6 +220,12 @@ for tile in ("jnp", "interpret"):
         r16 = LassoSession.fit(X, mesh=mesh, config=cfg16).path(Y, grids)
         assert np.array_equal(np.asarray(r16.masks), np.asarray(r0.masks)), \
             (tile, q, f, "bf16 mesh masks diverged from f32 unsharded")
+        # bf16 GAP adds the exact-sup candidate gather before the margin
+        # combine — both narrow gathers must shard-map cleanly too
+        rg16 = LassoSession.fit(X, mesh=mesh, config=cfg_gap16).path(Y, grids)
+        assert np.array_equal(np.asarray(rg16.masks),
+                              np.asarray(r_gap.masks)), \
+            (tile, q, f, "bf16 gap mesh masks diverged from f32 unsharded")
         # gap_cut on the mesh: bit-identical to unsharded gap_cut AND a
         # discard superset of plain gap (ball ∩ half-space ⊆ ball)
         r_cut = LassoSession.fit(X, mesh=mesh, config=cfg_cut).path(Y, grids)
@@ -240,3 +247,62 @@ def test_sharded_bf16_and_cut_mask_parity(subproc):
     out = subproc(BF16_CUT_PARITY_CODE, devices=8)
     assert "BF16_CUT_PARITY_jnp_OK" in out
     assert "BF16_CUT_PARITY_interpret_OK" in out
+
+
+SOLVE_DTYPE_PARITY_CODE = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.session import LassoSession, PathConfig
+
+def beta_err_tol(y, solver_tol, kappa=25.0):
+    return kappa * float(np.sqrt(solver_tol * 0.5 * np.dot(y, y)))
+
+rng = np.random.default_rng(17)
+n, p, B = 48, 256, 4
+X = rng.standard_normal((n, p)).astype(np.float32)
+Y = np.stack([
+    (X[:, rng.choice(p, 8, replace=False)] @ rng.uniform(-1, 1, 8)
+     + 0.1 * rng.standard_normal(n)).astype(np.float32)
+    for _ in range(B)])
+tol = 1e-6
+grids = np.stack([
+    np.linspace(0.95, 0.1, 8) * float(np.max(np.abs(X.T @ Y[b])))
+    for b in range(B)])
+
+kw = dict(backend="jnp", solver_backend="jnp", solver_tol=tol)
+r0 = LassoSession.fit(X, config=PathConfig(**kw)).path(Y, grids)
+r0_single = LassoSession.fit(X, config=PathConfig(**kw)).path(Y[0], grids[0])
+cfg16 = PathConfig(solve_dtype="bfloat16", **kw)
+for q, f in [(1, 2), (2, 2), (1, 8)]:
+    mesh = jax.make_mesh((q, f), ("query", "feature"))
+    sess = LassoSession.fit(X, mesh=mesh, config=cfg16)
+    r = sess.path(Y, grids)
+    # the gap certificates stream f32 X, so the bf16 iteration stream must
+    # land inside the same tol ball: post-KKT masks bit-identical to the
+    # f32 UNSHARDED session, β within the solver-tol bound
+    assert np.array_equal(np.asarray(r.masks), np.asarray(r0.masks)), \
+        (q, f, "bf16-solve mesh masks diverged from f32 unsharded")
+    berr = float(np.max(np.abs(np.asarray(r.betas) - np.asarray(r0.betas))))
+    assert berr <= beta_err_tol(Y[0], tol), (q, f, berr)
+    r1 = sess.path(Y[0], grids[0])
+    assert np.array_equal(np.asarray(r1.masks),
+                          np.asarray(r0_single.masks)), \
+        (q, f, "bf16-solve single masks diverged")
+    # telemetry: solves ran the bf16 stream, screens stayed f32
+    st = [s for s in r.stats if s.solver_iters > 0]
+    assert st and all(s.solve_dtype_effective == "bfloat16" for s in st), \
+        (q, f, [s.solve_dtype_effective for s in r.stats])
+    assert sum(s.solver_lo_iters for s in st) > 0, (q, f, "no lo iters")
+    assert all(s.screen_dtype_effective == "float32" for s in r.stats)
+print("SOLVE_DTYPE_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_solve_dtype_bf16_parity(subproc):
+    """ISSUE 9 acceptance on the mesh: solve_dtype="bfloat16" sessions on
+    {1×2, 2×2, 1×8} meshes keep post-KKT masks bit-identical to the
+    unsharded f32 session and β within the solver-tol bound — the bf16
+    iteration stream is re-gathered per shard while every gap certificate
+    streams the f32 shards."""
+    out = subproc(SOLVE_DTYPE_PARITY_CODE, devices=8)
+    assert "SOLVE_DTYPE_PARITY_OK" in out

@@ -215,7 +215,12 @@ def test_prox_step_kernel_batched(batch):
 # masks BIT-IDENTICAL to the f32 engine (docs/kernels.md)
 # ---------------------------------------------------------------------------
 
-BF16_RULES = ["edpp", "dpp", "imp1", "imp2", "seq_safe", "safe", "strong"]
+BF16_RULES = ["edpp", "dpp", "imp1", "imp2", "seq_safe", "safe", "strong",
+              # per-piece margin screens (ISSUE 9): two stacked dots, each
+              # banded by its own linear-regime margin
+              "gap", "dome",
+              "dpp_cut", "imp1_cut", "imp2_cut", "edpp_cut", "seq_safe_cut",
+              "gap_cut"]
 
 
 def test_bf16_margin_bounds_quantisation():
@@ -296,6 +301,137 @@ def test_bf16_adversarial_band_fallback(backend):
     assert e16.last_x_passes == 2      # wide bf16 pass + narrow f32 re-test
     # the ladder straddles the threshold: the mask splits inside it
     planted = m32[:n_plant]
+    assert planted.any() and not planted.all()
+
+
+def _dome_pieces(X, y, lam):
+    """The engine's dome geometry recomputed from scratch: (c, rho, ghat,
+    b_cut, istar, lam_max) — the pieces dome_scores consumes."""
+    import repro.core.screening as scr
+    corr = np.asarray(X, np.float64).T @ np.asarray(y, np.float64)
+    istar = int(np.argmax(np.abs(corr)))
+    lmax = float(np.abs(corr[istar]))
+    g = np.sign(corr[istar]) * np.asarray(X[:, istar], np.float64)
+    gnorm = float(np.linalg.norm(g))
+    ghat = (g / gnorm).astype(np.float32)
+    b_cut = np.float32(1.0 / gnorm)
+    c = (np.asarray(y, np.float64) / lam).astype(np.float32)
+    rho = np.float32(np.linalg.norm(y) * (1.0 / lam - 1.0 / lmax))
+    return c, rho, ghat, b_cut, istar, lmax
+
+
+def _plant_sup_ladder(X, cols, deltas, centre, rho, ghat, b_cut, dirs=None):
+    """Rescale (or overwrite, when ``dirs`` is given) the chosen columns so
+    their dome/cut sup lands at (1 − eps)·(1 + δ) — the sup is positively
+    homogeneous in the column, so one oracle evaluation per column fixes
+    the scale exactly (up to f32 noise ≪ the ladder spacing)."""
+    import repro.core.screening as scr
+    eps = 1e-6
+    for j, d in zip(cols, deltas):
+        xj = X[:, j] if dirs is None else dirs[j]
+        xj = np.asarray(xj, np.float64)
+        sup = float(scr.dome_scores(
+            jnp.asarray([xj @ centre], jnp.float32),
+            jnp.asarray([xj @ ghat], jnp.float32),
+            jnp.asarray([np.linalg.norm(xj)], jnp.float32),
+            jnp.asarray(centre), jnp.asarray(rho), jnp.asarray(ghat),
+            jnp.asarray(b_cut))[0])
+        X[:, j] = (xj * (1.0 - eps) * (1.0 + d) / sup).astype(np.float32)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_bf16_adversarial_dome_boundary(backend):
+    """Columns planted with dome sup on a ladder straddling the 1 − eps
+    discard threshold (the dome rule's own regime boundary): the per-piece
+    margin fallback must fire and the bf16 mask must equal the f32 mask
+    bit-for-bit, with the ladder splitting across the threshold."""
+    from repro.core import ScreeningEngine
+    rng = np.random.default_rng(23)
+    n, p, n_plant = 32, 256, 16
+    X = rng.standard_normal((n, p)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    c, rho, ghat, b_cut, istar, lmax = _dome_pieces(X, y, 0.5 * float(
+        np.max(np.abs(X.T @ y))))
+    lam = 0.5 * lmax
+    c, rho, ghat, b_cut, istar, lmax = _dome_pieces(X, y, lam)
+    cols = [j for j in range(p - n_plant - 1, p) if j != istar][:n_plant]
+    # ± the relative bf16 band (~2·2⁻⁹/√3 ≈ 2.3e-3); δ ≈ 0 rungs sit inside
+    # ANY nonzero margin, the extremes outside it
+    deltas = np.linspace(-2.5e-3, 2.5e-3, n_plant)
+    _plant_sup_ladder(X, cols, deltas, c, rho, ghat, b_cut)
+    # planting must not move the λ_max geometry the pieces came from
+    corr = np.abs(X.T @ y)
+    assert int(np.argmax(corr)) == istar
+    assert float(np.max(corr[cols])) < 0.9 * lmax
+    Xf, yf = jnp.asarray(X), jnp.asarray(y)
+    e32 = ScreeningEngine(Xf, yf, backend=backend)
+    e16 = ScreeningEngine(Xf, yf, backend=backend, screen_dtype="bfloat16")
+    st = e32.state_at_lambda_max()
+    m32 = np.asarray(e32.screen(lam, st, "dome"))
+    m16 = np.asarray(e16.screen(lam, st, "dome"))
+    np.testing.assert_array_equal(m16, m32)
+    assert e16.last_fallback_cols > 0, "planted dome band never triggered"
+    planted = m32[cols]
+    assert planted.any() and not planted.all()
+    assert not m32[istar], "dome discarded istar (sup there is exactly 1)"
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_bf16_adversarial_cut_corner(backend):
+    """edpp_cut columns planted AT the two-plane corner of the cut sup —
+    t_star = ĝᵀx/‖x‖ ≈ t_b, where the closed form switches between the
+    unclipped sphere maximiser and the spherical-cap regime — AND with sup
+    on a ladder straddling the discard threshold. Both per-piece margins
+    (centre dot and cut dot) are live here; masks must stay bit-identical
+    with the fallback firing."""
+    import repro.core.screening as scr
+    from repro.core import ScreeningEngine
+    rng = np.random.default_rng(29)
+    n, p, n_plant = 32, 256, 16
+    X = rng.standard_normal((n, p)).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    corr = np.abs(X.astype(np.float64).T @ y)
+    istar = int(np.argmax(corr))
+    lmax = float(corr[istar])
+    _, _, ghat, b_cut, _, _ = _dome_pieces(X, y, 0.5 * lmax)
+    from repro.core import DualState
+    st = DualState.at_lambda_max(jnp.asarray(X), jnp.asarray(y))
+    lam = None
+    for frac in (0.5, 0.7, 0.3, 0.9):
+        test = scr.make_sphere("edpp", jnp.asarray(y), frac * lmax, st)
+        centre = np.asarray(test.centre, np.float64)
+        rho_s = float(test.rho)
+        t_b = float(scr.dome_t_b(test.centre, test.rho, jnp.asarray(ghat),
+                                 jnp.asarray(b_cut)))
+        if -0.95 < t_b < 0.95:       # interior corner exists at this λ
+            lam = frac * lmax
+            break
+    assert lam is not None, "no λ with an interior clipping corner"
+    # orthonormal u ⊥ ĝ; dirs sweep t through the corner while the ladder
+    # sweeps the sup through the threshold
+    u = rng.standard_normal(n)
+    u -= (u @ ghat) * ghat.astype(np.float64)
+    u /= np.linalg.norm(u)
+    cols = [j for j in range(p - n_plant - 1, p) if j != istar][:n_plant]
+    t_off = np.linspace(-0.02, 0.02, n_plant)
+    dirs = {j: np.clip(t_b + dt, -0.99, 0.99) * ghat.astype(np.float64)
+            + np.sqrt(1.0 - np.clip(t_b + dt, -0.99, 0.99) ** 2) * u
+            for j, dt in zip(cols, t_off)}
+    deltas = np.linspace(-2.5e-3, 2.5e-3, n_plant)
+    _plant_sup_ladder(X, cols, deltas, centre.astype(np.float32), rho_s,
+                      ghat, b_cut, dirs=dirs)
+    corr2 = np.abs(X.T @ y)
+    assert int(np.argmax(corr2)) == istar
+    assert float(np.max(corr2[cols])) < 0.9 * lmax
+    Xf, yf = jnp.asarray(X), jnp.asarray(y)
+    e32 = ScreeningEngine(Xf, yf, backend=backend)
+    e16 = ScreeningEngine(Xf, yf, backend=backend, screen_dtype="bfloat16")
+    st = e32.state_at_lambda_max()
+    m32 = np.asarray(e32.screen(lam, st, "edpp_cut"))
+    m16 = np.asarray(e16.screen(lam, st, "edpp_cut"))
+    np.testing.assert_array_equal(m16, m32)
+    assert e16.last_fallback_cols > 0, "planted corner band never triggered"
+    planted = m32[cols]
     assert planted.any() and not planted.all()
 
 

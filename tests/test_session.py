@@ -406,3 +406,64 @@ def test_grid_endpoint_contract_pins_hi_frac():
     res_hi = sess.path(Y[:1], np.repeat(hi, 1, axis=0))
     assert np.all(res_hi.betas == 0.0)
     assert res_hi.masks.all()
+
+
+# ---------------------------------------------------------------------------
+# byte-exact replay: reset_solver_cache + end-to-end bf16 gap parity
+# ---------------------------------------------------------------------------
+
+def test_reset_solver_cache_gives_bitwise_replay():
+    """The warm-started Lipschitz cache makes solves a function of session
+    HISTORY (each solve refreshes the eigenvector its bucket warm-starts
+    from), so identical ``path`` calls can drift in the last float.
+    ``reset_solver_cache`` restores a deterministic cold start — two calls
+    from a reset cache must agree bit-for-bit, which is the property the
+    benches' precision A/Bs lean on (docs/solvers.md)."""
+    X, Y = _problem(seed=19)
+    y = Y[0]
+    grid = _grids(X, Y[:1], num=6)[0]
+    cfg = PathConfig(rule="gap", solver_tol=1e-8)
+    sess = LassoSession.fit(X)
+    sess.path(y, grid, config=cfg)         # arbitrary history
+    sess.reset_solver_cache()
+    r1 = sess.path(y, grid, config=cfg).squeeze()
+    sess.reset_solver_cache()
+    r2 = sess.path(y, grid, config=cfg).squeeze()
+    np.testing.assert_array_equal(np.asarray(r1.betas), np.asarray(r2.betas))
+    np.testing.assert_array_equal(np.asarray(r1.masks), np.asarray(r2.masks))
+
+
+@pytest.mark.parametrize("rule", ["gap", "gap_cut"])
+def test_bf16_gap_path_masks_match_f32_end_to_end(rule):
+    """Whole-path regression for the two-stage GAP fallback (exact sup
+    recovery from the candidate gather + straddler re-test): with cache
+    resets equalising solver history, the bf16 arm's masks must be
+    bit-identical to f32 over a full sequential path — single AND batched.
+    (The per-step kernel contract is covered adversarially in
+    tests/test_kernels.py; this drives the engine's gather plumbing
+    end-to-end, where the loose rescale-interval version banded hundreds
+    of columns and history drift flipped threshold-straddling bits.)"""
+    X, Y = _problem(seed=23)
+    grids = _grids(X, Y, num=10)
+    sess = LassoSession.fit(X)
+
+    def arm(dtype):
+        cfg = PathConfig(screen=ScreenSpec(rule=rule, screen_dtype=dtype),
+                         solve=SolveSpec(tol=1e-8))
+        sess.reset_solver_cache()
+        single = sess.path(Y[0], grids[0], config=cfg).squeeze()
+        sess.reset_solver_cache()
+        batched = sess.path(Y, grids, config=cfg)
+        return single, batched
+
+    s32, b32 = arm("float32")
+    s16, b16 = arm("bfloat16")
+    np.testing.assert_array_equal(np.asarray(s32.masks),
+                                  np.asarray(s16.masks))
+    np.testing.assert_array_equal(np.asarray(b32.masks),
+                                  np.asarray(b16.masks))
+    # the bf16 arm really ran reduced precision + its narrow extra pass
+    screened = [s for s in s16.stats if s.screen_time_s > 0]
+    assert screened and all(
+        s.screen_dtype_effective == "bfloat16" for s in screened)
+    assert all(s.x_passes == 2 for s in screened)

@@ -19,6 +19,7 @@ Usage:
     python tools/check_bench_schema.py BENCH_serve.json --section bench_serve
     python tools/check_bench_schema.py BENCH_dist.json --section bench_dist
     python tools/check_bench_schema.py BENCH_solver.json --section bench_dpp_family
+    python tools/check_bench_schema.py BENCH_dist.json --section bench_solve_dtype
 """
 
 from __future__ import annotations
@@ -99,11 +100,29 @@ DPP_FAMILY_ROW_KEYS = {
     "max_beta_err",
 }
 
+SOLVE_DTYPE_ROW_KEYS = {
+    "dataset",
+    "solver",
+    "solve_dtype",
+    "effective_dtype",
+    "tol",
+    "gap_check_cadence",
+    "solve_iters",
+    "lo_iters",
+    "bytes_per_solve_iter",
+    "byte_ratio_vs_f32",
+    "max_beta_err",
+    "beta_err_tol",
+    "wall_time_s",
+    "converged",
+}
+
 SECTION_ROW_KEYS = {
     "bench_batched": BATCH_ROW_KEYS,
     "bench_serve": SERVE_ROW_KEYS,
     "bench_dist": DIST_ROW_KEYS,
     "bench_dpp_family": DPP_FAMILY_ROW_KEYS,
+    "bench_solve_dtype": SOLVE_DTYPE_ROW_KEYS,
 }
 
 
