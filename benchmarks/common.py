@@ -48,8 +48,12 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
 # id(X) is only a valid key while X is alive, so the cache pins the keyed
 # array alongside its session (a freed ndarray's id gets recycled by the
 # very next allocation — without the pin a later dataset could silently
-# hit the previous dataset's session).
-_SESSIONS: dict[int, "tuple[object, LassoSession]"] = {}
+# hit the previous dataset's session). The session's dictionary VERSION at
+# fit time rides along too: a session mutated by `session.update(...)` no
+# longer describes X, so serving it from the cache as if pristine would
+# hand later benches a silently edited dictionary — such entries miss and
+# refit.
+_SESSIONS: dict[int, "tuple[object, LassoSession, int]"] = {}
 
 
 def session_for(X) -> LassoSession:
@@ -57,10 +61,14 @@ def session_for(X) -> LassoSession:
 
     Per-call configs (rules, solvers, backends) ride through
     ``session.path(..., config=cfg)`` — geometry is cached per backend
-    inside the session, so even backend A/Bs fit each at most once."""
+    inside the session, so even backend A/Bs fit each at most once.
+    A cached session whose dictionary version moved (``session.update``
+    mutated it in place) is discarded and refitted from the pristine X."""
     entry = _SESSIONS.get(id(X))
-    if entry is None or entry[0] is not X:
-        entry = (X, LassoSession.fit(X))
+    if (entry is None or entry[0] is not X
+            or getattr(entry[1], "version", 0) != entry[2]):
+        sess = LassoSession.fit(X)
+        entry = (X, sess, getattr(sess, "version", 0))
         _SESSIONS[id(X)] = entry
     return entry[1]
 

@@ -24,7 +24,8 @@ def main() -> None:
 
     from . import (bench_basic_rules, bench_batched, bench_dpp_family,
                    bench_group, bench_kernels, bench_roofline,
-                   bench_sequential, bench_solver_swap, bench_synthetic)
+                   bench_sequential, bench_solver_swap, bench_synthetic,
+                   bench_update)
 
     print("name,us_per_call,derived")
     bench_dpp_family.run(full=full, num_lambdas=num)      # Fig 1 / Table 1
@@ -36,6 +37,7 @@ def main() -> None:
     bench_kernels.run(full=full)                          # ours
     bench_roofline.run(full=full)                         # §Roofline reader
     bench_batched.run(full=full)                          # ours: serving B-axis
+    bench_update.run(full=full)                           # ours: incr. updates
 
 
 if __name__ == "__main__":

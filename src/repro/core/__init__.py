@@ -36,6 +36,10 @@ Layering (see docs/screening-rules.md for the rule-by-rule map):
     distributed.py      shard_map / pjit variants whose per-shard score and
                         solver-update blocks reuse the engines' arithmetic;
                         batched multi-query variants psum (B, N) blocks
+    update.py           incremental dictionary edits — session.update(add=,
+                        drop=) plans (UpdatePlan), in-place geometry /
+                        workspace carry across versions, mask carry-over
+                        (docs/api.md#incremental-updates)
 
 Public API:
     LassoSession, PathConfig, ScreenSpec, SolveSpec           (session — THE
@@ -51,6 +55,9 @@ Public API:
     fista, cd, group_fista, soft_threshold, SolveResult       (solvers)
     group_lambda_max, group_duality_gap                       (group solver)
     group_screen, group_edpp_mask, GroupDualState             (group screening)
+    UpdatePlan, UpdateReport, make_plan, carry_mask,
+    update_workspace                                          (incremental
+                                                               updates)
     lasso_path, lasso_path_batched, group_lasso_path,
     GroupPathConfig                                           (deprecated
                                                                session shims)
@@ -169,4 +176,11 @@ from .session import (  # noqa: F401
     PathConfig,
     ScreenSpec,
     SolveSpec,
+)
+from .update import (  # noqa: F401
+    UpdatePlan,
+    UpdateReport,
+    carry_mask,
+    make_plan,
+    update_workspace,
 )

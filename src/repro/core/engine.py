@@ -460,6 +460,97 @@ def _group_edpp_geometry(y, lam_next, state):
 _group_spec_norms = jax.jit(gscr.group_spectral_norms, static_argnames="m")
 
 
+def _patch_slots_impl(X, vecs, slots, blk, vec_blocks, lo_dtypes):
+    """Patch recycled slots — one fused dispatch for a geometry's whole
+    per-column state. ``slots`` is sorted-unique by construction (a prefix
+    of the sorted drop set), which lets XLA lower the column scatter ~4x
+    faster than the generic path. The reduced-precision screen copies are
+    re-cast whole from the patched X instead of scattered: XLA's bf16
+    scatter is scalar-looped (~3x the f32 scatter despite half the
+    bytes), while the elementwise cast pass both vectorises and is
+    bitwise-identical to the cold ``astype`` by construction — fusion
+    cannot reorder an elementwise op."""
+    Xn = X.at[:, slots].set(blk, unique_indices=True,
+                            indices_are_sorted=True)
+    los = [Xn.astype(jnp.dtype(dt)) for dt in lo_dtypes]
+    vecs = [v.at[slots].set(b, unique_indices=True,
+                            indices_are_sorted=True)
+            for v, b in zip(vecs, vec_blocks)]
+    return Xn, los, vecs
+
+
+@jax.jit
+def _stream_fit_single(X, istar, y):
+    """λ_max ray v₁ = sign(x*ᵀy)·x* and the DOME halfspace direction for a
+    single query — the ONE jitted helper both the cold PathWorkspace fit
+    and update_workspace (core/update.py) go through, so a carried stream
+    is bitwise-identical to a cold one by construction."""
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+    xstar = X[:, istar]
+    sgn = jnp.sign(jnp.vdot(xstar.astype(acc), y.astype(acc)))
+    v1 = sgn * xstar
+    ghat = v1 / (jnp.linalg.norm(v1, axis=-1, keepdims=True) + 1e-30)
+    return v1, ghat
+
+
+@jax.jit
+def _stream_fit_batched(X, istar, y):
+    """Batched twin of :func:`_stream_fit_single` — (B,) argmaxes."""
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+    xstar = X[:, istar].T
+    sgn = jnp.sign(jnp.sum(xstar.astype(acc) * y.astype(acc), axis=-1))
+    v1 = scr._col(sgn) * xstar
+    ghat = v1 / (jnp.linalg.norm(v1, axis=-1, keepdims=True) + 1e-30)
+    return v1, ghat
+
+
+# apply_update's block-vs-full probe results (core/update.py carry):
+# (backend id, X shape, churn size, err dtypes) → did the (n, c) block
+# reduction reproduce the (n, p) full-shape reduction bit-for-bit? XLA's
+# accumulation order is fixed per compiled executable and independent of
+# the data, so ONE probe decides a shape for the process lifetime.
+_BLOCK_CARRY_OK: dict = {}
+
+_ADD_BLOCK_STATS = {}
+
+
+def _add_block_stats(backend, err_dtypes):
+    """Jitted fresh-column products for an added block — the cold fit's
+    fused sumsq pass, its column norms, and one quantisation-error bound
+    per cached screen dtype, in ONE dispatch. Fusion only inlines each
+    reduction's elementwise producers/consumers (the cast feeding the
+    error bound, the sqrt reading sumsq); the per-column reductions
+    themselves are the exact ones a cold fit runs standalone, so the
+    outputs stay bit-identical to refitting the edited X (asserted by the
+    oracle contract, tests/test_update.py)."""
+    key = (id(backend), err_dtypes)
+    fn = _ADD_BLOCK_STATS.get(key)
+    if fn is None:
+        fused = backend.fused_scores
+
+        @jax.jit
+        def fn(add):
+            _, sumsq = fused(add, jnp.zeros((add.shape[0],), add.dtype),
+                             0.0)
+            errs = tuple(
+                ops.bf16_column_err(add, add.astype(jnp.dtype(dt)))
+                for dt in err_dtypes)
+            return sumsq, jnp.sqrt(sumsq), errs
+        _ADD_BLOCK_STATS[key] = fn
+    return fn
+
+
+# Two-phase buffer ownership (apply_update): the FIRST update must copy —
+# the fit-time X may alias a caller-held jax array (jnp.asarray is a no-op
+# on device arrays), and multiple backend geometries can share one buffer.
+# Its outputs are fresh buffers owned by this geometry alone, so every
+# LATER update donates them and patches without the O(n·p) copy — that
+# in-place reuse is what keeps a balanced churn edit at O(n·c).
+_patch_slots_copy = jax.jit(_patch_slots_impl, static_argnums=5)
+_patch_slots_donated = jax.jit(_patch_slots_impl, static_argnums=5,
+                               donate_argnums=(0, 1))
+
+
 # ---------------------------------------------------------------------------
 # Dictionary geometry (query-independent, computed once) + per-query state
 # ---------------------------------------------------------------------------
@@ -479,8 +570,12 @@ class DictionaryGeometry:
     def __init__(self, X, backend: str | None = None, *, _sumsq=None):
         self.backend = resolve_backend(backend)
         self.X = jnp.asarray(X)
+        self.version = 0          # bumped by apply_update (core/update.py)
         self.fit_passes = 0       # fused workspace passes over X (fit-once)
         self.query_passes = 0     # per-query |XᵀY| attach passes
+        self.update_passes = 0    # partial (touched-columns-only) passes
+        self._owns_buffers = False  # True once apply_update replaced every
+        #                             buffer — enables donated patching
         self._screen_copies: dict[str, jax.Array] = {}
         if _sumsq is None:
             _, _sumsq = self.backend.fused_scores(
@@ -520,6 +615,156 @@ class DictionaryGeometry:
             self._screen_copies[key] = cached
         return cached
 
+    def _full_column_state(self, X_new, copies, err_dtypes):
+        """Per-column state at FULL shape via the exact eager calls a
+        cold fit runs on the edited X — same function, same shapes, same
+        content → the same compiled executable → identical bits (the
+        fallback and probe reference of apply_update). Mutates ``copies``
+        in place with the fresh ``:err`` columns; returns
+        ``(sumsq, col_norms)``."""
+        _, sumsq = self.backend.fused_scores(
+            X_new, jnp.zeros((X_new.shape[0],), X_new.dtype), 0.0)
+        for dt in err_dtypes:
+            copies[dt + ":err"] = ops.bf16_column_err(X_new, copies[dt])
+        return sumsq, jnp.sqrt(sumsq)
+
+    def apply_update(self, plan, X_add=None, *,
+                     place_x=None, place_col=None) -> int:
+        """Apply a column edit IN PLACE, following the plan's layout rule
+        (core/update.py): the first ``plan.n_recycle`` added columns are
+        scattered into the dropped slots (ascending), leftover drops
+        compact the survivors left, leftover adds append at the end.
+
+        A *balanced* edit patches ONLY the edited columns — per-array
+        ``.at[:, slots].set`` scatters, no full-dictionary gathers — which
+        is what makes a churn update ≪ a refit
+        (benchmarks/bench_update.py). Survivors carry every piece of
+        cached per-column state — ``sumsq``/``col_norms``, each
+        reduced-precision screen copy and its ``:err`` bound — untouched;
+        only the ADDED block pays fresh per-column reductions.
+
+        Exactness: those reductions are mathematically per-column, but
+        XLA's *accumulation order* for an (n, c) block can differ from
+        the (n, p) full-shape reduction a cold fit runs (the strategy is
+        shape-dependent), so block results are not bitwise-trustworthy a
+        priori. The FIRST update at a given (shape, churn size) therefore
+        recomputes the per-column state at full shape with the cold
+        path's own eager calls — bit-identical by construction — and
+        *probes* the block reduction against it: if the block bits match
+        (accumulation order is content-independent, so one probe decides
+        the shape), later same-shaped updates take the O(n·c) incremental
+        carry; if not, that shape permanently recomputes at full shape
+        (still ≪ refit: no session rebuild, fused patches, warm eig
+        cache). Shape-changing edits always recompute at the new full
+        shape. Net: the oracle-refit contract (core/update.py) holds
+        bit-for-bit at EVERY shape. ``place_x``/``place_col`` re-place
+        (n, p) / (p,) results on a mesh (see LassoSession.update).
+
+        Ownership: the first update patches COPIES (fit-time buffers may
+        be aliased by the caller or sibling geometries); once every
+        buffer is geometry-owned, later updates donate them to the patch
+        — outside references captured between updates are invalidated
+        (see the two-phase note at ``_patch_slots_copy``).
+
+        Returns the new ``version``."""
+        place_given = place_x is not None or place_col is not None
+        place_x = place_x or (lambda a: a)
+        place_col = place_col or (lambda a: a)
+        add = None
+        if X_add is not None:
+            add = jnp.asarray(X_add, self.X.dtype)
+            if add.ndim != 2 or add.shape[0] != self.X.shape[0]:
+                raise ValueError(
+                    f"X_add must be (n, p_add) with n={self.X.shape[0]}, "
+                    f"got {add.shape}")
+            if add.shape[1] == 0:
+                add = None
+
+        copies = dict(self._screen_copies)
+        mat_keys = [key for key in copies if not key.endswith(":err")]
+        err_dtypes = tuple(key for key in mat_keys
+                           if key + ":err" in copies)
+
+        k = int(getattr(plan, "n_recycle", 0))
+        X_new, sumsq, col_norms = self.X, self.sumsq, self.col_norms
+        if k:
+            slots = jnp.asarray(plan.recycle_idx, jnp.int32)
+            blk = add if k == add.shape[1] else add[:, :k]
+            # donation needs sole ownership AND plain placement (device_put
+            # on a mesh may alias, which would defeat the ownership proof)
+            patch = (_patch_slots_donated
+                     if self._owns_buffers and not place_given
+                     else _patch_slots_copy)
+            ck = (id(self.backend), self.X.shape, k, err_dtypes)
+            carry = (_BLOCK_CARRY_OK.get(ck)
+                     if plan.pure_recycle else False)
+            if carry is not False:
+                # fresh per-column products for the added block in one
+                # jitted dispatch (only trusted where the probe below
+                # validated the block reduction's bits for this shape)
+                sumsq_b, norms_b, errs = _add_block_stats(
+                    self.backend, err_dtypes)(blk)
+                errs_b = dict(zip(err_dtypes, errs))
+            self.update_passes += 1
+            if carry:
+                vecs = [sumsq, col_norms]
+                vec_blocks = [sumsq_b, norms_b]
+                err_keys = []
+                for dt in err_dtypes:
+                    err_keys.append(dt + ":err")
+                    vecs.append(copies[dt + ":err"])
+                    vec_blocks.append(errs_b[dt])
+                X_new, los, vecs = patch(X_new, vecs, slots, blk,
+                                         vec_blocks, tuple(mat_keys))
+                sumsq, col_norms = vecs[0], vecs[1]
+                copies.update(zip(mat_keys, los))
+                copies.update(zip(err_keys, vecs[2:]))
+            else:
+                lo_dtypes = tuple(mat_keys) if plan.pure_recycle else ()
+                X_new, los, _ = patch(X_new, [], slots, blk, [], lo_dtypes)
+                copies.update(zip(lo_dtypes, los))
+                if plan.pure_recycle:
+                    sumsq, col_norms = self._full_column_state(
+                        X_new, copies, err_dtypes)
+                    if carry is None:
+                        ok = np.array_equal(np.asarray(sumsq_b),
+                                            np.asarray(sumsq)[
+                                                plan.recycle_idx])
+                        for dt in err_dtypes:
+                            ok = ok and np.array_equal(
+                                np.asarray(errs_b[dt]),
+                                np.asarray(copies[dt + ":err"])[
+                                    plan.recycle_idx])
+                        _BLOCK_CARRY_OK[ck] = bool(ok)
+
+        if not plan.pure_recycle:
+            # residual drops compact the survivors; residual adds append;
+            # the per-column state rebuilds at the NEW full shape (the
+            # cold executable for p_new — see the docstring)
+            keep_idx = jnp.asarray(plan.keep_idx, jnp.int32)
+            X_new = jnp.take(X_new, keep_idx, axis=1)
+            if add is not None and plan.n_append:
+                X_new = jnp.concatenate([X_new, add[:, k:]], axis=1)
+            for key in mat_keys:
+                copies[key] = X_new.astype(jnp.dtype(key))
+            sumsq, col_norms = self._full_column_state(X_new, copies,
+                                                       err_dtypes)
+            if add is not None and not k:
+                self.update_passes += 1
+
+        for key in list(copies):
+            copies[key] = (place_col if key.endswith(":err")
+                           else place_x)(copies[key])
+        self.X = place_x(X_new)
+        self.sumsq = place_col(sumsq)
+        self.col_norms = place_col(col_norms)
+        self._screen_copies = copies
+        # from here on every buffer above was created by this update (or
+        # re-placed), so the next update may donate it (see _patch_slots_*)
+        self._owns_buffers = place_given is False
+        self.version += 1
+        return self.version
+
     @property
     def shape(self) -> tuple[int, int]:
         return self.X.shape
@@ -540,6 +785,7 @@ class GroupDictionaryGeometry:
         self.X = jnp.asarray(X)
         self.m = m
         self.spec_norms = _group_spec_norms(self.X, m)
+        self.version = 0    # group dictionaries have no incremental update
         self.fit_passes = 1
         self.query_passes = 0
 
@@ -581,26 +827,20 @@ class PathWorkspace:
         self.y = y_arr
         self.batch = None if y_arr.ndim == 1 else y_arr.shape[0]
         self.abs_xty = scores                     # |Xᵀy|, (p,) or (B, p)
-        acc = jnp.promote_types(self.X.dtype, jnp.float32)
         if self.batch is None:
             self.istar = int(jnp.argmax(scores))
             self.lam_max = float(scores[self.istar])
-            xstar = self.X[:, self.istar]
-            sgn = jnp.sign(jnp.vdot(xstar.astype(acc), self.y.astype(acc)))
-            self.v1_at_lmax = sgn * xstar         # eq. (17) at λ₀ = λ_max
+            # eq. (17) at λ₀ = λ_max, + the DOME halfspace direction
+            self.v1_at_lmax, self.ghat = _stream_fit_single(
+                self.X, jnp.asarray(self.istar, jnp.int32), self.y)
         else:
             istar = jnp.argmax(scores, axis=-1)               # (B,)
             self.istar = np.asarray(istar)
             self.lam_max = np.asarray(
                 jnp.take_along_axis(scores, istar[:, None], axis=-1)[:, 0],
                 dtype=np.float64)                             # (B,)
-            xstar = self.X[:, istar].T                        # (B, n)
-            sgn = jnp.sign(jnp.sum(
-                xstar.astype(acc) * self.y.astype(acc), axis=-1))
-            self.v1_at_lmax = scr._col(sgn) * xstar
-        self.ghat = self.v1_at_lmax / (
-            jnp.linalg.norm(self.v1_at_lmax, axis=-1, keepdims=True)
-            + 1e-30)                                  # DOME halfspace
+            self.v1_at_lmax, self.ghat = _stream_fit_batched(
+                self.X, istar, self.y)
 
     @property
     def X(self) -> jax.Array:

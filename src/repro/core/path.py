@@ -106,6 +106,10 @@ class PathStepStats:
     solve_bytes: float = 0.0      # HBM bytes this step's solves streamed
     #                               (bf16 iteration passes counted at 2 B/el,
     #                               f32 certificates/polish at 4)
+    geometry_version: int = 0     # dictionary version this step ran against
+    #                               (0 at fit; +1 per session.update — lets
+    #                               serve traces attribute results to the
+    #                               dictionary they were computed on)
 
 
 @dataclasses.dataclass
@@ -269,6 +273,8 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
                                     dtype=np.float64))      # (B,)
     state = screen_engine.state_at_lambda_max()
     arange_m = np.arange(m)[None, :]
+    geo_version = int(getattr(getattr(screen_engine, "geometry", None),
+                              "version", 0))
 
     betas = np.zeros((B, K, p), dtype=np.float64)
     masks = np.ones((B, K, units), dtype=bool)
@@ -284,7 +290,8 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
         if not live.any():             # β* = 0 for the whole batch
             stats.append(PathStepStats(
                 float(lam_vec.max()), units, 0, 0, 0.0, 0, 0.0, 0.0,
-                batch_size=B, queries_converged=B))
+                batch_size=B, queries_converged=B,
+                geometry_version=geo_version))
             if cfg.checkpoint_fn:
                 if batch is None:
                     cfg.checkpoint_fn(k, float(lam_vec[0]), np.zeros((p,)))
@@ -432,6 +439,7 @@ def _path_driver(X, Y, lambdas, cfg, *, m: int, screen_engine,
             solve_dtype_effective=solve_dtype_eff,
             solver_lo_iters=solver_lo_iters,
             solve_bytes=solve_bytes,
+            geometry_version=geo_version,
         ))
         if cfg.checkpoint_fn:
             if batch is None:

@@ -438,6 +438,8 @@ class LassoSession:
                              f"groups={m}")
         self._geometries: dict[str, object] = {}
         self._eig_cache: dict[int, object] = {}
+        self._eig_stats = {"warm": 0, "cold": 0}
+        self._version = 0
         if geometry is not None:
             if m > 1:
                 raise ValueError("geometry= adoption is for the plain "
@@ -445,6 +447,7 @@ class LassoSession:
             self.X = geometry.X
             self._geometries[geometry.backend.name] = geometry
             self._default_backend = geometry.backend.name
+            self._version = int(getattr(geometry, "version", 0))
         else:
             self._default_backend = self._backend_name(cfg.screen.backend)
             self._geometry(self._default_backend)   # the one fused fit pass
@@ -495,6 +498,9 @@ class LassoSession:
                 geom = GroupDictionaryGeometry(self.X, self.groups, inst)
             else:
                 geom = DictionaryGeometry(self.X, inst)
+            # a lazily-fitted backend joins at the session's CURRENT
+            # dictionary version (self.X is already the edited X)
+            geom.version = self._version
             self._geometries[inst.name] = geom
         return geom
 
@@ -523,6 +529,24 @@ class LassoSession:
     def query_passes(self) -> int:
         """Cheap per-query |XᵀY| attach passes (one per ``path`` call)."""
         return sum(g.query_passes for g in self._geometries.values())
+
+    @property
+    def version(self) -> int:
+        """The dictionary version: 0 at ``fit``, +1 per ``update``.
+
+        Recorded per step in ``PathStepStats.geometry_version`` so serve
+        traces and benches can attribute results to the dictionary they
+        were computed against."""
+        return self._version
+
+    @property
+    def eig_cache_stats(self) -> dict:
+        """Warm/cold Lipschitz power-iteration starts across this
+        session's solves (``{"warm": int, "cold": int}``) — the
+        accounting that shows eigenpair carry across ``update`` versions
+        (warm starts keep hitting after an edit; ``reset_solver_cache``
+        forces the next solves cold)."""
+        return dict(self._eig_stats)
 
     # ----------------------------------------------------------------- path
     def path(self, Y, lambdas=None, *, num_lambdas: int = 100,
@@ -587,6 +611,101 @@ class LassoSession:
         """
         self._eig_cache.clear()
 
+    # ------------------------------------------------------------- update
+    def update(self, add=None, drop=None, *, workspaces=()):
+        """Edit the fitted dictionary in place: drop columns, append new
+        ones, keep every cache that stays valid warm.
+
+        Layout (core/update.py): added columns first *recycle* the
+        dropped slots in ascending drop order, leftover adds append at
+        the end, leftover drops compact the survivors left (``drop``
+        indices refer to the CURRENT version's columns). A balanced edit
+        (``len(drop) == add.shape[1]``, the churn-workload common case)
+        therefore moves no columns at all — every array is patched in
+        place over the edited slots only. Per backend-fitted geometry,
+        survivors carry their column norms, reduced-precision screen
+        copies and quantisation error bounds; only the added block pays
+        fresh (n, p_add) passes — see ``DictionaryGeometry.apply_update``.
+        The
+        per-bucket Lipschitz eigenpairs stay cached as warm power-
+        iteration starts (``v0``) for the next solves; λ_max for each
+        live workspace in ``workspaces`` recomputes from the touched
+        candidates only, rescanning in full only when that query's
+        argmax column was dropped.
+
+        Exactness: after ``update`` + ``reset_solver_cache()``, ``path``
+        masks are bit-identical to a cold ``fit`` on the edited X and β
+        agrees within ``beta_err_tol`` (the oracle-refit contract,
+        docs/api.md#incremental-updates). Without the eig-cache reset,
+        solutions still agree to solver tolerance — warm Lipschitz
+        starts only move last-bit iterates.
+
+        Buffer ownership: the FIRST update copies the fitted arrays (the
+        fit-time X may alias a caller-held jax array), so references you
+        hold from before it stay valid. Every LATER update **donates**
+        the geometry's buffers to the in-place patch — ``session.X`` /
+        geometry arrays captured before that update are invalidated
+        (reading them raises jax's deleted-array error). Re-read them
+        from the session after updating; ``np.asarray`` copies taken
+        earlier are unaffected.
+
+        On a mesh session the edited dictionary is re-placed column-
+        sharded (``place_dictionary``); the edited column count must
+        stay divisible by the mesh's feature-axis size — pad ``add``
+        with zero columns to a shard-divisible count if needed (zero
+        columns are inert: norm 0, never selected).
+
+        Returns an :class:`~repro.core.update.UpdateReport`.
+        """
+        from .update import UpdateReport, make_plan, update_workspace
+        if self.groups > 1:
+            raise NotImplementedError(
+                "session.update is plain-Lasso only: group geometries "
+                "cache per-group spectral norms that a column edit "
+                "invalidates wholesale — refit instead")
+        plan, X_add = make_plan(self.X.shape[1], add, drop)
+        if X_add is not None and X_add.shape[0] != self.X.shape[0]:
+            raise ValueError(
+                f"add must have n={self.X.shape[0]} rows, got "
+                f"{X_add.shape[0]}")
+
+        place_x = place_col = None
+        if self.mesh is not None:
+            from . import distributed as dist
+            fsize = int(np.prod([self.mesh.shape[a]
+                                 for a in dist.feature_axes(self.mesh)],
+                                initial=1))
+            if plan.p_new % fsize:
+                raise ValueError(
+                    f"edited p={plan.p_new} is not divisible by the "
+                    f"mesh's feature axis size {fsize}; pad add= with "
+                    f"zero columns to a shard-divisible count")
+            mesh = self.mesh
+            place_x = lambda a: jax.device_put(a, dist.x_sharding(mesh))
+            place_col = lambda a: jax.device_put(a, dist.beta_sharding(mesh))
+
+        if X_add is not None:
+            # ONE host→device transfer shared by every geometry and live
+            # workspace (jnp.asarray is a no-op on device arrays)
+            X_add = jnp.asarray(X_add, self.geometry.X.dtype)
+
+        for geom in self._geometries.values():
+            geom.apply_update(plan, X_add,
+                              place_x=place_x, place_col=place_col)
+        self._version += 1
+        self.X = self.geometry.X
+
+        n_rescans = 0
+        ws_list = list(workspaces)
+        for ws in ws_list:
+            n_rescans += update_workspace(ws, plan, X_add)
+        return UpdateReport(
+            version=self._version, p=plan.p_new, n_add=plan.n_add,
+            n_drop=plan.n_drop,
+            geometries_updated=len(self._geometries),
+            eig_buckets_carried=len(self._eig_cache),
+            workspaces_updated=len(ws_list), argmax_rescans=n_rescans)
+
     # ------------------------------------------------------------- drivers
     def _solver_engine(self, y, cfg: PathConfig) -> SolverEngine:
         backend = cfg.solve.backend
@@ -602,7 +721,8 @@ class LassoSession:
             y, solver=cfg.solve.resolved_strategy(self.groups),
             backend=backend, tol=cfg.solve.tol, max_iter=cfg.solve.max_iter,
             gap_check_cadence=cfg.solve.gap_check_cadence,
-            eig_cache=self._eig_cache, solve_dtype=cfg.solve.solve_dtype)
+            eig_cache=self._eig_cache, eig_stats=self._eig_stats,
+            solve_dtype=cfg.solve.solve_dtype)
 
     def _lo_gather(self, cfg: PathConfig):
         """The driver's ``lo_gather`` hook: reduce the session's cached
@@ -798,4 +918,5 @@ def _merge_step_stats(steps: list[PathStepStats]) -> PathStepStats:
         solve_dtype_effective=steps[0].solve_dtype_effective,
         solver_lo_iters=sum(s.solver_lo_iters for s in steps),
         solve_bytes=sum(s.solve_bytes for s in steps),
+        geometry_version=steps[0].geometry_version,
     )

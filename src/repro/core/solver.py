@@ -197,10 +197,7 @@ def _fista_solve_lo(backend, X, X_lo, y, lam, beta0, lipschitz, tol,
         return (beta_new.astype(dtype), z_new.astype(dtype), t_new), None
 
     def stop(gap, budget, prev_gap):
-        stalled = gap > ops.BF16_SOLVE_PROGRESS * prev_gap
-        floored = gap <= ops.BF16_SOLVE_SLACK * budget
-        return jnp.logical_or(gap <= tol * scale,
-                              jnp.logical_and(stalled, floored))
+        return ops.bf16_certified_stop(gap, budget, prev_gap, tol * scale)
 
     def cond(state):
         _, _, _, k, _, _, done, _ = state
@@ -414,10 +411,7 @@ def _fista_solve_lo_batched(backend, X, X_lo, Y, lam, beta0, valid,
         return gap, budget
 
     def stop(gap, budget, prev_gap):
-        stalled = gap > ops.BF16_SOLVE_PROGRESS * prev_gap
-        floored = gap <= ops.BF16_SOLVE_SLACK * budget
-        return jnp.logical_or(gap <= tol * scale,
-                              jnp.logical_and(stalled, floored))
+        return ops.bf16_certified_stop(gap, budget, prev_gap, tol * scale)
 
     def body(state):
         beta, z, t, k, prev_gap, conv, iters, checks = state
@@ -553,6 +547,110 @@ def _cd_gram_solve_batched(backend, X, Y, lam, beta0, valid, tol,
     return SolveResult(beta, gap, iters, conv, checks)
 
 
+@functools.partial(jax.jit, static_argnames=("backend", "max_epochs",
+                                             "cadence"))
+def _cd_gram_solve_lo(backend, X, X_lo, y, lam, beta0, tol, max_epochs: int,
+                      cadence: int, err_max, cn_max) -> SolveResult:
+    """Gram CD with the G build streamed off the bf16 dictionary copy:
+    G̃ = X̃ᵀX̃ and c̃ = X̃ᵀy accumulate in f32 from the 2-byte elements —
+    the ONE HBM pass over the bucket this solver path takes, so the whole
+    data movement of the build runs at half width. Sweeps then run in VMEM
+    on G̃ exactly as in :func:`_cd_gram_solve`.
+
+    The duality-gap CERTIFICATE recomputes the residual from the f32 ``X``
+    (2 passes per check, cadence-amortised), so a stop at ``gap ≤
+    tol·scale`` is TRUE convergence. The perturbed sweep gradient is
+    ``G̃β − c̃ = X̃ᵀ(X̃β − y)`` — exactly the doubly-perturbed matvec
+    :func:`ops.bf16_gap_budget` bounds for the FISTA lo phase — so the
+    same certified stall/floor handover applies; on handover
+    ``_cd_gram_solve`` rebuilds the exact G and polishes."""
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+    Xl = X_lo.astype(acc)
+    G = Xl.T @ Xl
+    c = Xl.T @ y.astype(acc)
+    sweep_op = _cd_gram_op(backend)
+    scale = 0.5 * jnp.sum(jnp.square(y)) + 1e-30
+
+    def gap_budget(beta):
+        r = y - X @ beta              # exact certificate: f32 stream
+        gap = gap_from_residual(r, X.T @ r, beta, lam, y)
+        budget = ops.bf16_gap_budget(jnp.linalg.norm(r),
+                                     jnp.sum(jnp.abs(beta)),
+                                     err_max, cn_max)
+        return gap, budget
+
+    def cond(state):
+        _, k, _, done, _ = state
+        return jnp.logical_and(k < max_epochs, jnp.logical_not(done))
+
+    def body(state):
+        beta, k, prev_gap, _, checks = state
+        beta = sweep_op(G, c, beta.astype(acc), lam,
+                        sweeps=cadence).astype(X.dtype)
+        gap, budget = gap_budget(beta)
+        done = ops.bf16_certified_stop(gap, budget, prev_gap, tol * scale)
+        return beta, k + cadence, gap, done, checks + 1
+
+    gap0, budget0 = gap_budget(beta0)
+    done0 = ops.bf16_certified_stop(gap0, budget0, jnp.asarray(jnp.inf),
+                                    tol * scale)
+    state = (beta0, jnp.asarray(0), gap0, done0, jnp.asarray(1))
+    beta, k, gap, _, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, k, gap <= tol * scale, checks)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_epochs",
+                                             "cadence"))
+def _cd_gram_solve_lo_batched(backend, X, X_lo, Y, lam, beta0, valid, tol,
+                              max_epochs: int, cadence: int, err_max,
+                              cn_max) -> SolveResult:
+    """Batched twin of :func:`_cd_gram_solve_lo`: ONE bf16-streamed
+    G̃ = X̃ᵀX̃ serves all B coordinate systems, per-query c̃ = X̃ᵀy_b rides
+    the batched sweep kernel, and each query carries its OWN certified
+    stall/floor test against the exact f32 gap certificate (a query
+    freezes as soon as it truly converges or its bf16 Gram provably can't
+    improve it)."""
+    acc = jnp.promote_types(X.dtype, jnp.float32)
+    Xl = X_lo.astype(acc)
+    G = Xl.T @ Xl
+    C = Y.astype(acc) @ Xl                                    # (B, b)
+    sweep_op = _cd_gram_op(backend)
+    scale = 0.5 * jnp.sum(jnp.square(Y), axis=-1) + 1e-30
+
+    def gap_budget(beta):
+        r = Y - beta @ X.T            # exact certificate: f32 stream
+        gap = _gap_from_residual_batched(r, r @ X, beta, lam, Y)
+        budget = ops.bf16_gap_budget(jnp.linalg.norm(r, axis=-1),
+                                     jnp.sum(jnp.abs(beta), axis=-1),
+                                     err_max, cn_max)
+        return gap, budget
+
+    def body(state):
+        beta, k, prev_gap, conv, iters, checks = state
+        beta_new = sweep_op(G, C, beta.astype(acc), lam, sweeps=cadence,
+                            valid=valid).astype(X.dtype)
+        beta_new = jnp.where(conv[:, None], beta, beta_new)
+        iters = iters + jnp.where(conv, 0, cadence)
+        gap, budget = gap_budget(beta_new)
+        conv = jnp.logical_or(
+            conv, ops.bf16_certified_stop(gap, budget, prev_gap,
+                                          tol * scale))
+        return beta_new, k + cadence, gap, conv, iters, checks + 1
+
+    def cond(state):
+        _, k, _, conv, _, _ = state
+        return jnp.logical_and(k < max_epochs, jnp.any(~conv))
+
+    gap0, budget0 = gap_budget(beta0)
+    conv0 = ops.bf16_certified_stop(gap0, budget0,
+                                    jnp.full_like(gap0, jnp.inf),
+                                    tol * scale)
+    iters0 = jnp.zeros(Y.shape[:1], jnp.int32)
+    state = (beta0, jnp.asarray(0), gap0, conv0, iters0, jnp.asarray(1))
+    beta, _, gap, conv, iters, checks = jax.lax.while_loop(cond, body, state)
+    return SolveResult(beta, gap, iters, gap <= tol * scale, checks)
+
+
 @functools.partial(jax.jit, static_argnames=("m", "max_iter", "cadence"))
 def _group_fista_solve(X, y, lam, m: int, beta0, lipschitz, tol,
                        max_iter: int, cadence: int) -> SolveResult:
@@ -595,7 +693,9 @@ def _group_fista_solve(X, y, lam, m: int, beta0, lipschitz, tol,
 # ---------------------------------------------------------------------------
 # Strategies + registry. A strategy is `(engine, Xr, lam, beta0, m) ->
 # (SolveResult, info)` with info = {"gram": bool} telemetry (+ "lo_iters" /
-# "lo_checks" / "hi_iters" from the mixed-precision fista two-phase).
+# "lo_checks" / "hi_iters" from the mixed-precision fista two-phase, and
+# "lo_passes" / "x_passes" pass-accounting overrides from the
+# mixed-precision Gram-CD two-phase).
 # ---------------------------------------------------------------------------
 
 _BF16_SOLVE_WARNED: set[str] = set()
@@ -603,8 +703,9 @@ _BF16_SOLVE_WARNED: set[str] = set()
 
 def _note_solve_f32_fallback(strategy: str) -> None:
     """One-time warning per strategy: solve_dtype='bfloat16' was requested
-    but this strategy has no certified low-precision phase (only fista's
-    gap-certificate argument is implemented), so solves run f32."""
+    but this strategy has no certified low-precision phase (the fista
+    iteration stream and the cd Gram build are the implemented ones), so
+    solves run f32."""
     if strategy in _BF16_SOLVE_WARNED:
         return
     _BF16_SOLVE_WARNED.add(strategy)
@@ -649,10 +750,42 @@ def _fista_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
 def _cd_strategy(eng: "SolverEngine", Xr, lam, beta0, m: int):
     n, b = Xr.shape
     max_epochs = eng.max_iter // 10 + 1
+    lo = eng._take_lo()
     if b <= min(n, ops.GRAM_BUCKET_MAX):
-        res = _cd_gram_solve(eng.backend, Xr, eng.y, lam, beta0, eng.tol,
-                             max_epochs, eng.gap_check_cadence)
-        return res, {"gram": True}
+        if lo is None:
+            res = _cd_gram_solve(eng.backend, Xr, eng.y, lam, beta0,
+                                 eng.tol, max_epochs, eng.gap_check_cadence)
+            return res, {"gram": True}
+        # Phase 1: build G̃ off the bf16 copy (half-width bucket pass) and
+        # sweep under the f32 gap certificate (see _cd_gram_solve_lo).
+        X_lo, err_max, cn_max = lo
+        res_lo = _cd_gram_solve_lo(eng.backend, Xr, X_lo, eng.y, lam,
+                                   beta0, eng.tol, max_epochs,
+                                   eng.gap_check_cadence, err_max, cn_max)
+        lo_it, lo_ck = int(res_lo.iters), int(res_lo.gap_checks)
+        if bool(res_lo.converged):
+            # the certificate streamed f32 X — convergence in the
+            # bf16-built Gram phase is convergence at the original tol
+            return res_lo, {
+                "gram": True, "lo_iters": lo_it, "lo_checks": lo_ck,
+                "lo_passes": 1.0,
+                "x_passes": 1.0 + lo_it * (b / max(n, 1)) + 2.0 * lo_ck}
+        # Phase 2: rebuild the exact G (one f32 pass) and polish.
+        res = _cd_gram_solve(eng.backend, Xr, eng.y, lam, res_lo.beta,
+                             eng.tol, max_epochs, eng.gap_check_cadence)
+        hi_it, hi_ck = int(res.iters), int(res.gap_checks)
+        res = SolveResult(res.beta, res.gap, res.iters + lo_it,
+                          res.converged, res.gap_checks + lo_ck)
+        return res, {
+            "gram": True, "lo_iters": lo_it, "lo_checks": lo_ck,
+            "lo_passes": 1.0,
+            "x_passes": (2.0 + (lo_it + hi_it) * (b / max(n, 1))
+                         + 2.0 * (lo_ck + hi_ck))}
+    if lo is not None:
+        # buckets past the Gram crossover run matvec CD, which has no
+        # certified bf16 stream — this solve streams f32. A bucket-size
+        # crossover is not a config error, so telemetry only, no warning.
+        eng.last_effective_dtype = "float32"
     res = _cd_solve(Xr, eng.y, lam, beta0, eng.tol, max_epochs,
                     eng.gap_check_cadence)
     return res, {"gram": False}
@@ -701,11 +834,44 @@ def _fista_strategy_batched(eng: "SolverEngine", Xr, lam, beta0, valid,
 def _cd_strategy_batched(eng: "SolverEngine", Xr, lam, beta0, valid, m: int):
     n, b = Xr.shape
     max_epochs = eng.max_iter // 10 + 1
+    lo = eng._take_lo()
     if b <= min(n, ops.GRAM_BUCKET_MAX):
-        res = _cd_gram_solve_batched(eng.backend, Xr, eng.y, lam, beta0,
-                                     valid, eng.tol, max_epochs,
-                                     eng.gap_check_cadence)
-        return res, {"gram": True}
+        if lo is None:
+            res = _cd_gram_solve_batched(eng.backend, Xr, eng.y, lam, beta0,
+                                         valid, eng.tol, max_epochs,
+                                         eng.gap_check_cadence)
+            return res, {"gram": True}
+        X_lo, err_max, cn_max = lo
+        res_lo = _cd_gram_solve_lo_batched(eng.backend, Xr, X_lo, eng.y,
+                                           lam, beta0, valid, eng.tol,
+                                           max_epochs,
+                                           eng.gap_check_cadence,
+                                           err_max, cn_max)
+        lo_it = int(jnp.max(res_lo.iters))
+        lo_ck = int(res_lo.gap_checks)
+        if bool(jnp.all(res_lo.converged)):
+            # every query converged against the f32 gap certificate on the
+            # bf16-built Gram — no exact rebuild needed
+            return res_lo, {
+                "gram": True, "lo_iters": lo_it, "lo_checks": lo_ck,
+                "lo_passes": 1.0,
+                "x_passes": 1.0 + lo_it * (b / max(n, 1)) + 2.0 * lo_ck}
+        res = _cd_gram_solve_batched(eng.backend, Xr, eng.y, lam,
+                                     res_lo.beta, valid, eng.tol,
+                                     max_epochs, eng.gap_check_cadence)
+        hi_it = int(jnp.max(res.iters))
+        hi_ck = int(res.gap_checks)
+        res = SolveResult(res.beta, res.gap, res.iters + res_lo.iters,
+                          res.converged, res.gap_checks + lo_ck)
+        return res, {
+            "gram": True, "lo_iters": lo_it, "lo_checks": lo_ck,
+            "lo_passes": 1.0,
+            "x_passes": (2.0 + (lo_it + hi_it) * (b / max(n, 1))
+                         + 2.0 * (lo_ck + hi_ck))}
+    if lo is not None:
+        # matvec CD past the Gram crossover: no certified bf16 stream —
+        # f32 solve, telemetry only (bucket size is data, not config).
+        eng.last_effective_dtype = "float32"
     res = _cd_solve_batched(Xr, eng.y, lam, beta0, valid, eng.tol,
                             max_epochs, eng.gap_check_cadence)
     return res, {"gram": False}
@@ -769,7 +935,8 @@ class SolverEngine:
                  gap_check_cadence: int = 10,
                  solve_dtype: str = "float32",
                  power_iters: int = 50, warm_power_iters: int = 16,
-                 seed: int = 0, eig_cache: dict | None = None):
+                 seed: int = 0, eig_cache: dict | None = None,
+                 eig_stats: dict | None = None):
         if solver not in SOLVERS:
             raise ValueError(f"unknown solver {solver!r}; "
                              f"available: {available_solvers()}")
@@ -792,6 +959,12 @@ class SolverEngine:
         # cached eigenvector stays an excellent start.
         self._eig_cache: dict[int, jax.Array] = (
             eig_cache if eig_cache is not None else {})
+        # warm/cold power-iteration accounting; share a dict (like
+        # eig_cache) to accumulate across the engines a session builds —
+        # the update-path tests use it to prove eigenvectors carry across
+        # dictionary versions.
+        self._eig_stats: dict[str, int] = (
+            eig_stats if eig_stats is not None else {"warm": 0, "cold": 0})
         self.n_solves = 0
         self.gram_solves = 0
         self.total_gap_checks = 0
@@ -820,9 +993,11 @@ class SolverEngine:
         bucket = Xr.shape[1]
         v_prev = self._eig_cache.get(bucket)
         if v_prev is None:
+            self._eig_stats["cold"] = self._eig_stats.get("cold", 0) + 1
             eig, v = top_eigenpair(Xr, iters=self.power_iters,
                                    seed=self.seed)
         else:
+            self._eig_stats["warm"] = self._eig_stats.get("warm", 0) + 1
             eig, v = top_eigenpair(Xr, iters=self.warm_power_iters,
                                    v0=v_prev)
         self._eig_cache[bucket] = v
@@ -831,9 +1006,9 @@ class SolverEngine:
     # -- mixed-precision lo-phase staging -------------------------------
     # The strategy signature is fixed at (eng, Xr, lam, beta0, m), so the
     # bf16 buffers for a solve are STAGED on the engine by solve()/
-    # solve_batched() and consumed exactly once by the fista strategies
+    # solve_batched() and consumed exactly once by the fista/cd strategies
     # via _take_lo(). Strategies without a certified lo phase never see
-    # them (_stage_lo only arms fista and warns once otherwise).
+    # them (_stage_lo only arms fista + cd and warns once otherwise).
 
     def _stage_lo(self, Xr, lo) -> None:
         """Arm the bf16 phase for the next strategy dispatch. ``lo`` is the
@@ -844,7 +1019,7 @@ class SolverEngine:
         self.last_effective_dtype = "float32"
         if self.solve_dtype != "bfloat16":
             return
-        if self.solver != "fista":
+        if self.solver not in ("fista", "cd"):
             _note_solve_f32_fallback(self.solver)
             return
         if lo is None:
@@ -889,18 +1064,23 @@ class SolverEngine:
         # adds two passes (residual + correlations).
         it, ck = int(res.iters), self.last_gap_checks
         n, b = Xr.shape
-        if self.last_used_gram:
+        if "x_passes" in info:
+            # mixed-precision Gram CD computes its own total (two G
+            # builds on handover, VMEM sweeps, f32 certificate passes)
+            self.last_x_passes = float(info["x_passes"])
+        elif self.last_used_gram:
             self.last_x_passes = 1.0 + it * (b / max(n, 1)) + 2.0 * ck
         elif self.solver == "cd":
             self.last_x_passes = float(it) + 2.0 * ck
         else:
             self.last_x_passes = 2.0 * it + 2.0 * ck
-        # Byte accounting: the bf16-phase ITERATION passes (2 per iter)
+        # Byte accounting: the bf16-phase ITERATION passes (2 per FISTA
+        # iter; ONE G-build pass for Gram CD, reported via "lo_passes")
         # moved 2-byte elements; every gap check — bf16 phase included —
         # and every f32-phase pass moved 4-byte elements. it/ck above
         # already include the lo phase (the strategies sum both phases).
         lo_it = int(info.get("lo_iters", 0))
-        lo_passes = 2.0 * lo_it
+        lo_passes = float(info.get("lo_passes", 2.0 * lo_it))
         self.last_lo_iters = lo_it
         self.last_solve_bytes = (
             (self.last_x_passes - lo_passes) * n * b * 4.0
@@ -954,13 +1134,18 @@ class SolverEngine:
             # iteration passes at 2 bytes/elt plus 2·lo_checks f32
             # certificate passes, the f32 polish max(hi_iters) at 4.
             lo_it = int(info.get("lo_iters", 0))
-            lo_ck = int(info.get("lo_checks", 0))
-            hi_it = int(info.get("hi_iters", int(jnp.max(res.iters))))
-            hi_ck = self.last_gap_checks - lo_ck
-            lo_passes = 2.0 * lo_it
-            self.last_x_passes = (
-                _passes(hi_it, hi_ck, bool(info.get("gram", False)))
-                + lo_passes + 2.0 * lo_ck)
+            lo_passes = float(info.get("lo_passes", 2.0 * lo_it))
+            if "x_passes" in info:
+                # mixed-precision Gram CD reports its own total (see
+                # solve(): builds + VMEM sweeps + certificate passes)
+                self.last_x_passes = float(info["x_passes"])
+            else:
+                lo_ck = int(info.get("lo_checks", 0))
+                hi_it = int(info.get("hi_iters", int(jnp.max(res.iters))))
+                hi_ck = self.last_gap_checks - lo_ck
+                self.last_x_passes = (
+                    _passes(hi_it, hi_ck, bool(info.get("gram", False)))
+                    + lo_passes + 2.0 * lo_ck)
             self.last_lo_iters = lo_it
             self.last_solve_bytes = (
                 (self.last_x_passes - lo_passes) * n * b * 4.0

@@ -159,8 +159,10 @@ def bf16_score_margin(col_err, centre_norm):
 
 # Solver-side mixed precision (docs/solvers.md#mixed-precision-solves).
 # The FISTA iteration matvecs (forward fit + fused gradient step — the
-# 2·cadence HBM passes between gap checks) may stream a bf16 copy of the
-# reduced bucket; the duality-gap CERTIFICATE itself always streams f32 X,
+# 2·cadence HBM passes between gap checks) and the Gram-CD build
+# (G̃ = X̃ᵀX̃, c̃ = X̃ᵀy — the ONE HBM pass that solver path takes over the
+# bucket) may stream a bf16 copy of the reduced bucket; the duality-gap
+# CERTIFICATE itself always streams f32 X,
 # so convergence declared in the low-precision phase is true convergence —
 # exactness never rests on the bf16 data. `bf16_gap_budget` bounds the gap
 # level below which a bf16 gradient can no longer make certified progress;
@@ -198,6 +200,24 @@ def bf16_gap_budget(resid_norm, beta_l1, err_max, col_norm_max):
     e_r = err_max * beta_l1
     e_d = err_max * resid_norm + col_norm_max * e_r
     return e_d * beta_l1 + e_r * resid_norm
+
+
+def bf16_certified_stop(gap, budget, prev_gap, tol_scale):
+    """The certified handover rule every bf16 solve stream shares (FISTA's
+    lo iteration phase and the Gram-CD lo build — both perturb the gradient
+    to X̃ᵀ(X̃β − y), which is exactly what :func:`bf16_gap_budget` bounds).
+
+    Stop the low-precision phase when the EXACTLY-measured gap is already
+    under ``tol_scale`` (true convergence — the certificate streamed f32
+    X), or when it has both stalled (failed to decay by
+    ``BF16_SOLVE_PROGRESS`` over the last check) and sits under
+    ``BF16_SOLVE_SLACK ×`` the certified budget (noise-floored — a bf16
+    gradient can no longer provably improve it). Batch-polymorphic:
+    scalars or (B,) vectors throughout."""
+    stalled = gap > BF16_SOLVE_PROGRESS * prev_gap
+    floored = gap <= BF16_SOLVE_SLACK * budget
+    return jnp.logical_or(gap <= tol_scale,
+                          jnp.logical_and(stalled, floored))
 
 
 def edpp_screen(X, centre, rho, eps: float = 1e-6, *, col_norms=None,
@@ -241,6 +261,7 @@ __all__ = [
     "GRAM_BUCKET_MAX",
     "ScreenBackend",
     "F32_ACC_ROUND",
+    "bf16_certified_stop",
     "bf16_column_err",
     "bf16_gap_budget",
     "bf16_score_margin",

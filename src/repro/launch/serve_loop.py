@@ -238,6 +238,11 @@ class DispatchRecord:
     n_live: int
     padded_b: int
     t: float
+    version: int = 0              # executor's dictionary version at dispatch
+    #                               time: a batch in flight across a
+    #                               session.update retires under the OLD
+    #                               version — the trace attributes every
+    #                               result to the dictionary that served it
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +307,13 @@ class SessionExecutor:
         self.lo_frac = float(lo_frac)
         self.hi_frac = float(hi_frac)
 
+    @property
+    def version(self) -> int:
+        """The session's dictionary version — stamped into each
+        :class:`DispatchRecord` so trace lines survive ``session.update``
+        with the right attribution."""
+        return int(getattr(self.session, "version", 0))
+
     def dispatch(self, Y, n_live: int, batch_id: int, now: float):
         import numpy as np
         import jax.numpy as jnp
@@ -334,6 +346,10 @@ class DelayedExecutor:
     def __init__(self, inner, service_time):
         self.inner = inner
         self.service_time = service_time    # (n_live, batch_id) -> seconds
+
+    @property
+    def version(self) -> int:
+        return int(getattr(self.inner, "version", 0))
 
     def dispatch(self, Y, n_live: int, batch_id: int, now: float):
         h = self.inner.dispatch(Y, n_live, batch_id, now)
@@ -437,7 +453,9 @@ class ServeLoop:
             t.batch_id = batch_id
         rec = DispatchRecord(batch_id=batch_id, reason=reason,
                              qids=tuple(t.qid for t in tickets),
-                             n_live=n_live, padded_b=padded, t=now)
+                             n_live=n_live, padded_b=padded, t=now,
+                             version=int(getattr(self.executor, "version",
+                                                 0)))
         self.trace.append(rec)
         if self.on_dispatch:
             self.on_dispatch(rec)

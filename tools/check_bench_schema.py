@@ -20,6 +20,7 @@ Usage:
     python tools/check_bench_schema.py BENCH_dist.json --section bench_dist
     python tools/check_bench_schema.py BENCH_solver.json --section bench_dpp_family
     python tools/check_bench_schema.py BENCH_dist.json --section bench_solve_dtype
+    python tools/check_bench_schema.py BENCH_update.json --section bench_update
 """
 
 from __future__ import annotations
@@ -117,12 +118,30 @@ SOLVE_DTYPE_ROW_KEYS = {
     "converged",
 }
 
+UPDATE_ROW_KEYS = {
+    "dataset",
+    "backend",
+    "round",
+    "churn_frac",
+    "n_add",
+    "n_drop",
+    "version",
+    "update_time_s",
+    "refit_time_s",
+    "speedup_vs_refit",
+    "argmax_rescans",
+    "masks_identical",
+    "max_beta_err",
+    "beta_err_tol",
+}
+
 SECTION_ROW_KEYS = {
     "bench_batched": BATCH_ROW_KEYS,
     "bench_serve": SERVE_ROW_KEYS,
     "bench_dist": DIST_ROW_KEYS,
     "bench_dpp_family": DPP_FAMILY_ROW_KEYS,
     "bench_solve_dtype": SOLVE_DTYPE_ROW_KEYS,
+    "bench_update": UPDATE_ROW_KEYS,
 }
 
 
